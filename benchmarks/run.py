@@ -1,0 +1,36 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Roofline terms come from the
+dry-run (launch/dryrun.py + launch/roofline.py) — see EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    import benchmarks.fig2_ratios as fig2
+    import benchmarks.fig3_wsi_vs_svd as fig3
+    import benchmarks.fig4_activation_spectra as fig4
+    import benchmarks.fig5_tab1_resources as fig5
+    import benchmarks.fig7_tinyllama as fig7
+    import benchmarks.tab2_latency as tab2
+
+    print("name,us_per_call,derived")
+    for mod in (fig2, fig4, fig3, fig7, tab2):
+        try:
+            for row in mod.run():
+                print(row)
+        except Exception:
+            print(f"{mod.__name__},ERROR,", file=sys.stderr)
+            traceback.print_exc()
+            raise
+    for row in fig5.run("mlp"):
+        print(row)
+    for row in fig5.run("all"):
+        print(row.replace("fig5/", "tab1/"))
+
+
+if __name__ == "__main__":
+    main()

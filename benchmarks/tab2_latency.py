@@ -1,0 +1,53 @@
+"""Paper Tab. 2 / Fig. 8: wall-clock per-iteration train + inference time,
+WASI vs ASI vs vanilla across eps (the CPU host stands in for the paper's
+Raspberry Pi — same relative comparison, different absolute scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.config import TrainConfig
+from repro.data.synthetic import SyntheticLM
+from repro.models.lm import init_lm, init_lm_states, lm_forward, lm_loss
+from repro.train.step import make_train_state, make_train_step
+from benchmarks.common import time_call
+
+B, S = 8, 64
+
+
+def run() -> list[str]:
+    rows = []
+    base = configs.get_smoke("qwen2-0.5b")
+    data = SyntheticLM(vocab_size=base.vocab_size, seq_len=S, global_batch=B,
+                       seed=1)
+    batch = data.batch(0)
+    for method, frac in [("none", 1.0), ("asi", 1.0), ("wasi", 0.25),
+                         ("wasi", 0.5)]:
+        cfg = base.replace(wasi=dataclasses.replace(
+            base.wasi, method=method, rank_frac=frac))
+        key = jax.random.PRNGKey(0)
+        params = init_lm(key, cfg)
+        states = init_lm_states(key, cfg, B, S) if cfg.wasi.compress_acts else None
+        tcfg = TrainConfig(optimizer="sgd", lr=0.05, checkpoint_every=0)
+        state = make_train_state(key, params, cfg, tcfg, asi_states=states)
+        jstep = jax.jit(make_train_step(lm_loss, cfg, tcfg))
+        t_train = time_call(jstep, state, batch)
+        fwd = jax.jit(lambda p, t: lm_forward(p, t, cfg)[0])
+        t_infer = time_call(fwd, params, batch["tokens"])
+        name = f"{method}" + (f"_frac{frac}" if method == "wasi" else "")
+        rows.append(f"tab2/train_{name},{t_train:.1f},per_iter_us")
+        rows.append(f"tab2/infer_{name},{t_infer:.1f},per_iter_us")
+    return rows
+
+
+def main():
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""The paper's main setting: fine-tune a ViT, vanilla vs WASI, and report
+accuracy + memory/FLOPs ratios (paper Fig. 5 shape).
+
+  PYTHONPATH=src:. python examples/finetune_vit.py [--eps 0.8] [--steps 60]
+"""
+import argparse
+import dataclasses
+
+import jax
+
+import repro.configs as configs
+from repro.config import TrainConfig
+from repro.data.synthetic import SyntheticVision
+from repro.models.vit import init_vit, init_vit_states, vit_loss
+from repro.train.step import make_train_state, make_train_step
+
+
+def train(cfg, steps, label):
+    key = jax.random.PRNGKey(233)
+    n_classes, n_patches, patch_dim = 4, 16, 24
+    params = init_vit(key, cfg, n_classes, patch_dim, n_patches)
+    states = init_vit_states(key, cfg, 16, n_patches) \
+        if cfg.wasi.compress_acts else None
+    tcfg = TrainConfig(optimizer="sgd", lr=0.05, momentum=0.9, steps=steps,
+                       checkpoint_every=0)  # paper §B.1 recipe
+    state = make_train_state(key, params, cfg, tcfg, asi_states=states)
+    step = jax.jit(make_train_step(vit_loss, cfg, tcfg))
+    data = SyntheticVision(n_classes=n_classes, n_patches=n_patches,
+                           patch_dim=patch_dim, global_batch=16, seed=0,
+                           noise=0.5)
+    accs = []
+    for i in range(steps):
+        state, m = step(state, data.batch(i))
+        accs.append(float(m["acc"]))
+    acc = sum(accs[-8:]) / 8
+    print(f"[{label}] final acc {acc:.3f}")
+    return acc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--eps", type=float, default=0.8)
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+
+    base = configs.get_smoke("vit-base")
+    vanilla = base.replace(wasi=dataclasses.replace(base.wasi, method="none"))
+    wasi = base.replace(wasi=dataclasses.replace(
+        base.wasi, method="wasi", update_mode="project", epsilon=args.eps))
+
+    a_v = train(vanilla, args.steps, "vanilla")
+    a_w = train(wasi, args.steps, f"wasi eps={args.eps}")
+    from benchmarks.fig2_ratios import flops_vanilla, flops_wasi, mem_ratios
+    b, n, i, o = 16, 17, base.d_model, base.d_ff
+    k = max(4, int(args.eps * 0.4 * min(i, o)))
+    r = (b, n // 2, i // 2)
+    fv, bv = flops_vanilla(b, n, i, o)
+    fw, ow, bw = flops_wasi(b, n, i, o, k, r)
+    ct, ci = mem_ratios(b, n, i, o, k, r)
+    print(f"[ratios] S_train={(fv+bv)/(fw+ow+bw):.2f} C_train={ct:.1f} "
+          f"C_inf={ci:.2f} | accuracy gap {a_v - a_w:+.3f}")
+
+
+if __name__ == "__main__":
+    main()

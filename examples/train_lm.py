@@ -1,0 +1,60 @@
+"""End-to-end driver: train a ~100M-param decoder LM with WASI for a few
+hundred steps on synthetic data, with checkpointing + restart.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+(defaults to a reduced model so it finishes on CPU; --d-model 768 --layers 12
+gives the full ~100M configuration on beefier hosts)
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LayerGroup, ModelConfig, TrainConfig, WasiConfig, AsiConfig
+from repro.checkpoint import CheckpointManager
+from repro.data.synthetic import SyntheticLM
+from repro.models.lm import count_params, init_lm, init_lm_states, lm_loss
+from repro.train.loop import train_loop
+from repro.train.step import make_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/repro_example_lm")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="example-lm", n_layers=args.layers, d_model=args.d_model,
+        n_heads=max(4, args.d_model // 64), n_kv_heads=max(2, args.d_model // 128),
+        d_ff=args.d_model * 4, vocab_size=args.vocab, head_dim=64,
+        groups=(LayerGroup(("dense",), args.layers),),
+        wasi=WasiConfig(method="wasi", scope="all", rank_frac=0.25,
+                        rank_align=8, min_rank=8,
+                        asi=AsiConfig(token_frac=0.25, feature_frac=0.25)),
+        dtype="float32", remat="none")
+    tcfg = TrainConfig(optimizer="adamw", lr=3e-3, steps=args.steps,
+                       clip_norm=1.0, checkpoint_every=100,
+                       checkpoint_dir=args.ckpt)
+    key = jax.random.PRNGKey(tcfg.seed)
+    params = init_lm(key, cfg)
+    print(f"[train_lm] params: {count_params(params):,}")
+    states = init_lm_states(key, cfg, args.batch, args.seq)
+    state = make_train_state(key, params, cfg, tcfg, asi_states=states)
+    step = make_train_step(lm_loss, cfg, tcfg)
+    data = SyntheticLM(vocab_size=args.vocab, seq_len=args.seq,
+                       global_batch=args.batch, seed=tcfg.seed)
+    ckpt = CheckpointManager(args.ckpt, keep=2)
+    state, hist = train_loop(state, step, lambda s: data.batch(s), tcfg,
+                             ckpt=ckpt, log_every=20)
+    print(f"[train_lm] CE {hist[0]['ce']:.3f} -> {hist[-1]['ce']:.3f} "
+          f"(log-vocab = {jnp.log(args.vocab):.2f})")
+
+
+if __name__ == "__main__":
+    main()

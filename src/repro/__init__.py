@@ -1,0 +1,8 @@
+"""repro — WASI (Weight-Activation Subspace Iteration) at scale, in JAX.
+
+A production-grade training/serving framework implementing
+"Efficient Resource-Constrained Training of Transformers via Subspace
+Optimization" (Nguyen et al., 2025) as a first-class feature.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,44 @@
+"""Core WASI algorithms (paper's contribution).
+
+- svd: explained-variance rank selection + truncated SVD   (Eq. 5-7)
+- orthogonal: CholeskyQR orthogonalization (TPU-adapted Gram-Schmidt)
+- wsi: Weight Subspace Iteration                            (Alg. 1)
+- asi: Activation Subspace Iteration / Tucker + f_LR        (Alg. 2, App. A.1)
+- lowrank_linear: custom-VJP WASI/ASI matmuls               (Eq. 8-11)
+- rank_policy: eps ranks, App. A.2 perplexity DP, static ranks
+- powersgd: DP gradient compression with error feedback (beyond-paper)
+"""
+
+from repro.core.svd import (
+    SVDFactors,
+    explained_variance,
+    pick_rank,
+    rank_for_threshold,
+    truncated_svd,
+)
+from repro.core.orthogonal import cholesky_qr, cholesky_qr2, gram_schmidt
+from repro.core.wsi import WSIState, wsi_init, wsi_step, wsi_refresh_factored
+from repro.core.asi import (
+    ASIState,
+    TuckerFactors,
+    asi_init,
+    asi_step,
+    tucker_reconstruct,
+    flr_weight_grad_3d,
+    flr_weight_grad_4d,
+)
+from repro.core.lowrank_linear import (
+    WasiLinearParams,
+    asi_matmul,
+    init_wasi_linear,
+    wasi_linear_apply,
+    wasi_matmul,
+    wasi_matmul_project,
+)
+from repro.core.rank_policy import (
+    asi_mode_ranks,
+    epsilon_ranks,
+    perplexity_dp,
+    static_rank,
+)
+from repro.core.powersgd import PowerSGDState, compress_decompress, powersgd_init

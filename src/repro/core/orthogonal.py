@@ -1,0 +1,82 @@
+"""Orthogonalization for subspace iteration.
+
+Paper Alg. 1 uses classical Gram-Schmidt — a sequential per-column loop that
+is a poor fit for the TPU MXU. We adapt it to CholeskyQR:
+
+    G = Y^T Y        (tall-skinny Gram: one MXU matmul)
+    G = C C^T        (K x K Cholesky, tiny)
+    Q = Y C^{-T}     (K x K triangular solve applied as matmul)
+
+CholeskyQR spans exactly the same subspace as Gram-Schmidt on the same input
+(both produce the unique QR factor up to column signs for full-rank Y), so
+fidelity to the paper is preserved; see tests/test_orthogonal.py.
+
+A jnp Gram-Schmidt reference is kept as the fidelity oracle, plus a
+CholeskyQR2 variant for ill-conditioned inputs (two passes restore
+orthogonality to machine precision).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gram_schmidt(y: jax.Array) -> jax.Array:
+    """Classical Gram-Schmidt (paper-faithful oracle). y: (M, K) -> Q (M, K)."""
+    y = y.astype(jnp.float32)
+    m, k = y.shape
+
+    def body(i, q):
+        v = y[:, i]
+        # subtract projections onto previously produced columns
+        coeff = q.T @ v  # (K,)
+        mask = (jnp.arange(k) < i).astype(v.dtype)
+        v = v - q @ (coeff * mask)
+        v = v / jnp.maximum(jnp.linalg.norm(v), 1e-12)
+        return q.at[:, i].set(v)
+
+    q0 = jnp.zeros_like(y)
+    return jax.lax.fori_loop(0, k, body, q0)
+
+
+def cholesky_qr(y: jax.Array, shift: float = 1e-6) -> jax.Array:
+    """Shifted CholeskyQR. y: (..., M, K) -> Q with orthonormal columns.
+
+    A relative shift keeps the Cholesky PSD under round-off / rank-deficient
+    inputs (the shifted direction is immaterial: only the spanned subspace
+    matters for subspace iteration). If the first factorization still fails
+    (NaN), a second attempt with a 1e4-times larger shift is selected via
+    ``where`` — branch-free, so it stays jit/scan-safe; the extra K×K
+    Cholesky is noise next to the Gram matmul.
+
+    NOTE for callers implementing power iteration: never orthogonalize
+    ``A (A^T U)`` in one shot — the Gram condition is cond(A)^4. Stage it:
+    ``V = cholesky_qr(A^T U); Q = cholesky_qr(A V)`` (cond^2 per stage).
+    """
+    yf = y.astype(jnp.float32)
+    g = jnp.einsum("...mk,...mn->...kn", yf, yf)
+    k = g.shape[-1]
+    scale = jnp.maximum(jnp.trace(g, axis1=-2, axis2=-1) / k, 1e-30)
+    eye = jnp.eye(k, dtype=g.dtype)
+
+    c1 = jnp.linalg.cholesky(g + (shift * scale)[..., None, None] * eye)
+    c2 = jnp.linalg.cholesky(g + (1e4 * shift * scale)[..., None, None] * eye)
+    bad = ~jnp.isfinite(c1).all(axis=(-2, -1), keepdims=True)
+    c = jnp.where(bad, c2, c1)
+    # Q = Y C^{-T}  <=>  solve  C Q^T = Y^T  (lower-triangular)
+    qt = jax.scipy.linalg.solve_triangular(c, jnp.swapaxes(yf, -1, -2), lower=True)
+    return jnp.swapaxes(qt, -1, -2).astype(y.dtype)
+
+
+def cholesky_qr2(y: jax.Array) -> jax.Array:
+    """Two-pass CholeskyQR — orthogonality to ~machine eps even when Y is
+    ill-conditioned. Used when WSI runs many steps between SVD refreshes."""
+    return cholesky_qr(cholesky_qr(y))
+
+
+def orthonormality_error(q: jax.Array) -> jax.Array:
+    """||Q^T Q - I||_F — invariant checked by property tests."""
+    qf = q.astype(jnp.float32)
+    g = jnp.einsum("...mk,...mn->...kn", qf, qf)
+    eye = jnp.eye(g.shape[-1], dtype=g.dtype)
+    return jnp.linalg.norm(g - eye, axis=(-2, -1))

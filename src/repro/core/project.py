@@ -1,0 +1,138 @@
+"""Paper-faithful "project" update mode plumbing (Eq. 9-11 + Alg. 1).
+
+Parameters stay DENSE (full W, like the paper's own implementation); a
+parallel WSIState tree carries each wasi-scoped layer's (L, R). Per step:
+
+  forward:   y = x R^T L^T    (factors from the PREVIOUS iteration)
+  backward:  dW~ = f_LR(x~, dy) lands on W        (wasi_matmul_project)
+  update:    W <- W - lr dW~                      (optimizer)
+  WSI:       (L, R) <- subspace_iteration(W_new)  (Alg. 1 lines 6-7)
+
+Role scoping is path-based (same convention as distributed/sharding.py).
+Stacked layers (leading scan/expert dims) are handled by the batched
+wsi_init/wsi_step.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core.rank_policy import static_rank
+from repro.core.svd import pick_rank
+from repro.core.wsi import WSIState, wsi_init, wsi_step
+from repro.nn.linear import wasi_applies
+
+_ROLE_PATTERNS = (
+    (r".*(embed|lm_head|head|router|patch|pos|cls)(/|$)", "head"),
+    (r".*(experts|shared)/", "moe"),
+    (r".*(wq|wk|wv|wo|q_proj|k_proj|v_proj|o_proj)(/|$)", "attn"),
+    (r".*(in_proj|x_proj|dt_proj|out_proj)(/|$)", "ssm"),
+    (r".*(up|gate|down)(/|$)", "mlp"),
+)
+
+
+def role_of_path(path: str) -> str:
+    for pat, role in _ROLE_PATTERNS:
+        if re.match(pat, path):
+            return role
+    return "other"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))))
+    return "/".join(parts)
+
+
+def _wasi_weight_paths(params, cfg: ModelConfig) -> list[str]:
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        ps = _path_str(path)
+        if not ps.endswith("/w"):
+            continue
+        role = role_of_path(ps)
+        if role in ("head", "other"):
+            continue
+        if getattr(leaf, "ndim", 0) < 2:
+            continue
+        if wasi_applies(cfg.wasi, role):
+            out.append(ps)
+    return out
+
+
+def _batched(fn, w, *rest):
+    """Apply fn over leading stack dims of w (..., O, I)."""
+    if w.ndim == 2:
+        return fn(w, *rest)
+    flat = w.reshape((-1,) + w.shape[-2:])
+    rest_flat = [r.reshape((-1,) + r.shape[-2:]) if hasattr(r, "reshape") else r
+                 for r in rest]
+    out = jax.vmap(fn)(flat, *rest_flat)
+    return jax.tree.map(
+        lambda x: x.reshape(w.shape[:-2] + x.shape[-2:]), out)
+
+
+def init_project_states(params, cfg: ModelConfig,
+                        use_epsilon: bool = False) -> dict[str, WSIState]:
+    """WSIState per wasi-scoped dense weight, keyed by path. Rank from
+    rank_frac (static) or, if ``use_epsilon``, from explained variance on
+    the actual weights (paper Alg. 1 t=0; max over stacked layers)."""
+    states: dict[str, WSIState] = {}
+    flat = dict((_path_str(p), l) for p, l in
+                jax.tree_util.tree_flatten_with_path(params)[0])
+    for ps in _wasi_weight_paths(params, cfg):
+        w = flat[ps]
+        o, i = w.shape[-2], w.shape[-1]
+        if use_epsilon:
+            if w.ndim == 2:
+                k = pick_rank(w, cfg.wasi.epsilon, align=cfg.wasi.rank_align)
+            else:
+                ks = [pick_rank(w.reshape((-1, o, i))[j], cfg.wasi.epsilon,
+                                align=cfg.wasi.rank_align)
+                      for j in range(int(jnp.prod(jnp.array(w.shape[:-2]))))]
+                k = max(ks)
+        else:
+            k = static_rank(i, o, cfg.wasi.rank_frac, align=cfg.wasi.rank_align,
+                            min_rank=cfg.wasi.min_rank)
+        states[ps] = _batched(lambda m: wsi_init(m, k), w)
+    return states
+
+
+def project_forward_params(params, states: dict[str, WSIState]):
+    """Insert (L, R) next to each dense W so apply_linear takes the
+    factored-forward/dense-gradient path (wasi_matmul_project)."""
+    def visit(path, leaf):
+        return leaf
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    # operate on the nested dict level: easier via unflatten-then-patch
+    params = jax.tree_util.tree_unflatten(treedef, [l for _, l in flat])
+
+    def patch(node, prefix=""):
+        if isinstance(node, dict):
+            if "w" in node and prefix + "/w" in states:
+                st = states[prefix + "/w"]
+                node = dict(node)
+                node["L"] = jax.lax.stop_gradient(st.L)
+                node["R"] = jax.lax.stop_gradient(st.R)
+                return node
+            return {k: patch(v, f"{prefix}/{k}" if prefix else k)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [patch(v, f"{prefix}/{i}" if prefix else str(i))
+                 for i, v in enumerate(node)]
+            return type(node)(t) if not isinstance(node, tuple) else tuple(t)
+        return node
+
+    return patch(params)
+
+
+def update_project_states(params, states: dict[str, WSIState]) -> dict:
+    """One WSI step against the freshly-updated dense weights (Alg. 1)."""
+    flat = dict((_path_str(p), l) for p, l in
+                jax.tree_util.tree_flatten_with_path(params)[0])
+    return {ps: _batched(wsi_step, flat[ps], st) for ps, st in states.items()}

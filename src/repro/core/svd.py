@@ -1,0 +1,81 @@
+"""Truncated SVD and explained-variance rank selection (paper §3.3, Eq. 5-7).
+
+The paper picks, per layer, the smallest rank K such that the cumulative
+explained variance of the leading singular values reaches a threshold eps:
+
+    sigma_j^2 = s_j^2 / sum_k s_k^2,   K = min{K : sum_{j<=K} sigma_j^2 >= eps}
+
+This module provides both the dynamic (data-dependent K; used at calibration
+time and in paper-scale experiments) and static (fixed K; required for XLA
+static shapes at scale) entry points.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SVDFactors(NamedTuple):
+    """W ~= L @ R with L (O,K), R (K,I)."""
+
+    L: jax.Array
+    R: jax.Array
+
+
+def explained_variance(s: jax.Array) -> jax.Array:
+    """Per-singular-value explained variance sigma_j^2 (paper §3.3)."""
+    e = s.astype(jnp.float32) ** 2
+    return e / jnp.maximum(jnp.sum(e), 1e-30)
+
+
+def rank_for_threshold(s: jax.Array, eps: float) -> jax.Array:
+    """Smallest K with cumulative explained variance >= eps. Traceable.
+
+    Returns a scalar int32 in [1, len(s)].
+    """
+    cum = jnp.cumsum(explained_variance(s))
+    # first index where cum >= eps (eps clipped so eps=1.0 keeps full rank)
+    k = jnp.argmax(cum >= jnp.minimum(eps, cum[-1] - 1e-7))
+    return jnp.maximum(k + 1, 1).astype(jnp.int32)
+
+
+def pick_rank(w, eps: float, align: int = 1, max_rank: int | None = None) -> int:
+    """Concrete (python int) rank for weight matrix `w` under threshold `eps`.
+
+    Used offline / at-init where shapes may be data-dependent. `align` rounds
+    the rank UP to a hardware-friendly multiple (128 for the TPU MXU) without
+    ever lowering the information kept.
+    """
+    s = jnp.linalg.svd(jnp.asarray(w, jnp.float32), compute_uv=False)
+    k = int(rank_for_threshold(s, eps))
+    if align > 1:
+        k = -(-k // align) * align
+    full = min(w.shape[-2], w.shape[-1])
+    k = min(k, full if max_rank is None else min(full, max_rank))
+    return max(k, 1)
+
+
+def truncated_svd(w: jax.Array, k: int) -> SVDFactors:
+    """Rank-k factorization W ~= L R via SVD (paper Eq. 5-7).
+
+    L = U_k S_k  (O,K);  R = V_k^T  (K,I).  R has orthonormal rows and L
+    carries the singular values, matching Eq. 7.
+    """
+    u, s, vt = jnp.linalg.svd(w.astype(jnp.float32), full_matrices=False)
+    L = (u[:, :k] * s[:k][None, :]).astype(w.dtype)
+    R = vt[:k, :].astype(w.dtype)
+    return SVDFactors(L=L, R=R)
+
+
+def svd_approx(w: jax.Array, k: int) -> jax.Array:
+    """Best rank-k approximation of w (oracle for tests)."""
+    f = truncated_svd(w, k)
+    return (f.L @ f.R).astype(w.dtype)
+
+
+def reconstruction_rel_error(w: jax.Array, f: SVDFactors) -> jax.Array:
+    """||W - LR||_F / ||W||_F."""
+    diff = w.astype(jnp.float32) - (f.L.astype(jnp.float32) @ f.R.astype(jnp.float32))
+    return jnp.linalg.norm(diff) / jnp.maximum(jnp.linalg.norm(w.astype(jnp.float32)), 1e-30)

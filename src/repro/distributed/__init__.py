@@ -1,0 +1,1 @@
+"""Distribution layer: meshes, sharding policies, collectives, resilience."""

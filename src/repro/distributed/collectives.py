@@ -1,0 +1,76 @@
+"""Hand-scheduled collectives for the long-context serve path.
+
+``flash_decode`` — sequence-sharded single-token attention: the KV cache for
+a 500k-token context is sharded along the SEQUENCE dim across the ``data``
+mesh axis. Each shard computes a LOCAL partial softmax (max, sum, weighted
+value) over its KV slice; partials are combined with three tiny psums
+(per-head scalars + one Dh vector) instead of all-gathering the cache —
+collective bytes drop from O(S * d_kv) to O(H * Dh).
+
+This is the shard_map fast path; the pjit path (XLA-scheduled) is the
+baseline it is hillclimbed against in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+def _local_partials(q, k, v, valid):
+    """q (B,H,Dh); k/v (B,Sl,KVH,Dh); valid (Sl,) bool.
+    Returns (m (B,H), l (B,H), acc (B,H,Dh)) local partial softmax."""
+    b, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, dh) * (dh ** -0.5)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k).astype(jnp.float32)
+    s = s + jnp.where(valid, 0.0, NEG_INF)[None, None, None, :]
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bhgs,bshd->bhgd", p.astype(q.dtype), v).astype(jnp.float32)
+    return m.reshape(b, h), l.reshape(b, h), acc.reshape(b, h, dh)
+
+
+def flash_decode(q, k_shard, v_shard, valid_shard, axis_name: str):
+    """Inside shard_map: combine per-shard partial softmaxes via psum.
+
+    q (B,H,Dh) replicated across the sequence shards; k/v (B,S_local,KVH,Dh);
+    valid_shard (S_local,). Returns (B,H,Dh) fully-reduced attention output.
+    """
+    m, l, acc = _local_partials(q, k_shard, v_shard, valid_shard)
+    m_glob = jax.lax.pmax(m, axis_name)                       # (B,H)
+    scale = jnp.exp(m - m_glob)
+    l_glob = jax.lax.psum(l * scale, axis_name)
+    acc_glob = jax.lax.psum(acc * scale[..., None], axis_name)
+    return (acc_glob / jnp.maximum(l_glob[..., None], 1e-30)).astype(q.dtype)
+
+
+def make_flash_decode(mesh: Mesh, seq_axis: str = "data"):
+    """shard_map-wrapped flash decode over a sequence-sharded KV cache.
+
+    Returns fn(q (B,H,Dh), k (B,S,KVH,Dh), v, pos) -> (B,H,Dh), where k/v are
+    sharded P(None, seq_axis, None, None) and q is replicated.
+    """
+    def fn(q, k, v, pos):
+        s = k.shape[1]
+
+        def local(qi, ki, vi, posi):
+            idx = jax.lax.axis_index(seq_axis)
+            sl = ki.shape[1]
+            kpos = idx * sl + jnp.arange(sl)
+            return flash_decode(qi, ki, vi, kpos <= posi, seq_axis)
+
+        return jax.shard_map(
+            local, mesh=mesh,
+            in_specs=(P(), P(None, seq_axis, None, None),
+                      P(None, seq_axis, None, None), P()),
+            out_specs=P(),
+        )(q, k, v, pos)
+
+    return fn

@@ -1,0 +1,62 @@
+"""Elastic scaling: rebuild the mesh when the device set changes.
+
+At 1000+ nodes, device loss is routine. The protocol here (exercised by
+tests/test_elastic.py with simulated device subsets):
+
+1. A health probe detects the surviving device set.
+2. ``plan_mesh`` picks the largest valid (data, model) mesh that (a) fits
+   the survivors, (b) keeps the model axis unchanged (TP degree is baked
+   into weight shards — changing it requires resharding ALL params), and
+   (c) drops whole data replicas first (cheapest: DP replicas are
+   interchangeable).
+3. Training resumes from the last checkpoint; params are resharded onto the
+   new mesh by restore (checkpoints store unsharded global arrays, so any
+   mesh can load them); the global batch either shrinks proportionally
+   (throughput-preserving per-device work) or per-device batch grows
+   (convergence-preserving global batch) per ``batch_policy``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import Mesh
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    data: int
+    model: int
+    devices_used: int
+    global_batch: int
+    note: str
+
+
+def plan_mesh(n_devices: int, model_parallel: int, old_global_batch: int,
+              old_data: int, batch_policy: str = "shrink") -> ElasticPlan:
+    """Largest (data, model) mesh with fixed TP degree on survivors."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"cannot keep TP degree {model_parallel} with {n_devices} devices; "
+            "full reshard required")
+    data = n_devices // model_parallel
+    used = data * model_parallel
+    if batch_policy == "shrink":
+        gb = max(1, old_global_batch * data // old_data)
+        note = "per-device batch preserved; global batch shrunk"
+    else:
+        gb = old_global_batch
+        note = "global batch preserved; per-device batch grew"
+    return ElasticPlan(data=data, model=model_parallel, devices_used=used,
+                       global_batch=gb, note=note)
+
+
+def build_mesh(devices, data: int, model: int,
+               axis_names=("data", "model")) -> Mesh:
+    dev = np.asarray(devices[: data * model]).reshape(data, model)
+    return Mesh(dev, axis_names)
+
+
+def survivors(devices, failed_ids: set[int]):
+    return [d for d in devices if d.id not in failed_ids]

@@ -1,0 +1,102 @@
+"""Failure detection + straggler mitigation policies for the train loop.
+
+These are the *control-plane* pieces of fault tolerance (the data plane —
+atomic checkpoints, deterministic data skip-ahead, elastic re-mesh — lives
+in checkpoint/ and distributed/elastic.py). Policies are plain-python and
+unit-tested with simulated timings; the launcher wires them to real step
+timings.
+
+Straggler mitigation (DESIGN.md §4): synchronous training can't drop a slow
+worker mid-allreduce, so mitigation acts BETWEEN steps:
+* ``StragglerDetector`` flags workers whose step time exceeds
+  median * threshold for ``patience`` consecutive steps;
+* the launcher's response ladder: (1) re-shard that worker's data slice to
+  spares ("backup workers" — speculative execution at step granularity),
+  (2) if persistent, evict via the elastic plan at the next checkpoint
+  boundary.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+
+
+@dataclass
+class StepTimer:
+    window: int = 32
+    times: deque = field(default_factory=lambda: deque(maxlen=32))
+    _t0: float | None = None
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def stop(self) -> float:
+        dt = time.monotonic() - self._t0
+        self.times.append(dt)
+        return dt
+
+    def median(self) -> float:
+        if not self.times:
+            return 0.0
+        s = sorted(self.times)
+        return s[len(s) // 2]
+
+
+class StragglerDetector:
+    """Flags persistently slow workers from per-step timings."""
+
+    def __init__(self, threshold: float = 1.5, patience: int = 3):
+        self.threshold = threshold
+        self.patience = patience
+        self._strikes: dict[int, int] = defaultdict(int)
+
+    def observe(self, step_times: dict[int, float]) -> list[int]:
+        """step_times: worker_id -> seconds. Returns workers to act on."""
+        if not step_times:
+            return []
+        s = sorted(step_times.values())
+        med = s[len(s) // 2]
+        flagged = []
+        for w, t in step_times.items():
+            if med > 0 and t > self.threshold * med:
+                self._strikes[w] += 1
+            else:
+                self._strikes[w] = 0
+            if self._strikes[w] >= self.patience:
+                flagged.append(w)
+        return flagged
+
+
+class HeartbeatMonitor:
+    """Declares workers dead after ``timeout`` without a heartbeat."""
+
+    def __init__(self, timeout: float = 60.0):
+        self.timeout = timeout
+        self._last: dict[int, float] = {}
+
+    def beat(self, worker: int, now: float | None = None):
+        self._last[worker] = time.monotonic() if now is None else now
+
+    def dead(self, now: float | None = None) -> list[int]:
+        t = time.monotonic() if now is None else now
+        return [w for w, last in self._last.items() if t - last > self.timeout]
+
+
+@dataclass
+class RestartPolicy:
+    """Exponential-backoff restart budget (per incident class)."""
+
+    max_restarts: int = 10
+    backoff_base: float = 2.0
+    _count: int = 0
+
+    def next_delay(self) -> float | None:
+        if self._count >= self.max_restarts:
+            return None
+        d = min(self.backoff_base ** self._count, 300.0)
+        self._count += 1
+        return d
+
+    def reset(self):
+        self._count = 0

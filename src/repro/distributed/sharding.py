@@ -1,0 +1,206 @@
+"""Sharding policy: how logical tensor axes map onto mesh axes.
+
+``MeshPolicy`` is threaded through model apply functions; every activation
+constraint in the model goes through :func:`shard` so a single object flips
+the whole network between data-parallel, tensor-parallel, sequence-parallel
+and combinations — and ``policy=None`` turns all constraints off for
+single-device unit tests.
+
+Parameter shardings are assigned by path-pattern rules (:func:`param_specs`),
+the way production launchers (MaxText etc.) do it: the model code stays
+sharding-agnostic, the launcher owns placement.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class MeshPolicy:
+    """Logical->mesh axis assignment.
+
+    batch: mesh axes sharding the batch dim of activations (DP).
+    seq:   mesh axes sharding the sequence dim (SP; empty = unsharded).
+    model: mesh axis sharding hidden/head/expert dims (TP/EP).
+    """
+
+    batch: tuple[str, ...] = ("data",)
+    seq: tuple[str, ...] = ()
+    model: str | None = "model"
+    # MoE expert banks: "expert" shards the expert dim on the model axis
+    # (EP, all-to-all dispatch); "ffn" shards each expert's hidden dim (TP).
+    expert_mode: str = "expert"
+    # Megatron-style sequence parallelism for RESIDUAL storage: block
+    # boundary activations shard their seq dim on these axes, so per-layer
+    # saved-for-backward tensors shrink by the TP degree (GSPMD inserts the
+    # all-gather/reduce-scatter pair around each block — same bytes as the
+    # TP all-reduce it replaces).
+    seq_resid: tuple[str, ...] = ()
+
+    def batch_spec(self):
+        return self.batch if self.batch else None
+
+    def seq_spec(self):
+        return self.seq if self.seq else None
+
+    def model_spec(self):
+        return self.model
+
+
+def shard(x, policy: "MeshPolicy | None", *dims):
+    """Constrain activation sharding. ``dims`` name each tensor axis with one
+    of: 'batch', 'seq', 'model', None. No-op when policy is None."""
+    if policy is None:
+        return x
+    spec = []
+    for d in dims:
+        if d == "batch":
+            spec.append(policy.batch_spec())
+        elif d == "seq":
+            spec.append(policy.seq_spec())
+        elif d == "model":
+            spec.append(policy.model_spec())
+        elif d == "seq_resid":
+            spec.append(policy.seq_resid if policy.seq_resid else None)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter placement rules (regex on pytree path).
+# ---------------------------------------------------------------------------
+
+# Megatron-style rules for the unified LM. First match wins.
+#   column-parallel (shard output dim):  q/k/v, mlp up & gate, L of WASI pairs
+#   row-parallel    (shard input dim):   o-proj, mlp down, R of WASI pairs
+# WASI note (DESIGN.md §4): for an up-projection, L (O,K) shards O; its R
+# (K,I) is replicated. For a down-projection, R (K,I) shards I; its L is
+# replicated. The K-dim contraction between them is the (tiny) all-reduce.
+LM_RULES: tuple[tuple[str, tuple], ...] = (
+    # embeddings / head: vocab on model axis
+    (r".*(embed|lm_head)/w$", ("model", None)),
+    # MoE expert banks (E, O, I) or factored (E, O, K)/(E, K, I).
+    # "expert" and "ffn_model" resolve to the model axis under EP and TP
+    # respectively — never both (DuplicateSpec otherwise).
+    (r".*experts.*/(w_up|w_gate)/w$", ("expert", "ffn_model", None)),
+    (r".*experts.*/w_down/w$", ("expert", None, "ffn_model")),
+    (r".*experts.*/(w_up|w_gate)/L$", ("expert", "ffn_model", None)),
+    (r".*experts.*/(w_up|w_gate)/R$", ("expert", None, None)),
+    (r".*experts.*/w_down/L$", ("expert", None, None)),
+    (r".*experts.*/w_down/R$", ("expert", None, "ffn_model")),
+    # shared experts: always-on, shard like dense FFN banks
+    (r".*shared/(w_up|w_gate)/w$", (None, "model", None)),
+    (r".*shared/w_down/w$", (None, None, "model")),
+    (r".*shared/(w_up|w_gate)/L$", (None, "model", None)),
+    (r".*shared/(w_up|w_gate)/R$", (None, None, None)),
+    (r".*shared/w_down/L$", (None, None, None)),
+    (r".*shared/w_down/R$", (None, None, "model")),
+    # router stays replicated
+    (r".*router.*", (None, None)),
+    # attention projections
+    (r".*(wq|wk|wv|q_proj|k_proj|v_proj)/w$", ("model", None)),
+    (r".*(wo|o_proj)/w$", (None, "model")),
+    (r".*(wq|wk|wv|q_proj|k_proj|v_proj)/L$", ("model", None)),
+    (r".*(wq|wk|wv|q_proj|k_proj|v_proj)/R$", (None, None)),
+    (r".*(wo|o_proj)/L$", (None, None)),
+    (r".*(wo|o_proj)/R$", (None, "model")),
+    (r".*(wq|wk|wv|q_proj|k_proj|v_proj)/b$", ("model",)),
+    # MLP
+    (r".*(up|gate)/w$", ("model", None)),
+    (r".*down/w$", (None, "model")),
+    (r".*(up|gate)/L$", ("model", None)),
+    (r".*(up|gate)/R$", (None, None)),
+    (r".*down/L$", (None, None)),
+    (r".*down/R$", (None, "model")),
+    # SSM projections (in_proj col-parallel, out_proj row-parallel; the
+    # small B/C/dt heads replicated -- split-boundary alignment, DESIGN §4)
+    (r".*(bcdt_proj|x_proj)/.*$", None),
+    (r".*(in_proj|dt_proj)/(w|L)$", ("model", None)),
+    (r".*(in_proj|dt_proj)/R$", (None, None)),
+    (r".*out_proj/(w)$", (None, "model")),
+    (r".*out_proj/L$", (None, None)),
+    (r".*out_proj/R$", (None, "model")),
+    (r".*(A_log|D|dt_bias|conv_w|conv_b)$", None),  # small ssm tensors replicated
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def spec_for_path(path_str: str, leaf, policy: MeshPolicy,
+                  rules=LM_RULES, scan_prefix: bool = True):
+    """PartitionSpec for one parameter. ``scan_prefix`` accounts for stacked
+    scan layers: leaves with more dims than the rule pattern get leading
+    ``None`` axes (the layer/stack dims are never sharded)."""
+    model = policy.model_spec()
+    # EP rides the model axis (DESIGN.md §4); exactly one of expert/ffn_model
+    # resolves, per policy.expert_mode
+    expert = model if policy.expert_mode == "expert" else None
+    ffn_model = model if policy.expert_mode == "ffn" else None
+
+    def resolve(tok):
+        return {"model": model, "expert": expert,
+                "ffn_model": ffn_model}.get(tok, None)
+
+    for pat, spec in rules:
+        if re.match(pat, path_str):
+            if spec is None:
+                return P()
+            resolved = tuple(resolve(s) for s in spec)
+            ndim = getattr(leaf, "ndim", len(resolved))
+            if scan_prefix and ndim > len(resolved):
+                resolved = (None,) * (ndim - len(resolved)) + resolved
+            elif ndim < len(resolved):
+                resolved = resolved[-ndim:] if ndim else ()
+            return P(*resolved)
+    return P()  # replicate by default (norms, scalars)
+
+
+def param_specs(params, policy: MeshPolicy, rules=LM_RULES):
+    """Pytree of PartitionSpecs matching ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: spec_for_path(_path_str(p), x, policy, rules), params)
+
+
+def param_shardings(params, mesh: Mesh, policy: MeshPolicy, rules=LM_RULES):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, policy, rules))
+
+
+def bytes_per_device(tree, mesh: Mesh, specs) -> int:
+    """Estimated per-device bytes for a sharded pytree (dry-run sanity)."""
+    total = 0
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def leaf_bytes(x, spec):
+        n = int(np.prod(x.shape)) if x.shape else 1
+        denom = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            for nm in names:
+                denom *= axis_sizes[nm]
+        import jax.numpy as jnp
+        return n * jnp.dtype(x.dtype).itemsize // max(denom, 1)
+
+    for x, s in zip(jax.tree.leaves(tree), jax.tree.leaves(specs, is_leaf=lambda t: isinstance(t, P))):
+        total += leaf_bytes(x, s)
+    return total

@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Each kernel ships three artifacts:
+  <name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py    — jit'd public wrappers (interpret=True on CPU hosts)
+  ref.py    — pure-jnp oracles the tests assert against
+
+Kernels:
+  matmul_tiled     — f32-accumulator tiled matmul; building block for the
+                     fused low-rank pair (x R^T) L^T (paper Eq. 8)
+  gram             — tall-skinny Y^T Y reduction (CholeskyQR stage of WSI/ASI)
+  flash_attention  — causal/sliding-window online-softmax attention
+  ssd_scan         — Mamba-2 SSD chunked scan with on-chip state carry
+"""
+
+from repro.kernels.ops import (
+    flash_attention,
+    gram,
+    lowrank_matmul,
+    matmul,
+)
+from repro.kernels.ssd_scan import ssd_scan_tiled

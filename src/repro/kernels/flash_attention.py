@@ -1,0 +1,118 @@
+"""Flash attention kernel: causal / sliding-window online-softmax.
+
+Grid (B*H, Sq/bq, Sk/bk), K innermost. Scratch per (b*h, q-tile): running
+max m (bq,), normalizer l (bq,), and f32 accumulator (bq, dh) — the online
+softmax recurrence. The output tile is written at the last K step.
+
+Sliding-window causal masking is tile-aware: tiles entirely outside
+[qpos - window, qpos] are skipped with ``pl.when`` (no MXU work), which is
+what makes the 32k-prefill local layers cheap — the XLA oracle
+(nn.attention.chunked_attention) cannot skip, the kernel can.
+
+Head-dim and tile sizes are MXU/VREG aligned (dh padded to 128 by ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bq: int, bk: int, k_steps: int, causal: bool, window: int,
+                  sk_valid: int, scale: float):
+    kk = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = qi * bq
+    k_lo = kk * bk
+    # tile-level skip: is the whole K tile outside every q row's visible
+    # range? visible range for q row r: [r - window + 1, r] (causal+window),
+    # [0, r] (causal), or everything (bidirectional)
+    run = k_lo >= 0  # traced True
+    if causal:
+        run = jnp.logical_and(run, k_lo <= q_lo + bq - 1)
+    if window > 0:
+        run = jnp.logical_and(run, k_lo + bk - 1 > q_lo - window)
+
+    @pl.when(run)
+    def _compute():
+        qb = q_ref[0]
+        kb = k_ref[0]
+        s = jnp.dot(qb, kb.T, preferred_element_type=jnp.float32) * scale
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = kpos < sk_valid
+        if causal:
+            ok = jnp.logical_and(ok, kpos <= qpos)
+        if window > 0:
+            ok = jnp.logical_and(ok, kpos > qpos - window)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jnp.dot(p.astype(v_ref.dtype), v_ref[0],
+                                  preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(kk == k_steps - 1)
+    def _store():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_tiled(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          causal: bool = True, window: int = 0,
+                          bq: int = 128, bk: int = 128, scale: float | None = None,
+                          interpret: bool = True) -> jax.Array:
+    """q/k/v: (BH, S, dh) with identical head counts (GQA expansion done by
+    ops.flash_attention). Returns (BH, Sq, dh). ``scale`` defaults to
+    dh**-0.5 — pass the REAL head dim's scale when dh is lane-padded."""
+    bh, sq, dh = q.shape
+    sk = k.shape[1]
+    scale = scale if scale is not None else dh ** -0.5
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    pq, pk_ = (-sq) % bq, (-sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pk_:
+        k = jnp.pad(k, ((0, 0), (0, pk_), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk_), (0, 0)))
+    SQ, SK = q.shape[1], k.shape[1]
+    k_steps = SK // bk
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, k_steps=k_steps,
+                          causal=causal, window=window, sk_valid=sk,
+                          scale=scale),
+        grid=(bh, SQ // bq, k_steps),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, kk: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, kk: (b, kk, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, kk: (b, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, kk: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, SQ, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq, :]

@@ -1,0 +1,50 @@
+"""Tall-skinny Gram kernel: G (K, K) = Y^T (M, K) Y.
+
+The MXU stage of CholeskyQR (DESIGN.md §3.1) — WSI/ASI orthogonalize via
+G = Y^T Y; K is the WASI rank (<= ~1024) so G fits in a single VMEM tile
+and the kernel is a pure reduction over M: grid (M/bm,), one revisited
+(K, K) f32 output block accumulated across grid steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gram_kernel(y_ref, o_ref, acc_ref, *, m_steps: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    yb = y_ref[...]
+    acc_ref[...] += jnp.dot(yb.T, yb, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(0) == m_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gram_tiled(y: jax.Array, *, bm: int = 512,
+               interpret: bool = True) -> jax.Array:
+    """G = Y^T Y in f32. y: (M, K) with K <= ~1024 (one VMEM tile)."""
+    m, k = y.shape
+    bm = min(bm, m)
+    pm = (-m) % bm
+    if pm:
+        y = jnp.pad(y, ((0, pm), (0, 0)))  # zero rows don't change Y^T Y
+    M = y.shape[0]
+    m_steps = M // bm
+
+    return pl.pallas_call(
+        functools.partial(_gram_kernel, m_steps=m_steps),
+        grid=(m_steps,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((k, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, k), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((k, k), jnp.float32)],
+        interpret=interpret,
+    )(y)

@@ -1,0 +1,68 @@
+"""Tiled matmul kernel with f32 VMEM accumulator.
+
+C (M, N) = A (M, K) @ B (K, N); grid (M/bm, N/bn, K/bk) with K innermost so
+the (bm, bn) f32 accumulator scratch lives across the contraction. Blocks
+default to 128 — the MXU lane width — and the wrapper pads ragged shapes up
+to block multiples (output sliced back).
+
+This is the building block for WASI's factored forward (Eq. 8): the pair
+(x R^T) L^T lowers to two calls whose K-dim is the WASI rank — the FLOP
+savings the paper claims come from the shapes; the kernel's job is to keep
+the MXU busy on them (f32 accumulation, aligned tiles, no HBM round-trip
+inside the contraction).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_tiled(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
+                 bk: int = 128, out_dtype=None,
+                 interpret: bool = True) -> jax.Array:
+    """2D matmul via Pallas; pads to block multiples, slices back."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    out_dtype = out_dtype or a.dtype
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+    M, K = a.shape
+    N = b.shape[1]
+    k_steps = K // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(M // bm, N // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n]

@@ -1,0 +1,74 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret`` defaults to True because this host is CPU-only (TPU v5e is
+the compile TARGET); on a real TPU runtime set
+``repro.kernels.ops.INTERPRET = False`` (launcher does this when
+jax.default_backend() == 'tpu').
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_tiled
+from repro.kernels.gram import gram_tiled
+from repro.kernels.matmul_tiled import matmul_tiled
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    return matmul_tiled(a, b, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def lowrank_matmul(x, r_factor, l_factor, *, bm: int = 128, bn: int = 128,
+                   bk: int = 128):
+    """WASI factored linear (Eq. 8): y = (x @ R^T) @ L^T.
+    x (..., I), R (K, I), L (O, K) -> (..., O). Leading dims flattened."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    h = matmul_tiled(x2, r_factor.T, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)
+    y = matmul_tiled(h, l_factor.T, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)
+    return y.reshape(lead + (l_factor.shape[0],))
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def gram(y, *, bm: int = 512):
+    """G = Y^T Y (f32), the CholeskyQR reduction. y (M, K)."""
+    return gram_tiled(y, bm=bm, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128):
+    """GQA flash attention. q (B, Sq, H, dh); k/v (B, Sk, KVH, dh).
+
+    KV heads are expanded to H by index (gather, no copy through the MXU),
+    heads folded into the batch grid dim, dh padded to a lane multiple.
+    """
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    if g > 1:
+        idx = jnp.arange(h) // g
+        k = k[:, :, idx, :]
+        v = v[:, :, idx, :]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, k.shape[1], dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, v.shape[1], dh)
+    pad = (-dh) % 128
+    if pad:
+        qf = jnp.pad(qf, ((0, 0), (0, 0), (0, pad)))
+        kf = jnp.pad(kf, ((0, 0), (0, 0), (0, pad)))
+        vf = jnp.pad(vf, ((0, 0), (0, 0), (0, pad)))
+        # zero-padding k changes q.k by nothing (zeros), v-padding adds zero
+        # columns sliced off below; but the softmax scale must use the REAL dh
+    out = flash_attention_tiled(qf, kf, vf, causal=causal, window=window,
+                                bq=bq, bk=bk, scale=dh ** -0.5,
+                                interpret=INTERPRET)
+    out = out[..., :dh]
+    return out.reshape(b, h, sq, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every kernel. Tests assert_allclose against these
+across shape/dtype sweeps (tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b, out_dtype=None):
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32)).astype(
+        out_dtype or a.dtype)
+
+
+def lowrank_matmul_ref(x, r_factor, l_factor, out_dtype=None):
+    """y = (x @ R^T) @ L^T; x (M, I), R (K, I), L (O, K) -> (M, O)."""
+    h = jnp.matmul(x.astype(jnp.float32), r_factor.astype(jnp.float32).T)
+    y = jnp.matmul(h, l_factor.astype(jnp.float32).T)
+    return y.astype(out_dtype or x.dtype)
+
+
+def gram_ref(y):
+    yf = y.astype(jnp.float32)
+    return yf.T @ yf
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q/k/v (BH, S, dh) -> (BH, Sq, dh); fp32 softmax."""
+    bh, sq, dh = q.shape
+    sk = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (dh ** -0.5)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

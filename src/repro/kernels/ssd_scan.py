@@ -1,0 +1,92 @@
+"""Mamba-2 SSD chunked-scan kernel (zamba2's compute hot spot).
+
+Grid (B, H, NC) with the chunk index INNERMOST: for a fixed (batch, head)
+the kernel revisits sequentially, carrying the (dh, N) recurrent state in a
+VMEM scratch across chunk steps — the inter-chunk recurrence lives entirely
+on-chip, while the intra-chunk work is three MXU matmuls:
+
+    cb       = C B^T                      (Q, Q)
+    y_intra  = (cb ⊙ L) (dt·u)            (Q, dh)   L = causal decay kernel
+    y_inter  = (C S^T) ⊙ exp(cum)         (Q, dh)
+    S       <- exp(cum_Q)·S + (dt·u·decay_out)^T B
+
+This is the TPU-native form of the CUDA selective-scan kernel (DESIGN.md
+§3): no sequential per-timestep recurrence ever touches the MXU path.
+Oracle: repro.nn.mamba._ssd_chunked (pure JAX).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_ref, *,
+                q: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    u = u_ref[0, 0, 0].astype(jnp.float32)       # (Q, dh)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)     # (Q,)
+    a = a_ref[0].astype(jnp.float32)             # scalar A_h (negative)
+    bm = b_ref[0, 0].astype(jnp.float32)         # (Q, N)
+    cm = c_ref[0, 0].astype(jnp.float32)         # (Q, N)
+
+    da = dt * a                                  # (Q,)
+    cum = jnp.cumsum(da)
+    li = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(tri, jnp.exp(li), 0.0)         # (Q, Q)
+    du = dt[:, None] * u                         # (Q, dh)
+    cb = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)
+    y = jnp.dot(cb * L, du, preferred_element_type=jnp.float32)
+
+    s_prev = s_ref[...]                          # (dh, N)
+    y += jnp.exp(cum)[:, None] * jnp.dot(
+        cm, s_prev.T, preferred_element_type=jnp.float32)
+
+    decay_out = jnp.exp(cum[-1] - cum)           # (Q,)
+    s_c = jnp.dot((du * decay_out[:, None]).T, bm,
+                  preferred_element_type=jnp.float32)  # (dh, N)
+    s_ref[...] = jnp.exp(cum[-1]) * s_prev + s_c
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_tiled(u, dt, A, B, C, *, chunk: int = 128,
+                   interpret: bool = True):
+    """u (Bz,S,H,dh); dt (Bz,S,H) >0; A (H,)<0; B,C (Bz,S,N).
+    Returns y (Bz,S,H,dh) WITHOUT the D·u skip term (added by the wrapper).
+    """
+    bz, s, h, dh = u.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, "pad sequence to the SSD chunk"
+    nc = s // chunk
+    uc = u.transpose(0, 2, 1, 3).reshape(bz, h, nc, chunk, dh)
+    dtc = dt.transpose(0, 2, 1).reshape(bz, h, nc, chunk)
+    bc = B.reshape(bz, nc, chunk, n)
+    cc = C.reshape(bz, nc, chunk, n)
+
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, q=chunk, n_chunks=nc),
+        grid=(bz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, dh), lambda b, hh, c: (b, hh, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b, hh, c: (b, hh, c, 0)),
+            pl.BlockSpec((1,), lambda b, hh, c: (hh,)),
+            pl.BlockSpec((1, 1, chunk, n), lambda b, hh, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda b, hh, c: (b, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, chunk, dh),
+                               lambda b, hh, c: (b, hh, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bz, h, nc, chunk, dh), u.dtype),
+        scratch_shapes=[pltpu.VMEM((dh, n), jnp.float32)],
+        interpret=interpret,
+    )(uc, dtc, A, bc, cc)
+    return y.reshape(bz, h, s, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,338 @@
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init). Everything below is ordinary code.
+
+Per cell this produces:
+  - compiled.memory_analysis()  -> bytes per device (proves it fits)
+  - compiled.cost_analysis()    -> HLO FLOPs / bytes for §Roofline
+  - collective_bytes            -> summed result sizes of all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute in the
+    post-SPMD HLO (cost_analysis does not expose these)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod --out dryrun.json
+"""
+import argparse
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as configs
+from repro.config import SHAPES, ModelConfig, ShapeConfig, TrainConfig
+from repro.launch.mesh import make_policy, make_production_mesh
+from repro.launch import specs as S
+
+DTYPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s64|u64|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+         "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+         "pred": 1, "c64": 8, "c128": 16}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(m) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum RESULT sizes of collective ops in post-SPMD HLO (per device)."""
+    out = {c: 0 for c in COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        for c in COLLECTIVES:
+            # match op lines: "%x = TYPE[dims] all-reduce(...)" (incl. -start)
+            if re.search(rf"\b{c}(-start)?\(", ls):
+                m = DTYPE_RE.search(ls)
+                if m:
+                    out[c] += _shape_bytes(m)
+                    out["count"] += 1
+                break
+    out["total"] = sum(out[c] for c in COLLECTIVES)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell builders
+# ---------------------------------------------------------------------------
+
+def _loss_fn(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        from repro.models.encdec import encdec_loss
+        return encdec_loss
+    from repro.models.lm import lm_loss
+    return lm_loss
+
+
+def _train_cfg(cfg: ModelConfig | None = None) -> TrainConfig:
+    # wide/deep/MoE archs take gradient-accumulation microbatches: the
+    # per-device activation peak shrinks by the factor (§Perf iter. 8)
+    nm = 1
+    if cfg is not None:
+        wide = cfg.d_model >= 2560 or cfg.moe.n_experts > 0
+        deep = (cfg.d_model >= 3584 and cfg.n_layers >= 48) or \
+               (cfg.moe.n_experts > 0 and cfg.d_model >= 4096)
+        nm = 8 if deep else (4 if wide else 1)
+    return TrainConfig(optimizer="adamw", lr=3e-4, steps=10000,
+                       clip_norm=1.0, weight_decay=0.1, powersgd_rank=0,
+                       microbatch=nm)
+
+
+def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh, multi_pod: bool):
+    from repro.train.step import make_train_state, make_train_step
+
+    policy = make_policy(multi_pod=multi_pod,
+                         expert_mode=cfg.moe.shard)
+    tcfg = _train_cfg(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    key = jax.random.PRNGKey(0)
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init_all():
+        if cfg.family == "encdec":
+            from repro.models.encdec import init_encdec, init_encdec_states
+            params = init_encdec(key, cfg, dtype)
+            asi = init_encdec_states(key, cfg, b, s, dtype) \
+                if cfg.wasi.compress_acts else None
+        else:
+            from repro.models.lm import init_lm, init_lm_states
+            params = init_lm(key, cfg, dtype)
+            asi = init_lm_states(key, cfg, b, s, dtype) \
+                if cfg.wasi.compress_acts else None
+        return make_train_state(key, params, cfg, tcfg, asi_states=asi)
+
+    state_sds = jax.eval_shape(init_all)
+    state_specs = S.train_state_specs(state_sds, cfg, policy, multi_pod)
+    batch_sds = S.train_inputs(cfg, shape)
+    batch_specs = S.train_input_specs(cfg, shape, multi_pod)
+
+    step = make_train_step(_loss_fn(cfg), cfg, tcfg, policy=policy)
+
+    ns = lambda spec: NamedSharding(mesh, spec)
+    in_sh = (jax.tree.map(ns, state_specs,
+                          is_leaf=lambda x: isinstance(x, P)),
+             jax.tree.map(ns, batch_specs,
+                          is_leaf=lambda x: isinstance(x, P)))
+    # state donation: params/opt/ASI buffers update in place (the train
+    # loop discards the old state anyway). out_shardings pinned to the input
+    # state shardings so every donated buffer actually aliases (auto output
+    # shardings may differ -> donation silently skipped).
+    jitted = jax.jit(step, in_shardings=in_sh,
+                     out_shardings=(in_sh[0], None), donate_argnums=(0,))
+    with mesh:
+        lowered = jitted.lower(state_sds, batch_sds)
+    return lowered
+
+
+def build_serve(cfg: ModelConfig, shape: ShapeConfig, mesh, multi_pod: bool):
+    policy = make_policy(multi_pod=multi_pod,
+                         seq_shard=(shape.kind == "prefill"
+                                    and shape.global_batch < 32),
+                         expert_mode=cfg.moe.shard)
+    dtype = jnp.bfloat16
+    key = jax.random.PRNGKey(0)
+
+    def init_params():
+        if cfg.family == "encdec":
+            from repro.models.encdec import init_encdec
+            return init_encdec(key, cfg, dtype)
+        from repro.models.lm import init_lm
+        return init_lm(key, cfg, dtype)
+
+    params_sds = jax.eval_shape(init_params)
+    from repro.distributed.sharding import param_specs
+    p_specs = param_specs(params_sds, policy)
+    ns = lambda spec: NamedSharding(mesh, spec)
+    p_sh = jax.tree.map(ns, p_specs, is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "prefill":
+        batch_sds = S.prefill_inputs(cfg, shape)
+        batch_specs = S.prefill_input_specs(cfg, shape, multi_pod)
+
+        def prefill(params, batch):
+            if cfg.family == "encdec":
+                from repro.models.encdec import decode_train, encode
+                memory, _ = encode(params, batch["frames"], cfg, policy=policy)
+                logits, _ = decode_train(params, batch["tokens"], memory, cfg,
+                                         policy=policy)
+            else:
+                from repro.models.lm import lm_forward
+                logits, _, _, _ = lm_forward(params, batch["tokens"], cfg,
+                                             policy=policy)
+            # serving returns only the last position's token scores
+            return jnp.argmax(logits[:, -1, :], axis=-1)
+
+        jitted = jax.jit(prefill, in_shardings=(
+            p_sh, jax.tree.map(ns, batch_specs,
+                               is_leaf=lambda x: isinstance(x, P))))
+        with mesh:
+            return jitted.lower(params_sds, batch_sds)
+
+    # decode
+    caches_sds = S.cache_shapes(cfg, shape)
+    c_specs = S.cache_specs(cfg, shape, caches_sds, multi_pod)
+    tok_sds, pos_sds, mem_sds = S.decode_inputs(cfg, shape)
+    dp = S.dp_axes(multi_pod)
+    tok_spec = P() if shape.global_batch == 1 else P(dp, None)
+
+    if cfg.family == "encdec":
+        def decode(params, token, caches, pos, memory):
+            from repro.models.encdec import encdec_decode_step
+            logits, nc = encdec_decode_step(params, token, memory, caches,
+                                            pos, cfg, policy=policy)
+            return jnp.argmax(logits, axis=-1), nc
+
+        in_sh = (p_sh, ns(tok_spec),
+                 jax.tree.map(ns, c_specs, is_leaf=lambda x: isinstance(x, P)),
+                 ns(P()), ns(P(dp, None, None) if shape.global_batch > 1 else P()))
+        # serving donates the KV cache: in-place update, no double buffer
+        jitted = jax.jit(decode, in_shardings=in_sh,
+                         out_shardings=(None, in_sh[2]), donate_argnums=(2,))
+        with mesh:
+            return jitted.lower(params_sds, tok_sds, caches_sds, pos_sds,
+                                mem_sds)
+
+    def decode(params, token, caches, pos):
+        from repro.models.lm import lm_decode_step
+        logits, nc = lm_decode_step(params, token, caches, pos, cfg,
+                                    policy=policy)
+        return jnp.argmax(logits, axis=-1), nc
+
+    in_sh = (p_sh, ns(tok_spec),
+             jax.tree.map(ns, c_specs, is_leaf=lambda x: isinstance(x, P)),
+             ns(P()))
+    # serving donates the KV cache: in-place update, no double buffer
+    jitted = jax.jit(decode, in_shardings=in_sh,
+                     out_shardings=(None, in_sh[2]), donate_argnums=(2,))
+    with mesh:
+        return jitted.lower(params_sds, tok_sds, caches_sds, pos_sds)
+
+
+# ---------------------------------------------------------------------------
+# Cell matrix + runner
+# ---------------------------------------------------------------------------
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k skipped: full quadratic attention (DESIGN §5)"
+    if shape.kind == "decode" and not cfg.has_decoder:
+        return False, "decode skipped: encoder-only"
+    return True, ""
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             wasi_method: str | None = None) -> dict:
+    cfg = configs.get(arch)
+    if wasi_method is not None:
+        import dataclasses
+        cfg = cfg.replace(wasi=dataclasses.replace(cfg.wasi, method=wasi_method))
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "wasi": cfg.wasi.method}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            lowered = build_train(cfg, shape, mesh, multi_pod)
+        else:
+            lowered = build_serve(cfg, shape, mesh, multi_pod)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        with mesh:
+            compiled = lowered.compile()
+        t_compile = time.time() - t0
+        try:
+            ma = compiled.memory_analysis()
+            mem = {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes),
+            }
+            mem["total_bytes_per_device"] = (mem["argument_bytes"]
+                                             + mem["temp_bytes"]
+                                             + mem["output_bytes"]
+                                             - mem["alias_bytes"])
+        except Exception as e:  # pragma: no cover
+            mem = {"error": str(e)}
+        try:
+            ca = compiled.cost_analysis()
+            cost = {"flops": float(ca.get("flops", 0.0)),
+                    "bytes": float(ca.get("bytes accessed", 0.0))}
+        except Exception as e:  # pragma: no cover
+            cost = {"error": str(e)}
+        coll = collective_bytes(compiled.as_text())
+        rec.update(status="ok", lower_s=round(t_lower, 1),
+                   compile_s=round(t_compile, 1), memory=mem, cost=cost,
+                   collectives=coll)
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}"[:500])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--wasi", default=None,
+                    help="override wasi method: none|wasi|asi|wsi")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    lm_archs = [a for a in configs.list_archs()
+                if a not in ("vit-base", "tinyllama-1.1b")]
+    if args.all:
+        cells = [(a, s) for a in lm_archs for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape, mp, wasi_method=args.wasi)
+            results.append(rec)
+            line = {k: rec.get(k) for k in
+                    ("arch", "shape", "mesh", "status", "compile_s")}
+            if rec["status"] == "ok":
+                line["flops"] = rec["cost"].get("flops")
+                line["coll_MiB"] = round(rec["collectives"]["total"] / 2**20, 1)
+                line["mem_GiB"] = round(
+                    rec["memory"].get("total_bytes_per_device", 0) / 2**30, 2)
+            print(json.dumps(line), flush=True)
+            if rec["status"] == "error":
+                print("  ERROR:", rec["error"], flush=True)
+            if args.out:  # incremental write: a crash loses nothing
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    if args.out:
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — required because dryrun.py must set
+XLA_FLAGS before the first jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.distributed.sharding import MeshPolicy
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def make_policy(*, multi_pod: bool = False, seq_shard: bool = False,
+                expert_mode: str = "expert") -> MeshPolicy:
+    """Activation-sharding policy matching the production mesh.
+
+    seq_shard=True moves the data axis from batch to sequence (SP) — used by
+    prefill_32k (batch 32 < 2*16 data shards would starve) and long_500k
+    (batch 1). expert_mode: cfg.moe.shard ("expert"=EP / "ffn"=TP experts).
+    """
+    dp = ("pod", "data") if multi_pod else ("data",)
+    if seq_shard:
+        return MeshPolicy(batch=(), seq=dp, model="model",
+                          expert_mode=expert_mode)
+    return MeshPolicy(batch=dp, seq=(), model="model",
+                      expert_mode=expert_mode, seq_resid=("model",))

@@ -1,0 +1,77 @@
+"""Serving launcher: batched prefill + decode with factored (WASI) weights.
+
+``python -m repro.launch.serve --arch qwen2-0.5b --tokens 32 --batch 4``
+
+Prefill is token-parallel (one forward over the prompt, caches built by a
+scan of decode steps for exactness on rolling-window layers); decode is a
+jit'd single-token step reused across the generation loop. WASI inference
+benefit: every linear runs in the rank-K subspace (paper C_inference /
+S_inference — measured by benchmarks/tab2_latency.py).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.models.lm import init_lm, init_lm_cache, lm_decode_step
+
+
+def generate(params, cfg, prompt, max_cache: int, n_new: int, *, greedy=True,
+             key=None):
+    """prompt (B, P) -> (B, P + n_new). Warmup = scanned decode steps (exact
+    for rolling caches); generation = the same jit'd step."""
+    b, p = prompt.shape
+    caches = init_lm_cache(cfg, b, max_cache, dtype=jnp.dtype(cfg.dtype))
+
+    step = jax.jit(
+        lambda pr, tok, c, pos: lm_decode_step(pr, tok, c, pos, cfg))
+
+    toks = prompt
+    logits = None
+    for i in range(p):  # prefill via decode steps (small prompts)
+        logits, caches = step(params, toks[:, i:i + 1], caches, i)
+    out = [toks]
+    cur = None
+    for j in range(n_new):
+        nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(nxt)
+        logits, caches = step(params, nxt, caches, p + j)
+    return jnp.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--wasi", default=None)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch) if args.full else configs.get_smoke(args.arch)
+    if args.wasi is not None:
+        cfg = cfg.replace(wasi=dataclasses.replace(cfg.wasi, method=args.wasi))
+    key = jax.random.PRNGKey(0)
+    params = init_lm(key, cfg, jnp.dtype(cfg.dtype))
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+    t0 = time.time()
+    out = generate(params, cfg, prompt,
+                   max_cache=args.prompt_len + args.tokens + 1,
+                   n_new=args.tokens)
+    dt = time.time() - t0
+    total_new = args.batch * args.tokens
+    print(f"[serve] arch={cfg.name} wasi={cfg.wasi.method} "
+          f"generated {total_new} tokens in {dt:.2f}s "
+          f"({total_new / dt:.1f} tok/s)")
+    print("[serve] sample:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""ShapeDtypeStruct stand-ins + PartitionSpecs for every dry-run cell.
+
+Nothing here allocates: params/state/caches come from jax.eval_shape over
+the real init functions, inputs are hand-built ShapeDtypeStructs, and the
+sharding rules mirror distributed/sharding.py.
+
+Cache sharding (DESIGN.md §4): decode caches shard batch on the DP axes and
+the SEQUENCE dim on 'model' (plus the DP axes too for long_500k, where
+batch=1 leaves them free) — decode attention over a sequence-sharded cache
+is exactly the flash-decode communication pattern.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig, TrainConfig
+from repro.distributed.sharding import MeshPolicy, param_specs
+
+
+def dp_axes(multi_pod: bool) -> tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# Input ShapeDtypeStructs
+# ---------------------------------------------------------------------------
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cfg.family == "encdec":
+        return {"frames": sds((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16),
+                "tokens": sds((b, s), jnp.int32),
+                "labels": sds((b, s), jnp.int32)}
+    if cfg.name.startswith("internvl"):
+        # VLM backbone: frontend stub supplies patch embeddings directly
+        return {"tokens": sds((b, s, cfg.d_model), jnp.bfloat16),
+                "labels": sds((b, s), jnp.int32)}
+    return {"tokens": sds((b, s), jnp.int32),
+            "labels": sds((b, s), jnp.int32)}
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig, multi_pod: bool):
+    dp = dp_axes(multi_pod)
+    if cfg.family == "encdec":
+        return {"frames": P(dp, None, None), "tokens": P(dp, None),
+                "labels": P(dp, None)}
+    if cfg.name.startswith("internvl"):
+        return {"tokens": P(dp, None, None), "labels": P(dp, None)}
+    return {"tokens": P(dp, None), "labels": P(dp, None)}
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cfg.family == "encdec":
+        return {"frames": sds((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16),
+                "tokens": sds((b, s), jnp.int32)}
+    if cfg.name.startswith("internvl"):
+        return {"tokens": sds((b, s, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": sds((b, s), jnp.int32)}
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig, multi_pod: bool):
+    dp = dp_axes(multi_pod)
+    if cfg.family == "encdec":
+        return {"frames": P(dp, None, None), "tokens": P(dp, None)}
+    if cfg.name.startswith("internvl"):
+        return {"tokens": P(dp, None, None)}
+    return {"tokens": P(dp, None)}
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    """(token, pos) stand-ins; caches come from cache_shapes()."""
+    b = shape.global_batch
+    sds = jax.ShapeDtypeStruct
+    tok = sds((b, 1), jnp.int32)
+    pos = sds((), jnp.int32)
+    if cfg.family == "encdec":
+        memory = sds((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        return tok, pos, memory
+    return tok, pos, None
+
+
+def cache_shapes(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStructs of the decode caches via eval_shape (no alloc)."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        from repro.models.encdec import init_encdec_cache
+        return jax.eval_shape(
+            lambda: init_encdec_cache(cfg, b, s, dtype=jnp.bfloat16))
+    from repro.models.lm import init_lm_cache
+    return jax.eval_shape(lambda: init_lm_cache(cfg, b, s, dtype=jnp.bfloat16))
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, caches,
+                multi_pod: bool):
+    """Specs for cache leaves by shape pattern.
+
+    KV leaves   (repeat, B, S, KVH, Dh): batch->dp, seq->model (+dp if B==1)
+    SSM leaves  (repeat, B, ..., N):     batch->dp, first inner dim->model
+    conv leaves (repeat, B, K-1, C):     batch->dp, channel->model
+    """
+    dp = dp_axes(multi_pod)
+    batch_small = shape.global_batch == 1
+    bspec = None if batch_small else dp
+    # with batch=1 (long_500k) the DP axes are free: fold them into the
+    # sequence sharding so the 500k cache spreads over ALL chips
+    seq_axes = (dp + ("model",)) if batch_small else ("model",)
+
+    def spec(x):
+        nd = x.ndim
+        is_f32 = jnp.dtype(x.dtype) == jnp.float32
+        if nd == 5 and not is_f32:   # stacked KV (repeat, B, S, KVH, Dh)
+            return P(None, bspec, seq_axes, None, None)
+        if nd == 5 and is_f32:       # mamba2 state (repeat, B, H, dh, N)
+            return P(None, bspec, "model", None, None)
+        if nd == 4 and is_f32:       # mamba1 state (repeat, B, di, N)
+            return P(None, bspec, "model", None)
+        if nd == 4:                  # conv buffer (repeat, B, K-1, C)
+            return P(None, bspec, None, "model")
+        return P()
+
+    return jax.tree.map(spec, caches)
+
+
+# ---------------------------------------------------------------------------
+# Train-state specs
+# ---------------------------------------------------------------------------
+
+def asi_state_specs(states, multi_pod: bool):
+    """ASI warm-start factors (repeat, D_m, r_m): shard the mode dim D_m on
+    the DP axes when divisible (ZeRO-style state sharding; the stacked-layer
+    dim is often not divisible by the DP degree, D_m almost always is)."""
+    dp = dp_axes(multi_pod)
+    dp_total = 32 if multi_pod else 16
+
+    def spec(x):
+        if x.ndim >= 3 and x.shape[1] % dp_total == 0:
+            return P(None, dp, *((None,) * (x.ndim - 2)))
+        return P()
+
+    return jax.tree.map(spec, states)
+
+
+def opt_moment_specs(params, p_specs, multi_pod: bool):
+    """ZeRO-style: optimizer moments additionally shard their leading stack
+    dim over the DP axes when divisible (moments are elementwise — any
+    sharding is valid; this cuts the fp32 mu/nu residency by the DP degree)."""
+    dp = dp_axes(multi_pod)
+    dp_total = 32 if multi_pod else 16
+
+    def widen(leaf, spec):
+        entries = tuple(spec)
+        if (leaf.ndim >= 3 and len(entries) == leaf.ndim
+                and entries[0] is None and leaf.shape[0] % dp_total == 0):
+            return P(dp, *entries[1:])
+        return spec
+
+    return jax.tree.map(widen, params, p_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def train_state_specs(state, cfg: ModelConfig, policy: MeshPolicy,
+                      multi_pod: bool):
+    from repro.train.step import TrainState
+
+    p_specs = param_specs(state.params, policy)
+    m_specs = opt_moment_specs(state.params, p_specs, multi_pod)
+    opt_mu = None if state.opt.mu is None else m_specs
+    opt_nu = None if state.opt.nu is None else m_specs
+    asi = None if state.asi is None else asi_state_specs(state.asi, multi_pod)
+    wsi = None if state.wsi is None else jax.tree.map(lambda x: P(), state.wsi)
+    psgd = None if state.psgd is None else jax.tree.map(lambda x: P(), state.psgd)
+    from repro.optim.optimizers import OptState
+    return TrainState(
+        params=p_specs,
+        opt=OptState(step=P(), mu=opt_mu, nu=opt_nu),
+        asi=asi, wsi=wsi, psgd=psgd, step=P())

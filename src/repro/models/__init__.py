@@ -1,0 +1,1 @@
+"""Model zoo: unified decoder LM, encoder-decoder (Whisper), ViT (paper)."""

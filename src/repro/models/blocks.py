@@ -1,0 +1,164 @@
+"""Per-kind transformer block init/apply, dispatched by BlockKind.
+
+A block is the unit the layer-group scan iterates over. Every kind exposes:
+    init_block(key, kind, cfg, dtype)                 -> params dict
+    init_block_state(key, kind, cfg, B, S, dtype)     -> ASI states dict
+    init_block_cache(kind, cfg, B, S, dtype)          -> decode cache
+    apply_block(kind, params, x, cfg, ...)            -> (x, cache, states, aux)
+
+zamba2's shared attention block (kind "mamba2_attn") closes over shared
+params passed via ``shared`` — the weights are NOT stacked per layer (one
+copy for the whole net, per the architecture), but each occurrence keeps its
+own KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import MeshPolicy
+from repro.nn.attention import (
+    KVCache,
+    apply_attention,
+    init_attention,
+    init_attention_state,
+    init_cache,
+)
+from repro.nn.mamba import (
+    MambaState,
+    apply_mamba1,
+    apply_mamba2,
+    init_mamba1,
+    init_mamba1_cache,
+    init_mamba1_state,
+    init_mamba2,
+    init_mamba2_cache,
+    init_mamba2_state,
+)
+from repro.nn.mlp import apply_mlp, init_mlp, init_mlp_state
+from repro.nn.moe import apply_moe, init_moe
+from repro.nn.norms import apply_norm, init_norm
+
+ATTN_KINDS = ("dense", "local", "moe", "moe_swa")
+MAMBA_KINDS = ("mamba1", "mamba2", "mamba2_attn")
+
+
+def block_window(kind: str, cfg: ModelConfig) -> int:
+    return cfg.window if kind in ("local", "moe_swa") else 0
+
+
+def init_block(key, kind: str, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind in ("dense", "local"):
+        return {"ln1": init_norm(cfg.norm, d, dtype),
+                "attn": init_attention(k1, cfg, dtype),
+                "ln2": init_norm(cfg.norm, d, dtype),
+                "mlp": init_mlp(k2, cfg, dtype=dtype)}
+    if kind in ("moe", "moe_swa"):
+        return {"ln1": init_norm(cfg.norm, d, dtype),
+                "attn": init_attention(k1, cfg, dtype),
+                "ln2": init_norm(cfg.norm, d, dtype),
+                "moe": init_moe(k2, cfg, dtype)}
+    if kind == "mamba1":
+        return {"ln": init_norm(cfg.norm, d, dtype),
+                "mixer": init_mamba1(k1, cfg, dtype)}
+    if kind in ("mamba2", "mamba2_attn"):
+        return {"ln": init_norm(cfg.norm, d, dtype),
+                "mixer": init_mamba2(k1, cfg, dtype)}
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def init_block_state(key, kind: str, cfg: ModelConfig, batch: int, seq: int,
+                     dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    if kind in ("dense", "local"):
+        return {"attn": init_attention_state(k1, cfg, batch, seq, dtype),
+                "mlp": init_mlp_state(k2, cfg, batch, seq, dtype=dtype)}
+    if kind in ("moe", "moe_swa"):
+        return {"attn": init_attention_state(k1, cfg, batch, seq, dtype)}
+    if kind == "mamba1":
+        return {"mixer": init_mamba1_state(k1, cfg, batch, seq, dtype)}
+    if kind == "mamba2":
+        return {"mixer": init_mamba2_state(k1, cfg, batch, seq, dtype)}
+    if kind == "mamba2_attn":
+        # shared attention runs without ASI (weights shared across layers;
+        # per-occurrence warm-start states would defeat the sharing)
+        return {"mixer": init_mamba2_state(k1, cfg, batch, seq, dtype),
+                "shared_attn": {}}
+    raise ValueError(kind)
+
+
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int, seq: int,
+                     dtype=jnp.bfloat16):
+    if kind in ATTN_KINDS:
+        return {"kv": init_cache(cfg, batch, seq, window=block_window(kind, cfg),
+                                 dtype=dtype)}
+    if kind == "mamba1":
+        return {"ssm": init_mamba1_cache(cfg, batch, dtype)}
+    if kind == "mamba2":
+        return {"ssm": init_mamba2_cache(cfg, batch, dtype)}
+    if kind == "mamba2_attn":
+        # shared attention block sees the FULL sequence (global)
+        return {"ssm": init_mamba2_cache(cfg, batch, dtype),
+                "kv": init_cache(cfg, batch, seq, window=0, dtype=dtype)}
+    raise ValueError(kind)
+
+
+def apply_block(kind: str, p: dict, x: jax.Array, cfg: ModelConfig, *,
+                shared: dict | None = None,
+                cache: dict | None = None, pos=None,
+                states: dict | None = None,
+                policy: MeshPolicy | None = None):
+    """Returns (x, new_cache, new_states, aux_loss)."""
+    st = states or {}
+    new_st = {}
+    aux = jnp.zeros((), jnp.float32)
+    window = block_window(kind, cfg)
+
+    if kind in ATTN_KINDS:
+        h = apply_norm(cfg.norm, p["ln1"], x)
+        a, new_kv, s_attn = apply_attention(
+            p["attn"], h, cfg, causal=True, window=window,
+            cache=None if cache is None else cache["kv"], pos=pos,
+            states=st.get("attn"), policy=policy)
+        new_st["attn"] = s_attn
+        x = x + a
+        h = apply_norm(cfg.norm, p["ln2"], x)
+        if kind in ("moe", "moe_swa"):
+            f, aux = apply_moe(p["moe"], h, cfg, policy)
+        else:
+            f, s_mlp = apply_mlp(p["mlp"], h, cfg, st.get("mlp"), policy)
+            new_st["mlp"] = s_mlp
+        x = x + f
+        new_cache = None if cache is None else {"kv": new_kv}
+        return x, new_cache, new_st, aux
+
+    if kind in MAMBA_KINDS:
+        h = apply_norm(cfg.norm, p["ln"], x)
+        fn = apply_mamba1 if kind == "mamba1" else apply_mamba2
+        m, new_ssm, s_m = fn(p["mixer"], h, cfg,
+                             state=None if cache is None else cache["ssm"],
+                             states=st.get("mixer"), policy=policy)
+        new_st["mixer"] = s_m
+        x = x + m
+        new_cache = None if cache is None else {"ssm": new_ssm}
+        if kind == "mamba2_attn":
+            # zamba2: shared transformer block (attn + MLP) after the mixer;
+            # weights shared across all occurrences, caches per-occurrence.
+            h = apply_norm(cfg.norm, shared["ln"], x)
+            a, new_kv, s_sh = apply_attention(
+                shared["attn"], h, cfg, causal=True, window=0,
+                cache=None if cache is None else cache["kv"], pos=pos,
+                states=st.get("shared_attn"), policy=policy)
+            new_st["shared_attn"] = s_sh
+            x = x + a
+            h = apply_norm(cfg.norm, shared["ln2"], x)
+            f, _ = apply_mlp(shared["mlp"], h, cfg, None, policy)
+            x = x + f
+            if new_cache is not None:
+                new_cache["kv"] = new_kv
+        return x, new_cache, new_st, aux
+
+    raise ValueError(kind)

@@ -1,0 +1,195 @@
+"""Encoder-decoder transformer (Whisper-tiny backbone).
+
+The audio conv frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_enc, d) supplied by ``input_specs``.
+Positions use fixed sinusoidal tables (rope_theta=0 disables RoPE), which
+extrapolate mechanically beyond the trained length (fidelity caveat in
+DESIGN.md §5).
+
+Decoder blocks: causal self-attn -> cross-attn over encoder memory -> MLP.
+Decode keeps (a) a self-attn KV cache and (b) precomputed cross-attn K/V of
+the encoder memory (computed once at prefill, reused every step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import MeshPolicy, shard
+from repro.nn.attention import (
+    KVCache,
+    apply_attention,
+    init_attention,
+    init_attention_state,
+    init_cache,
+)
+from repro.nn.mlp import apply_mlp, init_mlp, init_mlp_state
+from repro.nn.norms import apply_norm, init_norm
+from repro.nn.rotary import sinusoidal_embedding
+
+
+def init_encdec(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    ks = jax.random.split(key, 6)
+
+    def enc_block(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": init_norm(cfg.norm, d, dtype),
+                "attn": init_attention(k1, cfg, dtype),
+                "ln2": init_norm(cfg.norm, d, dtype),
+                "mlp": init_mlp(k2, cfg, dtype=dtype)}
+
+    def dec_block(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": init_norm(cfg.norm, d, dtype),
+                "self_attn": init_attention(k1, cfg, dtype),
+                "ln_x": init_norm(cfg.norm, d, dtype),
+                "cross_attn": init_attention(k2, cfg, dtype),
+                "ln2": init_norm(cfg.norm, d, dtype),
+                "mlp": init_mlp(k3, cfg, dtype=dtype)}
+
+    return {
+        "embed": {"w": (jax.random.normal(ks[0], (v, d), jnp.float32) * 0.02).astype(dtype)},
+        "enc": jax.vmap(enc_block)(jax.random.split(ks[1], cfg.n_enc_layers)),
+        "enc_norm": init_norm(cfg.norm, d, dtype),
+        "dec": jax.vmap(dec_block)(jax.random.split(ks[2], cfg.n_layers)),
+        "final_norm": init_norm(cfg.norm, d, dtype),
+    }
+
+
+def init_encdec_states(key, cfg: ModelConfig, batch: int, seq: int,
+                       dtype=jnp.float32) -> dict:
+    """ASI warm-start states (train path). seq = decoder length."""
+    ks = jax.random.split(key, 2)
+    se = cfg.enc_seq
+
+    def enc_state(k):
+        k1, k2 = jax.random.split(k)
+        return {"attn": init_attention_state(k1, cfg, batch, se, dtype),
+                "mlp": init_mlp_state(k2, cfg, batch, se, dtype=dtype)}
+
+    def dec_state(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"self_attn": init_attention_state(k1, cfg, batch, seq, dtype),
+                "cross_attn": {},  # cross-attn K/V from fixed memory: no ASI
+                "mlp": init_mlp_state(k2, cfg, batch, seq, dtype=dtype)}
+
+    return {"enc": jax.vmap(enc_state)(jax.random.split(ks[0], cfg.n_enc_layers)),
+            "dec": jax.vmap(dec_state)(jax.random.split(ks[1], cfg.n_layers))}
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig, *,
+           states=None, policy: MeshPolicy | None = None):
+    """frames (B, S_enc, d) from the frontend stub -> memory (B, S_enc, d)."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + sinusoidal_embedding(x.shape[1], cfg.d_model, x.dtype)[None]
+    with_states = states is not None
+
+    def body(h, xs):
+        p, st = xs
+        a, _, ns_a = apply_attention(p["attn"], apply_norm(cfg.norm, p["ln1"], h),
+                                     cfg, causal=False,
+                                     states=st["attn"] if with_states else None,
+                                     policy=policy)
+        h = h + a
+        f, ns_m = apply_mlp(p["mlp"], apply_norm(cfg.norm, p["ln2"], h), cfg,
+                            st["mlp"] if with_states else None, policy)
+        return h + f, {"attn": ns_a if with_states else {},
+                       "mlp": ns_m if with_states else {}}
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    # scan over stacked encoder blocks; disabled states ride as a leafless
+    # dict (no stacking dim needed — no leaves)
+    st_xs = states["enc"] if with_states else {"attn": {}, "mlp": {}}
+    if with_states:
+        x, ns = jax.lax.scan(body, x, (params["enc"], st_xs))
+    else:
+        x, ns = jax.lax.scan(lambda h, p: body(h, (p, st_xs)), x, params["enc"])
+    return apply_norm(cfg.norm, params["enc_norm"], x), ns
+
+
+def _dec_body(cfg, policy, with_states, with_cache, pos):
+    def body(h_mem, xs):
+        h, mem = h_mem
+        p, st, cache = xs
+        a, nkv, ns_s = apply_attention(
+            p["self_attn"], apply_norm(cfg.norm, p["ln1"], h), cfg,
+            causal=True, cache=cache["kv"] if with_cache else None, pos=pos,
+            states=st["self_attn"] if with_states else None, policy=policy)
+        h = h + a
+        c, _, _ = apply_attention(
+            p["cross_attn"], apply_norm(cfg.norm, p["ln_x"], h), cfg,
+            causal=False, kv_memory=mem, policy=policy)
+        h = h + c
+        f, ns_m = apply_mlp(p["mlp"], apply_norm(cfg.norm, p["ln2"], h), cfg,
+                            st["mlp"] if with_states else None, policy)
+        h = h + f
+        ns = {"self_attn": ns_s if with_states else {},
+              "cross_attn": {}, "mlp": ns_m if with_states else {}}
+        nc = {"kv": nkv} if with_cache else {}
+        return (h, mem), (ns, nc)
+    return body
+
+
+def decode_train(params, tokens, memory, cfg: ModelConfig, *, states=None,
+                 policy: MeshPolicy | None = None):
+    """Teacher-forced decoder pass. tokens (B, S) -> logits (B, S, V)."""
+    x = params["embed"]["w"].astype(jnp.float32)[tokens].astype(jnp.dtype(cfg.dtype))
+    x = x + sinusoidal_embedding(x.shape[1], cfg.d_model, x.dtype)[None]
+    with_states = states is not None
+    body = _dec_body(cfg, policy, with_states, with_cache=False, pos=None)
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    st_xs = states["dec"] if with_states else {"self_attn": {}, "cross_attn": {}, "mlp": {}}
+    if with_states:
+        (x, _), (ns, _) = jax.lax.scan(
+            lambda c, xs: body(c, (xs[0], xs[1], {})),
+            (x, memory), (params["dec"], st_xs))
+    else:
+        (x, _), (ns, _) = jax.lax.scan(
+            lambda c, p: body(c, (p, st_xs, {})),
+            (x, memory), params["dec"])
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["w"])
+    return shard(logits, policy, "batch", "seq", "model"), ns
+
+
+def encdec_loss(params, batch: dict, cfg: ModelConfig, *, states=None,
+                policy: MeshPolicy | None = None):
+    """batch: {frames (B,S_enc,d), tokens (B,S), labels (B,S)}."""
+    memory, ns_enc = encode(params, batch["frames"], cfg,
+                            states=states, policy=policy)
+    logits, ns_dec = decode_train(params, batch["tokens"], memory, cfg,
+                                  states=states, policy=policy)
+    from repro.nn.losses import masked_xent
+
+    mask = (batch["labels"] >= 0).astype(jnp.float32)
+    ce = masked_xent(logits, jnp.maximum(batch["labels"], 0), mask)
+    ns = {"enc": ns_enc, "dec": ns_dec} if states is not None else None
+    return ce, (ns, {"ce": ce})
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, seq: int,
+                      dtype=jnp.bfloat16) -> dict:
+    """Self-attn KV caches for all decoder layers (stacked)."""
+    one = init_cache(cfg, batch, seq, window=0, dtype=dtype)
+    return {"kv": jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)}
+
+
+def encdec_decode_step(params, token, memory, caches, pos, cfg: ModelConfig, *,
+                       policy: MeshPolicy | None = None):
+    """One decode step. token (B,1); memory (B,S_enc,d); returns (logits, caches)."""
+    x = params["embed"]["w"].astype(jnp.float32)[token].astype(jnp.dtype(cfg.dtype))
+    pe = sinusoidal_embedding(cfg.max_seq, cfg.d_model, x.dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(pe, pos, 1, axis=0)[None]
+    body = _dec_body(cfg, policy, with_states=False, with_cache=True, pos=pos)
+    st_xs = {"self_attn": {}, "cross_attn": {}, "mlp": {}}
+    (x, _), (_, nc) = jax.lax.scan(
+        lambda c, xs: body(c, (xs[0], st_xs, {"kv": xs[1]})),
+        (x, memory), (params["dec"], caches["kv"]))
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["w"])
+    return logits[:, 0], nc

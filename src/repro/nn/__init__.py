@@ -1,0 +1,1 @@
+"""Neural-network substrate: layers used by every architecture."""

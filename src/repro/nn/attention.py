@@ -1,0 +1,318 @@
+"""Grouped-query attention with causal / sliding-window / cross variants,
+chunked (flash-style) computation, and full + rolling KV caches.
+
+Shapes: hidden (B, S, d); heads laid out (B, S, H, Dh). GQA repeats each of
+the KVH key/value heads across G = H // KVH query heads via a reshape —
+no materialized repetition.
+
+Long-sequence prefill/train uses :func:`chunked_attention` — an online-
+softmax scan over KV chunks that never materializes the (S, S) score matrix
+(the pure-JAX analogue of the Pallas flash kernel in repro/kernels; XLA maps
+it to a fori loop with O(S * chunk) live memory).
+
+Sliding-window layers keep a ROLLING cache of ``window`` slots: absolute
+position p lives in slot p % W; slot validity and relative distance are
+reconstructed arithmetically (see ``_rolling_slot_positions``) so decode is
+O(W) compute and memory regardless of sequence length — this is what makes
+`long_500k` decode cheap for gemma3/mixtral local layers.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import MeshPolicy, shard
+from repro.nn.linear import apply_linear, asi_spec, init_linear
+from repro.nn.rotary import apply_rope
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_cache, KVH, Dh)
+    v: jax.Array  # (B, S_cache, KVH, Dh)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init / projection plumbing
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, h, kvh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    w = cfg.wasi
+    return {
+        "wq": init_linear(kq, d, h * dh, w, role="attn", bias=cfg.qkv_bias, dtype=dtype),
+        "wk": init_linear(kk, d, kvh * dh, w, role="attn", bias=cfg.qkv_bias, dtype=dtype),
+        "wv": init_linear(kv, d, kvh * dh, w, role="attn", bias=cfg.qkv_bias, dtype=dtype),
+        "wo": init_linear(ko, h * dh, d, w, role="attn", dtype=dtype,
+                          scale=(h * dh) ** -0.5 / max(cfg.total_pattern_layers, 1) ** 0.5),
+    }
+
+
+def init_attention_state(key, cfg: ModelConfig, batch: int, seq: int,
+                         dtype=jnp.float32) -> dict:
+    """ASI warm-start states for the four projections (train path)."""
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    w = cfg.wasi
+    from repro.nn.linear import wasi_applies
+    if not (w.compress_acts and wasi_applies(w, "attn")):
+        return {}
+    return {
+        "wq": asi_spec(ks[0], (batch, seq, d), w, dtype),
+        "wk": asi_spec(ks[1], (batch, seq, d), w, dtype),
+        "wv": asi_spec(ks[2], (batch, seq, d), w, dtype),
+        "wo": asi_spec(ks[3], (batch, seq, h * dh), w, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q (B,Sq,KVH,G,Dh) x k (B,Sk,KVH,Dh) -> (B,KVH,G,Sq,Sk)."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k)
+
+
+def _gqa_combine(p: jax.Array, v: jax.Array) -> jax.Array:
+    """p (B,KVH,G,Sq,Sk) x v (B,Sk,KVH,Dh) -> (B,Sq,KVH,G,Dh)."""
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+
+
+def _mask_bias(sq: int, sk: int, q_offset, *, causal: bool,
+               window: int) -> jax.Array:
+    """Additive mask (Sq, Sk). q position = q_offset + row index."""
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def dense_attention(q, k, v, *, causal: bool, window: int = 0,
+                    q_offset=0) -> jax.Array:
+    """Reference attention materializing scores. q (B,Sq,H,Dh)."""
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, dh) * (dh ** -0.5)
+    s = _gqa_scores(qg, k).astype(jnp.float32)
+    s = s + _mask_bias(sq, k.shape[1], q_offset, causal=causal, window=window)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = _gqa_combine(p, v)
+    return o.reshape(b, sq, h, dh)
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      q_offset=0, chunk: int = 1024,
+                      q_chunk: int = 1024) -> jax.Array:
+    """Online-softmax attention, tiled over BOTH query blocks and KV chunks
+    (flash semantics, pure JAX).
+
+    Live score memory: O(q_chunk * chunk) per (B, KVH, G). Both the KV-scan
+    body and the q-block body are jax.checkpoint'ed so the BACKWARD pass
+    recomputes scores per tile instead of stacking them across the scan —
+    without this, autodiff through the scan saves every chunk's f32 scores
+    (measured: 7 GiB/device at train_4k before the fix; EXPERIMENTS.md §Perf).
+    """
+    b, sq, h, dh = q.shape
+    if sq > q_chunk:
+        nq = -(-sq // q_chunk)
+        pad = nq * q_chunk - sq
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+        qb = qp.reshape(b, nq, q_chunk, h, dh)
+
+        @jax.checkpoint
+        def qblock(qi, idx):
+            return chunked_attention(qi, k, v, causal=causal, window=window,
+                                     q_offset=q_offset + idx * q_chunk,
+                                     chunk=chunk, q_chunk=q_chunk)
+
+        out = jax.lax.map(lambda t: qblock(t[0], t[1]),
+                          (jnp.moveaxis(qb, 1, 0), jnp.arange(nq)))
+        out = jnp.moveaxis(out, 0, 1).reshape(b, nq * q_chunk, h, dh)
+        return out[:, :sq]
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    sk_orig = sk
+    if sk % chunk != 0:
+        pad = chunk - sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        sk = sk + pad
+    n_chunks = sk // chunk
+    qg = (q.reshape(b, sq, kvh, g, dh) * (dh ** -0.5)).astype(q.dtype)
+    kc = k.reshape(b, n_chunks, chunk, kvh, dh)
+    vc = v.reshape(b, n_chunks, chunk, kvh, dh)
+
+    qpos = q_offset + jnp.arange(sq)
+
+    @jax.checkpoint
+    def step(carry, xs):
+        m, l, acc = carry
+        kb, vb, c_idx = xs
+        s = _gqa_scores(qg, kb).astype(jnp.float32)      # (B,KVH,G,Sq,chunk)
+        kpos = c_idx * chunk + jnp.arange(chunk)
+        ok = jnp.ones((sq, chunk), bool)
+        if causal:
+            ok &= kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            ok &= kpos[None, :] > qpos[:, None] - window
+        if sk != sk_orig:
+            ok &= (kpos < sk_orig)[None, :]
+        s = s + jnp.where(ok, 0.0, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale_old = jnp.exp(m - m_new)
+        l_new = l * scale_old + p.sum(axis=-1)
+        acc_new = acc * scale_old[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(q.dtype), vb).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, sq, dh), jnp.float32)
+    kc_t = jnp.moveaxis(kc, 1, 0)
+    vc_t = jnp.moveaxis(vc, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kc_t, vc_t, jnp.arange(n_chunks)))
+    o = acc / jnp.maximum(l[..., None], 1e-30)
+    o = jnp.moveaxis(o.reshape(b, kvh * g, sq, dh), 1, 2)
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rolling-window cache arithmetic
+# ---------------------------------------------------------------------------
+
+def _rolling_slot_positions(pos: jax.Array, w: int) -> jax.Array:
+    """Absolute position stored in each of the W slots when the writer is at
+    absolute position ``pos`` (already written). Slots never written hold a
+    negative value (=> masked)."""
+    slots = jnp.arange(w)
+    return pos - (pos - slots) % w  # in (pos-W, pos]; negative if unwritten
+
+
+def decode_attention(q, cache: KVCache, pos, *, window: int = 0) -> jax.Array:
+    """Single-token decode. q (B,1,H,Dh); cache holds positions <= pos.
+
+    For full caches, slot index == absolute position; for rolling caches
+    (cache length == window) slot positions are reconstructed.
+    """
+    b, _, h, dh = q.shape
+    s_cache = cache.k.shape[1]
+    kvh = cache.k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, 1, kvh, g, dh) * (dh ** -0.5)
+    s = _gqa_scores(qg, cache.k).astype(jnp.float32)   # (B,KVH,G,1,S)
+    if window > 0 and s_cache == window:
+        slot_pos = _rolling_slot_positions(pos, window)
+        ok = slot_pos >= 0
+    else:
+        kpos = jnp.arange(s_cache)
+        ok = kpos <= pos
+        if window > 0:
+            ok &= kpos > pos - window
+    s = s + jnp.where(ok, 0.0, NEG_INF)[None, None, None, None, :]
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = _gqa_combine(p, cache.v)
+    return o.reshape(b, 1, h, dh)
+
+
+def cache_update(cache: KVCache, k_new, v_new, pos, *, window: int = 0) -> KVCache:
+    """Write one token's K/V at ``pos`` (rolling if cache len == window)."""
+    s_cache = cache.k.shape[1]
+    slot = pos % window if (window > 0 and s_cache == window) else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
+    return KVCache(k=k, v=v)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, *, window: int = 0,
+               dtype=jnp.bfloat16) -> KVCache:
+    kvh, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    s = min(seq, window) if window > 0 else seq
+    shape = (batch, s, kvh, dh)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Full block-level attention apply
+# ---------------------------------------------------------------------------
+
+def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                    causal: bool = True, window: int = 0,
+                    cache: KVCache | None = None, pos=None,
+                    states: dict | None = None,
+                    policy: MeshPolicy | None = None,
+                    kv_memory: jax.Array | None = None,
+                    chunked_threshold: int = 2048):
+    """Attention sublayer (projections + core + output projection).
+
+    Modes:
+      - train/prefill: cache None      -> full (chunked) attention over x
+      - decode:        cache given     -> one-token step, cache updated
+      - cross:         kv_memory given -> keys/values from encoder memory
+    Returns (out, new_cache, new_states).
+    """
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    b, sq, _ = x.shape
+    st = states or {}
+    new_st = dict(st)
+
+    def maybe_rope(t, positions):
+        # rope_theta <= 0 disables RoPE (whisper: absolute sinusoidal embeds)
+        if cfg.rope_theta <= 0:
+            return t
+        return apply_rope(t, positions, cfg.rope_theta)
+
+    def proj(name, inp):
+        y, ns = apply_linear(p[name], inp, cfg.wasi, st.get(name))
+        if ns is not None:
+            new_st[name] = ns
+        return y
+
+    q = proj("wq", x).reshape(b, sq, h, dh)
+    if kv_memory is not None:  # cross-attention: KV from encoder memory
+        src = kv_memory
+        k = proj("wk", src).reshape(b, src.shape[1], kvh, dh)
+        v = proj("wv", src).reshape(b, src.shape[1], kvh, dh)
+        o = dense_attention(q, k, v, causal=False)
+        new_cache = cache
+    elif cache is None:  # train / prefill over the full sequence
+        k = proj("wk", x).reshape(b, sq, kvh, dh)
+        v = proj("wv", x).reshape(b, sq, kvh, dh)
+        positions = jnp.arange(sq)
+        q = maybe_rope(q, positions)
+        k = maybe_rope(k, positions)
+        # NOTE: no explicit q/k head-dim constraints — H / KVH are often not
+        # divisible by the model axis (GQA); GSPMD propagates from the
+        # projection outputs without forcing an involuntary reshard.
+        if sq > chunked_threshold:
+            o = chunked_attention(q, k, v, causal=causal, window=window)
+        else:
+            o = dense_attention(q, k, v, causal=causal, window=window)
+        new_cache = None
+    else:  # decode one token at absolute position ``pos``
+        k = proj("wk", x).reshape(b, sq, kvh, dh)
+        v = proj("wv", x).reshape(b, sq, kvh, dh)
+        q = maybe_rope(q, jnp.full((sq,), pos))
+        k = maybe_rope(k, jnp.full((sq,), pos))
+        new_cache = cache_update(cache, k, v, pos, window=window)
+        o = decode_attention(q, new_cache, pos, window=window)
+    o = o.reshape(b, sq, h * dh)
+    o = shard(o, policy, "batch", "seq", "model")
+    out, ns = apply_linear(p["wo"], o, cfg.wasi, st.get("wo"))
+    if ns is not None:
+        new_st["wo"] = ns
+    out = shard(out, policy, "batch", "seq", None)
+    return out, new_cache, new_st

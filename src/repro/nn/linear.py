@@ -1,0 +1,135 @@
+"""Linear layer that is dense, WASI-factored, or ASI-compressed by config.
+
+Every projection in the framework goes through this module, so flipping
+``WasiConfig.method`` swaps the entire model between vanilla / WSI / ASI /
+WASI training with identical call sites. Params are plain dicts:
+
+    dense:    {"w": (O, I) [, "b": (O,)]}
+    factored: {"L": (O, K), "R": (K, I) [, "b": (O,)]}
+
+ASI warm-start state (when activation compression is on) lives in a parallel
+pytree threaded through apply; ``asi_spec`` builds it from activation shapes.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import AsiConfig, WasiConfig
+from repro.core.asi import ASIState, asi_init, asi_project, asi_step
+from repro.core.lowrank_linear import (
+    asi_matmul,
+    wasi_matmul,
+    wasi_matmul_project,
+)
+from repro.core.rank_policy import asi_mode_ranks, static_rank
+
+
+def linear_rank(in_dim: int, out_dim: int, cfg: WasiConfig) -> int:
+    return static_rank(in_dim, out_dim, cfg.rank_frac,
+                       align=cfg.rank_align, min_rank=cfg.min_rank)
+
+
+def wasi_applies(cfg: WasiConfig, role: str) -> bool:
+    """Does WASI treat this linear? role in {mlp, attn, ssm, moe, head}."""
+    if cfg.method == "none" or cfg.scope == "none":
+        return False
+    if role == "head":
+        return False  # embeddings / lm_head stay dense (DESIGN.md §5)
+    if cfg.scope == "mlp":
+        return role in ("mlp", "moe")
+    return True  # scope == "all"
+
+
+def init_linear(key, in_dim: int, out_dim: int, cfg: WasiConfig, *,
+                role: str = "mlp", bias: bool = False, dtype=jnp.float32,
+                scale: float | None = None) -> dict:
+    std = scale if scale is not None else in_dim ** -0.5
+    factored = cfg.factored and wasi_applies(cfg, role)
+    kw, kb = jax.random.split(key)
+    p: dict = {}
+    if factored:
+        k = linear_rank(in_dim, out_dim, cfg)
+        kl, kr = jax.random.split(kw)
+        split = (std / k ** 0.5) ** 0.5
+        p["L"] = (jax.random.normal(kl, (out_dim, k), jnp.float32) * split).astype(dtype)
+        p["R"] = (jax.random.normal(kr, (k, in_dim), jnp.float32) * split).astype(dtype)
+    else:
+        p["w"] = (jax.random.normal(kw, (out_dim, in_dim), jnp.float32) * std).astype(dtype)
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def init_linear_from_dense(w: jax.Array, cfg: WasiConfig, *, role: str = "mlp",
+                           bias=None) -> dict:
+    """Paper-faithful init: factor an existing dense W by truncated SVD at
+    eps (Alg. 1 t=0). Used when converting pretrained checkpoints."""
+    from repro.core.svd import pick_rank, truncated_svd
+
+    p: dict = {}
+    if cfg.factored and wasi_applies(cfg, role):
+        k = pick_rank(w, cfg.epsilon, align=cfg.rank_align)
+        f = truncated_svd(w, k)
+        p["L"], p["R"] = f.L, f.R
+    else:
+        p["w"] = w
+    if bias is not None:
+        p["b"] = bias
+    return p
+
+
+def asi_spec(key, act_shape: Sequence[int], cfg: WasiConfig,
+             dtype=jnp.float32) -> ASIState | None:
+    """Warm-start ASI state for a linear whose input activation has
+    ``act_shape`` (B, N, I) or (B, H, W, I). None if compression is off."""
+    if not cfg.compress_acts:
+        return None
+    a = cfg.asi
+    if len(act_shape) == 3:
+        fracs = (a.batch_frac, a.token_frac, a.feature_frac)
+    else:
+        fracs = (a.batch_frac,) + (a.token_frac,) * (len(act_shape) - 2) + (a.feature_frac,)
+    ranks = asi_mode_ranks(act_shape, fracs, skip_batch=a.skip_batch, align=a.align)
+    return asi_init(key, act_shape, ranks, dtype)
+
+
+def apply_linear(p: dict, x: jax.Array, cfg: WasiConfig,
+                 state: ASIState | None = None):
+    """Apply. Returns (y, new_state) — new_state is None when no ASI."""
+    new_state = None
+
+    def compress(x_):
+        if cfg.asi.frozen:
+            return asi_project(jax.lax.stop_gradient(x_), state), state
+        return asi_step(jax.lax.stop_gradient(x_), state)
+
+    if "L" in p and "w" in p:  # project mode: factored fwd, dense-W gradient
+        if state is not None:
+            xt, new_state = compress(x)
+            y = wasi_matmul_project(x, p["w"], p["L"], p["R"], xt)
+        else:
+            from repro.core.lowrank_linear import wsi_matmul_project_exact
+            y = wsi_matmul_project_exact(x, p["w"], p["L"], p["R"])
+    elif "L" in p:  # factored params (scale branch)
+        if state is not None:
+            xt, new_state = compress(x)
+            y = wasi_matmul(x, p["L"], p["R"], xt)
+        else:
+            h = jnp.einsum("...i,ki->...k", x, p["R"])
+            y = jnp.einsum("...k,ok->...o", h, p["L"])
+    else:
+        if state is not None:
+            xt, new_state = compress(x)
+            y = asi_matmul(x, p["w"], xt)
+        else:
+            y = jnp.einsum("...i,oi->...o", x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y, new_state
+
+
+def linear_out_dim(p: dict) -> int:
+    return p["L"].shape[0] if "L" in p else p["w"].shape[0]

@@ -1,0 +1,364 @@
+"""Mamba-1 (selective scan) and Mamba-2 (SSD) blocks.
+
+TPU adaptation (DESIGN.md §3): the CUDA reference implements the selective
+scan as a fused recurrent kernel over time; on TPU we use
+
+  * Mamba-1: ``jax.lax.associative_scan`` over the (A_bar, B_bar*x) pairs —
+    log-depth, maps to large elementwise VPU ops;
+  * Mamba-2: the SSD *chunked* formulation — intra-chunk work becomes plain
+    (L ⊙ CB^T) matmuls on the MXU and inter-chunk state is a short
+    ``lax.scan`` over chunk summaries. A Pallas kernel for the intra-chunk
+    matmuls lives in repro/kernels/ssd_scan.py.
+
+Decode keeps O(1) recurrent state per layer:
+  Mamba-1 state (B, d_inner, d_state); Mamba-2 state (B, H, dh, d_state);
+  both carry a (B, d_conv-1, d_conv_ch) rolling conv buffer.
+
+Projections (in/out/x/dt) route through nn.linear, so WASI factoring applies
+(the paper's technique on an attention-free architecture — falcon-mamba).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import MeshPolicy, shard
+from repro.nn.linear import apply_linear, asi_spec, init_linear, wasi_applies
+
+
+class MambaState(NamedTuple):
+    ssm: jax.Array   # m1: (B, d_inner, N)   m2: (B, H, dh, N)
+    conv: jax.Array  # rolling conv input buffer (B, d_conv-1, channels)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. x (B, S, C), w (K, C) -> (B, S, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out + b[None, None, :]
+
+
+def _conv_step(state_buf: jax.Array, x_t: jax.Array, w: jax.Array,
+               b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One decode step of the causal conv. state_buf (B, K-1, C), x_t (B, C)."""
+    window = jnp.concatenate([state_buf, x_t[:, None, :]], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window, w) + b[None, :]
+    return window[:, 1:, :], y
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+def init_mamba1(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    ssm = cfg.ssm
+    di = ssm.expand * d
+    n = ssm.d_state
+    dtr = ssm.dt_rank or max(d // 16, 1)
+    ks = jax.random.split(key, 6)
+    w = cfg.wasi
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * di, w, role="ssm", dtype=dtype),
+        "x_proj": init_linear(ks[1], di, dtr + 2 * n, w, role="ssm", dtype=dtype),
+        "dt_proj": init_linear(ks[2], dtr, di, w, role="ssm", bias=True, dtype=dtype),
+        "out_proj": init_linear(ks[3], di, d, w, role="ssm", dtype=dtype,
+                                scale=di ** -0.5),
+        "conv_w": (jax.random.normal(ks[4], (ssm.d_conv, di), jnp.float32)
+                   * ssm.d_conv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))).astype(jnp.float32),
+        "D": jnp.ones((di,), jnp.float32),
+    }
+
+
+def init_mamba1_state(key, cfg: ModelConfig, batch: int, seq: int,
+                      dtype=jnp.float32) -> dict:
+    w = cfg.wasi
+    if not (w.compress_acts and wasi_applies(w, "ssm")):
+        return {}
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    ks = jax.random.split(key, 3)
+    return {
+        "in_proj": asi_spec(ks[0], (batch, seq, d), w, dtype),
+        "x_proj": asi_spec(ks[1], (batch, seq, di), w, dtype),
+        "out_proj": asi_spec(ks[2], (batch, seq, di), w, dtype),
+    }
+
+
+def _selective_scan(u, dt, A, B, C, D, chunk: int = 128):
+    """u (B,S,di), dt (B,S,di), A (di,N), B/C (B,S,N) -> y (B,S,di).
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t u_t ;  y_t = C_t . h_t + D u_t
+
+    Chunked: an outer lax.scan carries the (B,di,N) state across sequence
+    chunks; within a chunk a log-depth associative scan materializes only
+    (B,chunk,di,N) — never the full-sequence state history (which for
+    falcon-mamba at 4k would be tens of GiB). The chunk body is
+    jax.checkpoint'ed so the backward recomputes instead of stacking.
+    """
+    bsz, s, di = u.shape
+    n = B.shape[-1]
+    if s % chunk != 0:
+        chunk = s  # short sequences: single chunk
+    nc = s // chunk
+
+    def compose(x, y):
+        return (y[0] * x[0], y[0] * x[1] + y[1])
+
+    @jax.checkpoint
+    def per_chunk(h0, xs):
+        uc, dtc, Bc, Cc = xs                                    # (B,chunk,..)
+        a = jnp.exp(dtc[..., None] * A[None, None])             # (B,Q,di,N)
+        bu = (dtc * uc)[..., None] * Bc[:, :, None, :]
+        ca, h = jax.lax.associative_scan(compose, (a, bu), axis=1)
+        h = h + ca * h0[:, None]                                # carry in
+        y = jnp.einsum("bsdn,bsn->bsd", h, Cc)
+        return h[:, -1], y
+
+    xs = tuple(jnp.moveaxis(t.reshape(bsz, nc, chunk, *t.shape[2:]), 1, 0)
+               for t in (u, dt, B, C))
+    h0 = jnp.zeros((bsz, di, n), u.dtype)
+    _, ys = jax.lax.scan(per_chunk, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, di)
+    return y + D[None, None] * u
+
+
+def apply_mamba1(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                 state: MambaState | None = None,
+                 states: dict | None = None,
+                 policy: MeshPolicy | None = None):
+    """Returns (y, new_state, new_asi_states)."""
+    ssm = cfg.ssm
+    di = ssm.expand * cfg.d_model
+    n = ssm.d_state
+    dtr = ssm.dt_rank or max(cfg.d_model // 16, 1)
+    st = states or {}
+    new_st = dict(st)
+
+    def lin(name, inp):
+        y, ns = apply_linear(p[name], inp, cfg.wasi, st.get(name))
+        if ns is not None:
+            new_st[name] = ns
+        return y
+
+    xz = lin("in_proj", x)                                      # (B,S,2*di)
+    xz = shard(xz, policy, "batch", "seq", "model")
+    u, z = jnp.split(xz, 2, axis=-1)
+    A = -jnp.exp(p["A_log"])
+
+    if state is None:  # train / prefill
+        u = _causal_conv(u, p["conv_w"], p["conv_b"])
+        u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+        dbc = lin("x_proj", u)
+        dt_r, B, C = jnp.split(dbc, [dtr, dtr + n], axis=-1)
+        dt = jax.nn.softplus(lin("dt_proj", dt_r).astype(jnp.float32))
+        y = _selective_scan(u.astype(jnp.float32), dt, A,
+                            B.astype(jnp.float32), C.astype(jnp.float32), p["D"])
+        new_state = None
+    else:  # decode one token: x (B,1,d)
+        u1 = u[:, 0]
+        conv_buf, u1 = _conv_step(state.conv, u1, p["conv_w"], p["conv_b"])
+        u1 = jax.nn.silu(u1.astype(jnp.float32)).astype(x.dtype)
+        dbc = lin("x_proj", u1[:, None, :])[:, 0]
+        dt_r, B, C = jnp.split(dbc, [dtr, dtr + n], axis=-1)
+        dt = jax.nn.softplus(lin("dt_proj", dt_r[:, None, :])[:, 0].astype(jnp.float32))
+        a = jnp.exp(dt[..., None] * A[None])                    # (B,di,N)
+        h = a * state.ssm + (dt * u1.astype(jnp.float32))[..., None] * B[:, None, :].astype(jnp.float32)
+        y = jnp.einsum("bdn,bn->bd", h, C.astype(jnp.float32)) + p["D"][None] * u1.astype(jnp.float32)
+        y = y[:, None, :]
+        new_state = MambaState(ssm=h, conv=conv_buf)
+
+    y = (y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    out = lin("out_proj", y)
+    return shard(out, policy, "batch", "seq", None), new_state, new_st
+
+
+def init_mamba1_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MambaState:
+    di = cfg.ssm.expand * cfg.d_model
+    return MambaState(
+        ssm=jnp.zeros((batch, di, cfg.ssm.d_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm.d_conv - 1, di), dtype))
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD, chunked)
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    ssm = cfg.ssm
+    di = ssm.expand * d
+    n = ssm.d_state
+    nh = di // ssm.head_dim
+    ks = jax.random.split(key, 5)
+    w = cfg.wasi
+    # Sharding-aligned projection split (DESIGN.md §4): a fused [u|z|B|C|dt]
+    # projection puts split boundaries inside model-axis shards (involuntary
+    # reshard of the full (B,S,14k+) tensor per layer — measured 150 GiB on
+    # zamba2). in_proj emits [u|z] (2*di, boundary at di aligns with any
+    # 2^k-way sharding); the tiny B/C/dt head is a separate REPLICATED
+    # projection, and the depthwise convs are split the same way.
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * di, w, role="ssm", dtype=dtype),
+        "bcdt_proj": init_linear(ks[1], d, 2 * n + nh, w, role="ssm_small",
+                                 dtype=dtype),
+        "out_proj": init_linear(ks[2], di, d, w, role="ssm", dtype=dtype,
+                                scale=di ** -0.5),
+        "conv_w": (jax.random.normal(ks[3], (ssm.d_conv, di), jnp.float32)
+                   * ssm.d_conv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "conv_w_bc": (jax.random.normal(ks[4], (ssm.d_conv, 2 * n), jnp.float32)
+                      * ssm.d_conv ** -0.5).astype(dtype),
+        "conv_b_bc": jnp.zeros((2 * n,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+    }
+
+
+def init_mamba2_state(key, cfg: ModelConfig, batch: int, seq: int,
+                      dtype=jnp.float32) -> dict:
+    w = cfg.wasi
+    if not (w.compress_acts and wasi_applies(w, "ssm")):
+        return {}
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    ks = jax.random.split(key, 3)
+    return {
+        "in_proj": asi_spec(ks[0], (batch, seq, d), w, dtype),
+        "bcdt_proj": asi_spec(ks[2], (batch, seq, d), w, dtype),
+        "out_proj": asi_spec(ks[1], (batch, seq, di), w, dtype),
+    }
+
+
+def _ssd_chunked(u, dt, A, B, C, D, chunk: int):
+    """SSD (Mamba-2) chunked scan.
+
+    u (B,S,H,dh); dt (B,S,H) >0; A (H,)<0; B,C (B,S,N); D (H,).
+    Within each chunk of length Q: y_intra = (L ⊙ (C B^T)) (dt u), where
+    L[i,j] = exp(sum_{j<k<=i} dt_k A) for j<=i. Across chunks a scan carries
+    the (H, dh, N) state. All heavy ops are matmuls (MXU-friendly).
+    """
+    b, s, h, dh = u.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, "sequence must be divisible by SSD chunk"
+    nc = s // chunk
+    uc = u.reshape(b, nc, chunk, h, dh)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    @jax.checkpoint
+    def per_chunk(s_prev, xs):
+        """One chunk: intra-chunk quadratic + inter-chunk state pass.
+        Live memory O(B*Q*Q*H) for this chunk only (scan, not batched)."""
+        ucb, dtb, Bb, Cb = xs                               # (B,Q,H,dh) etc.
+        da = dtb * A[None, None, :]                         # (B,Q,H)
+        cum = jnp.cumsum(da, axis=1)
+        li = cum[:, :, None, :] - cum[:, None, :, :]        # (B,Q,Q,H)
+        L = jnp.where(tri[None, :, :, None], jnp.exp(li), 0.0)
+        cbm = jnp.einsum("bqn,bkn->bqk", Cb, Bb)            # (B,Q,Q)
+        du = dtb[..., None] * ucb                           # (B,Q,H,dh)
+        y_intra = jnp.einsum("bqkh,bkhd->bqhd", cbm[..., None] * L, du)
+        # inter-chunk contribution from carried state
+        decay_in = jnp.exp(cum)                             # (B,Q,H)
+        y_inter = jnp.einsum("bqn,bhdn,bqh->bqhd", Cb, s_prev, decay_in)
+        # update carried state with this chunk's summary
+        decay_out = jnp.exp(cum[:, -1:, :] - cum)           # (B,Q,H)
+        s_c = jnp.einsum("bqh,bqhd,bqn->bhdn", decay_out, du, Bb)
+        chunk_decay = jnp.exp(jnp.sum(da, axis=1))          # (B,H)
+        s_new = chunk_decay[..., None, None] * s_prev + s_c
+        return s_new, y_intra + y_inter
+
+    s0 = jnp.zeros((b, h, dh, n), u.dtype)
+    xs = (jnp.moveaxis(uc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+    _, ys = jax.lax.scan(per_chunk, s0, xs)                 # (NC,B,Q,H,dh)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, dh)
+    return y + D[None, None, :, None] * u
+
+
+def apply_mamba2(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                 state: MambaState | None = None,
+                 states: dict | None = None,
+                 policy: MeshPolicy | None = None):
+    """Returns (y, new_state, new_asi_states)."""
+    ssm = cfg.ssm
+    di = ssm.expand * cfg.d_model
+    n = ssm.d_state
+    nh = di // ssm.head_dim
+    dh = ssm.head_dim
+    st = states or {}
+    new_st = dict(st)
+
+    def lin(name, inp):
+        y, ns = apply_linear(p[name], inp, cfg.wasi, st.get(name))
+        if ns is not None:
+            new_st[name] = ns
+        return y
+
+    proj = lin("in_proj", x)                                # (B,S,2di)
+    proj = shard(proj, policy, "batch", "seq", "model")
+    u, z = jnp.split(proj, 2, axis=-1)                      # aligned split
+    bcdt = lin("bcdt_proj", x)                              # (B,S,2n+nh) repl.
+    Bv, Cv, dt_raw = jnp.split(bcdt, [n, 2 * n], axis=-1)
+    A = -jnp.exp(p["A_log"])
+
+    if state is None:
+        u = _causal_conv(u, p["conv_w"], p["conv_b"])       # sharded channels
+        u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
+        bc = _causal_conv(jnp.concatenate([Bv, Cv], axis=-1),
+                          p["conv_w_bc"], p["conv_b_bc"])   # replicated, tiny
+        bc = jax.nn.silu(bc.astype(jnp.float32)).astype(x.dtype)
+        Bv, Cv = jnp.split(bc, 2, axis=-1)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None])
+        bsz, s, _ = u.shape
+        y = _ssd_chunked(u.reshape(bsz, s, nh, dh).astype(jnp.float32),
+                         dt, A, Bv.astype(jnp.float32), Cv.astype(jnp.float32),
+                         p["D"], min(ssm.chunk, s))
+        y = y.reshape(bsz, s, di)
+        new_state = None
+    else:  # decode
+        conv_u, conv_bc = state.conv
+        conv_u, u1 = _conv_step(conv_u, u[:, 0], p["conv_w"], p["conv_b"])
+        u1 = jax.nn.silu(u1.astype(jnp.float32))
+        bc1 = jnp.concatenate([Bv[:, 0], Cv[:, 0]], axis=-1)
+        conv_bc, bc1 = _conv_step(conv_bc, bc1, p["conv_w_bc"], p["conv_b_bc"])
+        bc1 = jax.nn.silu(bc1.astype(jnp.float32))
+        B1, C1 = jnp.split(bc1, 2, axis=-1)
+        conv_buf = (conv_u, conv_bc)
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"][None])
+        uh = u1.reshape(-1, nh, dh)
+        a = jnp.exp(dt * A[None])                           # (B,H)
+        h_new = (a[..., None, None] * state.ssm
+                 + (dt[..., None] * uh)[..., None] * B1[:, None, None, :])
+        y = jnp.einsum("bhdn,bn->bhd", h_new, C1) + p["D"][None, :, None] * uh
+        y = y.reshape(-1, 1, di)
+        new_state = MambaState(ssm=h_new, conv=conv_buf)
+
+    # gated RMSNorm (mamba2 norm before out_proj)
+    yz = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yz * yz, axis=-1, keepdims=True)
+    yz = yz * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"].astype(jnp.float32)
+    out = lin("out_proj", yz.astype(x.dtype))
+    return shard(out, policy, "batch", "seq", None), new_state, new_st
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MambaState:
+    ssm = cfg.ssm
+    di = ssm.expand * cfg.d_model
+    nh = di // ssm.head_dim
+    return MambaState(
+        ssm=jnp.zeros((batch, nh, ssm.head_dim, ssm.d_state), jnp.float32),
+        conv=(jnp.zeros((batch, ssm.d_conv - 1, di), dtype),
+              jnp.zeros((batch, ssm.d_conv - 1, 2 * ssm.d_state), dtype)))

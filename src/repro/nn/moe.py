@@ -1,0 +1,158 @@
+"""Mixture-of-Experts FFN: GShard-style capacity dispatch, top-k routing,
+DeepSeek-style shared experts, expert- or tensor-parallel expert banks.
+
+Dispatch plan (per token group of size S):
+  router logits (S, E) -> top-k -> capacity positions via cumsum over the
+  expert axis -> dispatch one-hot (S, E, C) -> expert inputs (E, C, d) ->
+  batched expert FFN -> combine weighted by router probs.
+
+Tokens over capacity are DROPPED (standard GShard; capacity_factor sizes C).
+EP: the expert axis of the (E, C, d) buffers is sharded on the `model` mesh
+axis, which makes XLA materialize the dispatch as an all-to-all — exactly
+the production communication pattern (DESIGN.md §4).
+
+WASI on experts: per-expert factor banks L (E, O, K), R (E, K, I) — factored
+weights, exact autodiff gradients (capacity-bounded activations make ASI's
+residual win marginal here; noted in DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import MeshPolicy, shard
+from repro.nn.linear import linear_rank, wasi_applies
+
+
+def _init_bank(key, n: int, in_dim: int, out_dim: int, cfg, *, factored: bool,
+               dtype, scale=None) -> dict:
+    std = scale if scale is not None else in_dim ** -0.5
+    if factored:
+        k = linear_rank(in_dim, out_dim, cfg.wasi)
+        kl, kr = jax.random.split(key)
+        split = (std / k ** 0.5) ** 0.5
+        return {
+            "L": (jax.random.normal(kl, (n, out_dim, k), jnp.float32) * split).astype(dtype),
+            "R": (jax.random.normal(kr, (n, k, in_dim), jnp.float32) * split).astype(dtype),
+        }
+    return {"w": (jax.random.normal(key, (n, out_dim, in_dim), jnp.float32) * std).astype(dtype)}
+
+
+def _bank_matmul(p: dict, x: jax.Array) -> jax.Array:
+    """x (E, C, I) through per-expert weights -> (E, C, O)."""
+    if "L" in p:
+        h = jnp.einsum("eci,eki->eck", x, p["R"])
+        return jnp.einsum("eck,eok->eco", h, p["L"])
+    return jnp.einsum("eci,eoi->eco", x, p["w"])
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    f = m.expert_d_ff or cfg.d_ff
+    factored = cfg.wasi.factored and wasi_applies(cfg.wasi, "moe")
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    p = {
+        "router": {"w": (jax.random.normal(kr, (m.n_experts, d), jnp.float32)
+                          * d ** -0.5).astype(jnp.float32)},
+        "experts": {
+            "w_gate": _init_bank(kg, m.n_experts, d, f, cfg, factored=factored, dtype=dtype),
+            "w_up": _init_bank(ku, m.n_experts, d, f, cfg, factored=factored, dtype=dtype),
+            "w_down": _init_bank(kd, m.n_experts, f, d, cfg, factored=factored,
+                                 dtype=dtype, scale=f ** -0.5),
+        },
+    }
+    if m.n_shared > 0:
+        kg2, ku2, kd2 = jax.random.split(ks, 3)
+        p["shared"] = {
+            "w_gate": _init_bank(kg2, m.n_shared, d, f, cfg, factored=factored, dtype=dtype),
+            "w_up": _init_bank(ku2, m.n_shared, d, f, cfg, factored=factored, dtype=dtype),
+            "w_down": _init_bank(kd2, m.n_shared, f, d, cfg, factored=factored,
+                                 dtype=dtype, scale=f ** -0.5),
+        }
+    return p
+
+
+def _expert_ffn(bank: dict, x: jax.Array) -> jax.Array:
+    g = _bank_matmul(bank["w_gate"], x)
+    u = _bank_matmul(bank["w_up"], x)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return _bank_matmul(bank["w_down"], h)
+
+
+def moe_capacity(group_tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(m.capacity_factor * group_tokens * m.top_k / m.n_experts)
+    return max(8, -(-c // 8) * 8)  # pad to multiple of 8
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig,
+              policy: MeshPolicy | None = None):
+    """x (B, S, d) -> (y, aux_loss). Routing in fp32.
+
+    The batch dim doubles as the GShard *group* dim: dispatch/capacity are
+    computed per batch row, so the position cumsum never crosses DP shards
+    and the (B, E, C, d) buffers shard batch-on-data / expert-on-model.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    cap = moe_capacity(s, cfg)
+    e_axis = "model" if m.shard == "expert" else None
+
+    logits = jnp.einsum("bsd,ed->bse", x.astype(jnp.float32), p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)                     # (B, S, E)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)                # (B, S, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    def group(xg, top_pg, top_eg):
+        """One group: xg (S, d); returns (y (S, d))."""
+        onehot = jax.nn.one_hot(top_eg, m.n_experts, dtype=jnp.int32)  # (S,K,E)
+        flat = onehot.reshape(s * m.top_k, m.n_experts)
+        pos = jnp.cumsum(flat, axis=0) - flat
+        pos = (pos * flat).sum(-1).reshape(s, m.top_k)                 # (S, K)
+        fits = pos < cap
+        gate = top_pg * fits
+
+        e_idx = top_eg.reshape(-1)
+        keep = fits.reshape(-1)
+        safe_c = jnp.where(keep, pos.reshape(-1), cap - 1)
+        tok_idx = jnp.repeat(jnp.arange(s), m.top_k)
+        disp = jnp.zeros((m.n_experts, cap, d), xg.dtype)
+        disp = disp.at[e_idx, safe_c].add(
+            jnp.where(keep[:, None], xg[tok_idx], 0).astype(xg.dtype))
+        return disp, (e_idx, safe_c, keep, gate)
+
+    disp, meta = jax.vmap(group)(x, top_p, top_e)               # (B,E,C,d)
+    # EP communication pattern: the scatter above runs BATCH-LOCAL (first
+    # constraint), then ONE reshard moves expert rows to their owners (the
+    # all-to-all); constraining the scatter output expert-sharded directly
+    # makes XLA gather the whole buffer around the scatter (measured 45 GiB
+    # of collectives on deepseek — EXPERIMENTS.md §Perf).
+    disp = shard(disp, policy, "batch", None, None, None)
+    disp = shard(disp, policy, "batch", e_axis, None, None)
+    # fold groups into the expert batch: (E, B*C, d) expert-major layout
+    out = _expert_ffn(p["experts"],
+                      disp.transpose(1, 0, 2, 3).reshape(m.n_experts, b * cap, d))
+    out = out.reshape(m.n_experts, b, cap, d).transpose(1, 0, 2, 3)
+    out = shard(out, policy, "batch", e_axis, None, None)
+    out = shard(out, policy, "batch", None, None, None)  # back for the gather
+
+    def combine(out_g, meta_g):
+        e_idx, safe_c, keep, gate = meta_g
+        gathered = out_g[e_idx, safe_c]                          # (S*K, d)
+        gathered = jnp.where(keep[:, None], gathered, 0)
+        return (gathered.reshape(s, m.top_k, d)
+                * gate[..., None].astype(out_g.dtype)).sum(axis=1)
+
+    y = jax.vmap(combine)(out, meta)                             # (B, S, d)
+
+    if m.n_shared > 0:
+        xs = jnp.broadcast_to(x.reshape(1, b * s, d), (m.n_shared, b * s, d))
+        y = y + _expert_ffn(p["shared"], xs).sum(axis=0).reshape(b, s, d)
+
+    # load-balancing aux loss (Switch-style)
+    me = probs.mean(axis=(0, 1))                                 # (E,)
+    ce = jax.nn.one_hot(top_e[..., 0], m.n_experts).mean(axis=(0, 1))
+    aux = m.n_experts * jnp.sum(me * ce)
+    return y.astype(x.dtype), aux

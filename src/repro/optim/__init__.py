@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (
+    OptState,
+    init_optimizer,
+    optimizer_update,
+)
+from repro.optim.schedule import cosine_schedule, make_schedule
+from repro.optim.clip import clip_by_global_norm, global_norm

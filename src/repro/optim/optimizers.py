@@ -1,0 +1,71 @@
+"""Optimizers built from scratch: SGD(+momentum) — the paper's recipe — and
+AdamW for the scale configs. fp32 master statistics over bf16 params.
+
+WASI synergy: for factored layers the optimizer state lives on (L, R), i.e.
+K(O+I) elements instead of O*I — momentum/adam memory shrinks by the same
+ratio as the weights (reported by benchmarks/fig5_tab1_resources.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: object        # first moment / momentum (pytree or None)
+    nu: object        # second moment (adamw only; pytree or None)
+
+
+def init_optimizer(params, cfg: TrainConfig) -> OptState:
+    zeros = lambda: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    if cfg.optimizer == "sgd":
+        mu = zeros() if cfg.momentum > 0 else None
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=None)
+    if cfg.optimizer == "adamw":
+        return OptState(step=jnp.zeros((), jnp.int32), mu=zeros(), nu=zeros())
+    raise ValueError(cfg.optimizer)
+
+
+def optimizer_update(params, grads, state: OptState, cfg: TrainConfig, lr):
+    """Returns (new_params, new_state). Decoupled weight decay on both."""
+    step = state.step + 1
+    wd = cfg.weight_decay
+
+    if cfg.optimizer == "sgd":
+        if cfg.momentum > 0:
+            mu = jax.tree.map(
+                lambda m, g: cfg.momentum * m + g.astype(jnp.float32),
+                state.mu, grads)
+            upd = mu
+        else:
+            mu = None
+            upd = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        new_params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) - lr * (u + wd * p.astype(jnp.float32))
+                          ).astype(p.dtype),
+            params, upd)
+        return new_params, OptState(step=step, mu=mu, nu=None)
+
+    # adamw
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                      state.nu, grads)
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mhat = m / c1
+        vhat = v / c2
+        return (p.astype(jnp.float32)
+                - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32))
+                ).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, OptState(step=step, mu=mu, nu=nu)

@@ -1,0 +1,21 @@
+"""LR schedules (paper §B.1: cosine annealing from 0.05)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def cosine_schedule(step, base_lr: float, total_steps: int, warmup: int = 0,
+                    final_frac: float = 0.0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0) if warmup > 0 else 1.0
+    t = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return base_lr * warm * (final_frac + (1 - final_frac) * cos)
+
+
+def make_schedule(cfg: TrainConfig):
+    if cfg.schedule == "constant":
+        return lambda step: jnp.asarray(cfg.lr, jnp.float32)
+    return lambda step: cosine_schedule(step, cfg.lr, cfg.steps, cfg.warmup)

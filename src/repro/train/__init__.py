@@ -1,0 +1,2 @@
+from repro.train.step import TrainState, make_train_state, make_train_step
+from repro.train.loop import train_loop

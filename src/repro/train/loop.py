@@ -1,0 +1,54 @@
+"""Fault-tolerant training loop: checkpoint/restart, async saves, step
+timing, straggler hooks. The data pipeline is a pure function of step, so
+restart = restore state + continue at state.step (no reader state).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.config import TrainConfig
+from repro.distributed.fault import RestartPolicy, StepTimer
+from repro.train.step import TrainState
+
+
+def train_loop(state: TrainState, step_fn, batch_fn: Callable[[int], dict],
+               tcfg: TrainConfig, *, log_every: int = 10,
+               ckpt: CheckpointManager | None = None,
+               max_steps: int | None = None,
+               log_fn=print) -> tuple[TrainState, list[dict]]:
+    """Runs up to ``max_steps or tcfg.steps``; resumes from the latest
+    checkpoint if ``ckpt`` has one. Returns (final_state, metrics_history)."""
+    if ckpt is not None:
+        restored_step, restored = ckpt.restore_latest(state)
+        if restored is not None:
+            state = restored
+            log_fn(f"[train] resumed from checkpoint step {restored_step}")
+
+    jit_step = jax.jit(step_fn, donate_argnums=0)
+    total = max_steps or tcfg.steps
+    timer = StepTimer()
+    history = []
+    start = int(state.step)
+    for step in range(start, total):
+        timer.start()
+        batch = batch_fn(step)
+        state, metrics = jit_step(state, batch)
+        if step % log_every == 0 or step == total - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["sec"] = timer.stop()
+            history.append(m)
+            log_fn(f"[train] step {step}: " +
+                   " ".join(f"{k}={v:.4g}" for k, v in m.items() if k != "step"))
+        else:
+            timer.stop()
+        if ckpt is not None and tcfg.checkpoint_every > 0 and \
+                (step + 1) % tcfg.checkpoint_every == 0:
+            ckpt.save_async(step + 1, state)
+    if ckpt is not None:
+        ckpt.save(total, state)
+    return state, history

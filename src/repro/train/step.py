@@ -1,0 +1,174 @@
+"""Train-step assembly: model loss -> grads -> clip -> optimizer -> WASI
+subspace maintenance -> (optional) PowerSGD-compressed DP all-reduce.
+
+One jittable pure function over a single TrainState pytree, so the same
+step lowers for the single-pod (16x16) and multi-pod (2x16x16) meshes in
+launch/dryrun.py and runs eagerly in CPU tests.
+
+WASI maintenance per update mode:
+* factored — every ``refresh_every`` steps, re-orthogonalize each (L, R)
+  pair (wsi_refresh_factored), selected branch-free via jnp.where.
+* project  — insert (L, R) from WSIState for the forward; after the
+  optimizer updates W, run one WSI subspace iteration (paper Alg. 1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.core.project import (
+    init_project_states,
+    project_forward_params,
+    update_project_states,
+)
+from repro.core.wsi import WSIState, wsi_refresh_factored
+from repro.distributed.grad_compress import compress_gradients, init_compression
+from repro.distributed.sharding import MeshPolicy
+from repro.optim import (
+    clip_by_global_norm,
+    init_optimizer,
+    make_schedule,
+    optimizer_update,
+)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    asi: Any            # ASI warm-start states (or None)
+    wsi: Any            # project-mode WSIState dict (or None)
+    psgd: Any           # PowerSGD compression states (or None)
+    step: jax.Array
+
+
+def _map_factored(params, fn):
+    """Apply fn(WSIState) -> WSIState to every {L, R} factor pair."""
+    def walk(node):
+        if isinstance(node, dict):
+            if "L" in node and "R" in node and "w" not in node:
+                st = fn(WSIState(L=node["L"], R=node["R"]))
+                out = dict(node)
+                out["L"], out["R"] = st.L, st.R
+                return out
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        if isinstance(node, tuple) and not hasattr(node, "_fields"):
+            return tuple(walk(v) for v in node)
+        return node
+
+    return walk(params)
+
+
+def make_train_state(key, params, cfg: ModelConfig, tcfg: TrainConfig, *,
+                     asi_states=None, use_epsilon_ranks: bool = False) -> TrainState:
+    wsi = None
+    if cfg.wasi.project:
+        wsi = init_project_states(params, cfg, use_epsilon=use_epsilon_ranks)
+    psgd = None
+    if tcfg.powersgd_rank > 0:
+        psgd = init_compression(key, params, tcfg.powersgd_rank)
+    return TrainState(params=params, opt=init_optimizer(params, tcfg),
+                      asi=asi_states, wsi=wsi, psgd=psgd,
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(loss_fn, cfg: ModelConfig, tcfg: TrainConfig, *,
+                    policy: MeshPolicy | None = None, mean_fn=None):
+    """loss_fn(params, batch, cfg, states=..., policy=...) -> (loss, (ns, metrics)).
+
+    Returns step(state, batch) -> (state, metrics).
+    """
+    schedule = make_schedule(tcfg)
+
+    def step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        params = state.params
+        fwd_params = params
+        if state.wsi is not None:
+            fwd_params = project_forward_params(params, state.wsi)
+
+        if tcfg.microbatch > 1:
+            # gradient accumulation: scan over microbatches slices the batch
+            # leading dim; activations (the HBM peak) shrink by the factor,
+            # grads are averaged, ASI warm-start states thread through.
+            nm = tcfg.microbatch
+
+            def slice_mb(x):
+                b = x.shape[0]
+                return x.reshape((nm, b // nm) + x.shape[1:])
+
+            mbatches = jax.tree.map(slice_mb, batch)
+
+            def mb_step(carry, mb):
+                acc, asi = carry
+                (l, (asi2, mets)), g = jax.value_and_grad(
+                    lambda p: loss_fn(p, mb, cfg, states=asi, policy=policy),
+                    has_aux=True)(fwd_params)
+                acc = jax.tree.map(lambda a, b: a + b / nm, acc, g)
+                return (acc, asi2), (l, mets)
+
+            zero = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), fwd_params)
+            (grads, new_asi), (losses, metset) = jax.lax.scan(
+                mb_step, (zero, state.asi), mbatches)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda m: m.mean(), metset)
+        else:
+            def lf(p):
+                return loss_fn(p, batch, cfg, states=state.asi, policy=policy)
+
+            (loss, (new_asi, metrics)), grads = jax.value_and_grad(
+                lf, has_aux=True)(fwd_params)
+        if state.wsi is not None:
+            # strip gradient entries for the injected L/R (zeros by custom vjp)
+            grads = jax.tree.map(lambda g: g, grads)
+            grads = _strip_lr(grads, params)
+
+        if state.psgd is not None:
+            grads, new_psgd = compress_gradients(grads, state.psgd, mean_fn)
+        else:
+            new_psgd = None
+            if mean_fn is not None:
+                grads = jax.tree.map(mean_fn, grads)
+
+        grads, gnorm = clip_by_global_norm(grads, tcfg.clip_norm)
+        lr = schedule(state.step)
+        new_params, new_opt = optimizer_update(params, grads, state.opt,
+                                               tcfg, lr)
+
+        new_wsi = state.wsi
+        if state.wsi is not None:
+            # paper Alg. 1: one subspace iteration against the updated W
+            new_wsi = update_project_states(new_params, state.wsi)
+        elif cfg.wasi.factored and cfg.wasi.refresh_every > 0:
+            do = (state.step + 1) % cfg.wasi.refresh_every == 0
+            refreshed = _map_factored(new_params, wsi_refresh_factored)
+            new_params = jax.tree.map(
+                lambda a, b: jnp.where(do, a, b), refreshed, new_params)
+
+        metrics = dict(metrics)
+        metrics.update({"loss": loss, "grad_norm": gnorm, "lr": lr})
+        return TrainState(params=new_params, opt=new_opt, asi=new_asi,
+                          wsi=new_wsi, psgd=new_psgd,
+                          step=state.step + 1), metrics
+
+    return step
+
+
+def _strip_lr(grads, params_template):
+    """Zero-out/removal of grads for injected L/R keys absent in the real
+    param tree (project mode: params hold w, fwd tree held w+L+R)."""
+    def walk(g, p):
+        if isinstance(p, dict):
+            return {k: walk(g[k], p[k]) for k in p}
+        if isinstance(p, list):
+            return [walk(a, b) for a, b in zip(g, p)]
+        if isinstance(p, tuple) and not hasattr(p, "_fields"):
+            return tuple(walk(a, b) for a, b in zip(g, p))
+        return g
+
+    return walk(grads, params_template)

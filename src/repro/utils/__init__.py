@@ -1,0 +1,6 @@
+from repro.utils.tree import (
+    tree_bytes,
+    tree_count,
+    tree_map_with_path_str,
+    pretty_bytes,
+)

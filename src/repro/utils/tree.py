@@ -1,0 +1,47 @@
+"""Small pytree utilities used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_count(tree) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes across all leaves (works on arrays and ShapeDtypeStructs)."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        dt = jnp.dtype(x.dtype)
+        total += int(np.prod(x.shape)) * dt.itemsize
+    return total
+
+
+def pretty_bytes(n: int) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0 or unit == "TiB":
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n}B"
+
+
+def tree_map_with_path_str(fn, tree):
+    """tree_map where fn receives ('a/b/c', leaf)."""
+
+    def _fmt(path):
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            elif hasattr(p, "name"):
+                parts.append(str(p.name))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_fmt(p), x), tree)

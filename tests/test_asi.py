@@ -1,0 +1,123 @@
+"""Activation Subspace Iteration (paper Alg. 2, App. A.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.asi import (
+    asi_init,
+    asi_step,
+    compression_ratio,
+    flr_weight_grad_3d,
+    flr_weight_grad_4d,
+    tucker_reconstruct,
+    tucker_rel_error,
+    tucker_storage,
+)
+
+
+def _lowrank_tensor(key, b, n, i, r):
+    u = jax.random.normal(key, (b, n, r))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (r, i))
+    return u @ v
+
+
+def _tucker_tensor(key, dims, ranks):
+    """True Tucker-structured tensor: core x_m U_m (exact at those ranks)."""
+    ks = jax.random.split(key, len(dims) + 1)
+    a = jax.random.normal(ks[0], ranks)
+    for m, (d, r) in enumerate(zip(dims, ranks)):
+        u = jax.random.normal(ks[m + 1], (d, r))
+        a = jnp.moveaxis(jnp.moveaxis(a, m, -1) @ u.T, -1, m)
+    return a
+
+
+def test_exact_on_lowrank_input():
+    key = jax.random.PRNGKey(0)
+    a = _tucker_tensor(key, (4, 24, 48), (3, 6, 8))
+    st_ = asi_init(key, a.shape, (4, 12, 12))  # ranks >= true Tucker ranks
+    for _ in range(4):
+        ft, st_ = asi_step(a, st_)
+    assert float(tucker_rel_error(a, ft)) < 0.05
+
+
+def test_warm_start_improves_iterations():
+    """Error decreases (or stays) across warm-started steps — the PowerSGD
+    property ASI inherits (§3.2)."""
+    key = jax.random.PRNGKey(1)
+    a = _lowrank_tensor(key, 4, 24, 48, 10) + \
+        0.05 * jax.random.normal(key, (4, 24, 48))
+    st_ = asi_init(key, a.shape, (4, 12, 10))
+    errs = []
+    for _ in range(5):
+        ft, st_ = asi_step(a, st_)
+        errs.append(float(tucker_rel_error(a, ft)))
+    assert errs[-1] <= errs[0] + 1e-6
+
+
+def test_identity_mode_exact():
+    """rank == dim => identity factor (None), no error in that mode."""
+    key = jax.random.PRNGKey(2)
+    a = jax.random.normal(key, (3, 16, 32))
+    st_ = asi_init(key, a.shape, (3, 16, 32))  # all full rank
+    ft, st_ = asi_step(a, st_)
+    assert all(u is None for u in ft.us)
+    np.testing.assert_allclose(np.asarray(tucker_reconstruct(ft)),
+                               np.asarray(a), atol=1e-6)
+
+
+@given(b=st.integers(2, 6), n=st.integers(4, 24), i=st.integers(4, 32),
+       seed=st.integers(0, 20))
+@settings(max_examples=15, deadline=None)
+def test_storage_formula(b, n, i, seed):
+    ranks = (b, max(1, n // 2), max(1, i // 2))
+    assert tucker_storage((b, n, i), ranks) == \
+        ranks[0] * ranks[1] * ranks[2] + b * ranks[0] + n * ranks[1] + i * ranks[2]
+    assert compression_ratio((b, n, i), ranks) == pytest.approx(
+        (b * n * i) / tucker_storage((b, n, i), ranks))
+
+
+def test_flr_3d_matches_reconstruction_oracle():
+    """f_LR on factors == dense grad on the reconstruction (both paths)."""
+    key = jax.random.PRNGKey(3)
+    a = jax.random.normal(key, (4, 24, 48))
+    dy = jax.random.normal(jax.random.fold_in(key, 7), (4, 24, 10))
+    # general path (batch compressed, paper-faithful)
+    st_ = asi_init(key, a.shape, (3, 12, 16))
+    ft, _ = asi_step(a, st_)
+    oracle = jnp.einsum("bno,bni->oi", dy, tucker_reconstruct(ft))
+    np.testing.assert_allclose(np.asarray(flr_weight_grad_3d(ft, dy)),
+                               np.asarray(oracle), rtol=1e-3, atol=1e-3)
+    # identity-batch path (scale mode)
+    st2 = asi_init(key, a.shape, (4, 12, 16))
+    ft2, _ = asi_step(a, st2)
+    assert ft2.us[0] is None
+    oracle2 = jnp.einsum("bno,bni->oi", dy, tucker_reconstruct(ft2))
+    np.testing.assert_allclose(np.asarray(flr_weight_grad_3d(ft2, dy)),
+                               np.asarray(oracle2), rtol=1e-3, atol=1e-3)
+
+
+def test_flr_4d_matches_reconstruction_oracle():
+    key = jax.random.PRNGKey(4)
+    a = jax.random.normal(key, (2, 8, 8, 24))
+    dy = jax.random.normal(jax.random.fold_in(key, 7), (2, 8, 8, 6))
+    for ranks in [(2, 4, 4, 8), (2, 8, 8, 8), (1, 4, 4, 8)]:
+        st_ = asi_init(key, a.shape, ranks)
+        ft, _ = asi_step(a, st_)
+        oracle = jnp.einsum("bhwo,bhwi->oi", dy, tucker_reconstruct(ft))
+        got = flr_weight_grad_4d(ft, dy)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(oracle),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_state_shapes_stable_across_steps():
+    """Warm-start state must be jit/scan loop-invariant."""
+    key = jax.random.PRNGKey(5)
+    a = jax.random.normal(key, (4, 16, 32))
+    st_ = asi_init(key, a.shape, (4, 8, 8))
+    ft, st2 = asi_step(a, st_)
+    assert jax.tree.structure(st_) == jax.tree.structure(st2)
+    for u1, u2 in zip(st_.us, st2.us):
+        if u1 is not None:
+            assert u1.shape == u2.shape

@@ -1,0 +1,66 @@
+"""Checkpoint atomicity, roundtrip, retention, restart."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 8)),
+            "b": [jnp.arange(3), {"c": jnp.float32(7.0)}]}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 5, t)
+    back = restore_checkpoint(str(tmp_path), 5, jax.tree.map(jnp.zeros_like, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step_ignores_tmp(tmp_path):
+    save_checkpoint(str(tmp_path), 3, _tree())
+    os.makedirs(tmp_path / "step_9.tmp0", exist_ok=True)
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"a": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), 1, {"a": jnp.zeros((3, 3))})
+
+
+def test_manager_async_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, _tree(s))
+    mgr.wait()
+    mgr._gc()
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(tmp_path)
+                   if n.startswith("step_"))
+    assert steps == [3, 4]
+
+
+def test_manager_restore_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    t = _tree(42)
+    mgr.save(7, t)
+    step, back = mgr.restore_latest(jax.tree.map(jnp.zeros_like, t))
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(t["a"]))
+
+
+def test_restore_empty_dir(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    step, back = mgr.restore_latest({"a": jnp.zeros(2)})
+    assert step is None and back is None

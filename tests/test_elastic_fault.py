@@ -1,0 +1,58 @@
+"""Elastic re-mesh planning + fault/straggler control-plane policies."""
+import pytest
+
+from repro.distributed.elastic import ElasticPlan, plan_mesh
+from repro.distributed.fault import (
+    HeartbeatMonitor,
+    RestartPolicy,
+    StragglerDetector,
+)
+
+
+def test_plan_keeps_tp_drops_dp():
+    plan = plan_mesh(n_devices=480, model_parallel=16, old_global_batch=256,
+                     old_data=16)
+    assert plan.model == 16
+    assert plan.data == 30
+    assert plan.devices_used == 480
+    assert plan.global_batch == 256 * 30 // 16
+
+
+def test_plan_batch_policies():
+    shrink = plan_mesh(128, 16, 256, 16, batch_policy="shrink")
+    keep = plan_mesh(128, 16, 256, 16, batch_policy="keep")
+    assert shrink.global_batch == 128
+    assert keep.global_batch == 256
+
+
+def test_plan_raises_when_tp_impossible():
+    with pytest.raises(ValueError):
+        plan_mesh(8, 16, 256, 16)
+
+
+def test_straggler_detector_needs_persistence():
+    det = StragglerDetector(threshold=1.5, patience=3)
+    times_bad = {0: 1.0, 1: 1.0, 2: 1.0, 3: 5.0}
+    assert det.observe(times_bad) == []
+    assert det.observe(times_bad) == []
+    assert det.observe(times_bad) == [3]
+    # recovery resets strikes
+    assert det.observe({0: 1.0, 1: 1.0, 2: 1.0, 3: 1.0}) == []
+    assert det.observe(times_bad) == []
+
+
+def test_heartbeat_monitor():
+    mon = HeartbeatMonitor(timeout=10.0)
+    mon.beat(0, now=100.0)
+    mon.beat(1, now=100.0)
+    mon.beat(1, now=109.0)
+    assert mon.dead(now=111.0) == [0]
+
+
+def test_restart_policy_backoff_and_budget():
+    rp = RestartPolicy(max_restarts=3, backoff_base=2.0)
+    delays = [rp.next_delay() for _ in range(4)]
+    assert delays[:3] == [1.0, 2.0, 4.0]
+    assert delays[3] is None
+    rp.reset()
+    assert rp.next_delay() == 1.0

@@ -1,0 +1,122 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import flash_attention, gram, lowrank_matmul, matmul
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128),
+                                   (100, 70, 50), (17, 33, 65),
+                                   (512, 1024, 256), (1, 128, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_sweep(m, k, n, dtype):
+    a = jax.random.normal(KEY, (m, k)).astype(dtype)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (k, n)).astype(dtype)
+    got = matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * k)
+
+
+@given(m=st.integers(1, 200), k=st.integers(1, 100), n=st.integers(1, 150),
+       seed=st.integers(0, 10))
+@settings(max_examples=12, deadline=None)
+def test_matmul_property(m, k, n, seed):
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (m, k))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    np.testing.assert_allclose(np.asarray(matmul(a, b)),
+                               np.asarray(ref.matmul_ref(a, b)),
+                               rtol=1e-3, atol=1e-3 * max(k, 1))
+
+
+@pytest.mark.parametrize("shape,kdim,odim", [((4, 32, 96), 24, 48),
+                                             ((2, 100, 64), 16, 64),
+                                             ((1, 1, 128), 32, 256)])
+def test_lowrank_matmul(shape, kdim, odim):
+    x = jax.random.normal(KEY, shape)
+    R = jax.random.normal(jax.random.fold_in(KEY, 1), (kdim, shape[-1]))
+    L = jax.random.normal(jax.random.fold_in(KEY, 2), (odim, kdim))
+    got = lowrank_matmul(x, R, L)
+    want = ref.lowrank_matmul_ref(x.reshape(-1, shape[-1]), R, L).reshape(
+        shape[:-1] + (odim,))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("m,k", [(1000, 48), (64, 8), (4096, 128), (33, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_sweep(m, k, dtype):
+    y = jax.random.normal(KEY, (m, k)).astype(dtype)
+    got = gram(y)
+    want = ref.gram_ref(y)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * m)
+
+
+@pytest.mark.parametrize(
+    "b,sq,sk,h,kvh,dh,causal,window",
+    [(2, 128, 128, 4, 2, 32, True, 0),
+     (1, 256, 256, 4, 4, 64, True, 64),
+     (2, 100, 100, 2, 1, 16, False, 0),
+     (1, 384, 384, 2, 2, 128, True, 128),
+     (1, 64, 64, 8, 2, 96, True, 0)])
+def test_flash_attention_sweep(b, sq, sk, h, kvh, dh, causal, window):
+    q = jax.random.normal(KEY, (b, sq, h, dh))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, sk, kvh, dh))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, sk, kvh, dh))
+    got = flash_attention(q, k, v, causal=causal, window=window)
+    g = h // kvh
+    idx = jnp.arange(h) // g
+    kr, vr = k[:, :, idx, :], v[:, :, idx, :]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)
+    kf = kr.transpose(0, 2, 1, 3).reshape(b * h, sk, dh)
+    vf = vr.transpose(0, 2, 1, 3).reshape(b * h, sk, dh)
+    want = ref.flash_attention_ref(qf, kf, vf, causal=causal,
+                                   window=window).reshape(b, h, sq, dh)
+    want = want.transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_flash_attention_bf16():
+    q = jax.random.normal(KEY, (1, 128, 2, 64)).astype(jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 128, 2, 64)).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 128, 2, 64)).astype(jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True)
+    want = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(2, 128, 64),
+        k.transpose(0, 2, 1, 3).reshape(2, 128, 64),
+        v.transpose(0, 2, 1, 3).reshape(2, 128, 64), causal=True)
+    want = want.reshape(1, 2, 128, 64).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=5e-2,
+                               atol=5e-2)
+
+
+@pytest.mark.parametrize("bz,s,h,dh,n,chunk", [(2, 32, 4, 8, 4, 8),
+                                               (1, 64, 2, 16, 8, 16),
+                                               (1, 128, 8, 32, 16, 32)])
+def test_ssd_scan_kernel(bz, s, h, dh, n, chunk):
+    from repro.kernels.ssd_scan import ssd_scan_tiled
+    from repro.nn.mamba import _ssd_chunked
+
+    ks = jax.random.split(KEY, 5)
+    u = jax.random.normal(ks[0], (bz, s, h, dh))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bz, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (bz, s, n))
+    C = jax.random.normal(ks[4], (bz, s, n))
+    want = _ssd_chunked(u, dt, A, B, C, jnp.zeros((h,)), chunk)
+    got = ssd_scan_tiled(u, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,138 @@
+"""Custom-VJP WASI/ASI matmuls (paper Eq. 8-11) vs autodiff oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.asi import asi_init, asi_step, tucker_reconstruct
+from repro.core.lowrank_linear import (
+    asi_matmul,
+    wasi_matmul,
+    wasi_matmul_project,
+    wsi_matmul_project_exact,
+)
+
+
+def _setup(key, b=4, n=16, i=48, o=24, k=8, ranks=(4, 8, 16)):
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (b, n, i))
+    L = jax.random.normal(ks[1], (o, k)) / k ** 0.5
+    R = jax.random.normal(ks[2], (k, i)) / i ** 0.5
+    st = asi_init(ks[3], x.shape, ranks)
+    xt, _ = asi_step(x, st)
+    return x, L, R, xt
+
+
+def test_forward_exact():
+    """Forward is EXACT (compression only affects residuals) — Eq. 8."""
+    x, L, R, xt = _setup(jax.random.PRNGKey(0))
+    y = wasi_matmul(x, L, R, xt)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(x @ R.T @ L.T), rtol=1e-4, atol=1e-4)
+
+
+def test_dx_uses_exact_factors():
+    """Eq. 10: dL/dx = dy L R — exact, independent of compression."""
+    x, L, R, xt = _setup(jax.random.PRNGKey(1))
+
+    def f(x_):
+        return jnp.sum(jnp.sin(wasi_matmul(x_, L, R, xt)))
+
+    dx = jax.grad(f)(x)
+    dy = jnp.cos(x @ R.T @ L.T)
+    dx_exact = jnp.einsum("bno,ok,ki->bni", dy, L, R)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_exact),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dL_dR_match_compressed_oracle():
+    """dL/dR computed from factors == dense grads with x REPLACED by its
+    Tucker reconstruction — the defining property of f_LR."""
+    x, L, R, xt = _setup(jax.random.PRNGKey(2))
+    xr = tucker_reconstruct(xt)
+
+    def f(L_, R_):
+        return jnp.sum(wasi_matmul(x, L_, R_, xt) ** 2)
+
+    gL, gR = jax.grad(f, argnums=(0, 1))(L, R)
+    dy = 2 * (x @ R.T @ L.T)
+    # oracle: dL = dy^T (x~ R^T); dR = (dy L)^T x~
+    gL_or = jnp.einsum("bno,bnk->ok", dy, xr @ R.T)
+    gR_or = jnp.einsum("bnk,bni->ki", jnp.einsum("bno,ok->bnk", dy, L), xr)
+    np.testing.assert_allclose(np.asarray(gL), np.asarray(gL_or), rtol=1e-3,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gR), np.asarray(gR_or), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_full_rank_compression_equals_autodiff():
+    """All modes identity => custom VJP must equal plain autodiff exactly."""
+    key = jax.random.PRNGKey(3)
+    x, L, R, _ = _setup(key)
+    st = asi_init(key, x.shape, x.shape)  # identity everywhere
+    xt, _ = asi_step(x, st)
+
+    def f_custom(x_, L_, R_):
+        return jnp.sum(wasi_matmul(x_, L_, R_, xt) ** 2)
+
+    def f_plain(x_, L_, R_):
+        return jnp.sum((x_ @ R_.T @ L_.T) ** 2)
+
+    g1 = jax.grad(f_custom, argnums=(0, 1, 2))(x, L, R)
+    g2 = jax.grad(f_plain, argnums=(0, 1, 2))(x, L, R)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3,
+                                   atol=1e-3)
+
+
+def test_asi_matmul_dense_weight():
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (4, 16, 48))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (24, 48)) / 48 ** 0.5
+    st = asi_init(key, x.shape, (4, 16, 48))  # identity: exact
+    xt, _ = asi_step(x, st)
+
+    g1 = jax.grad(lambda w_: jnp.sum(asi_matmul(x, w_, xt) ** 2))(w)
+    g2 = jax.grad(lambda w_: jnp.sum((x @ w_.T) ** 2))(w)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_project_mode_grad_lands_on_w():
+    """Eq. 9-11: gradient delivered to the FULL W, zero on (L, R)."""
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (2, 8, 32))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (16, 32)) / 32 ** 0.5
+    from repro.core.wsi import wsi_init
+
+    stw = wsi_init(w, 6)
+    st = asi_init(key, x.shape, (2, 8, 32))
+    xt, _ = asi_step(x, st)
+
+    def f(w_, L_, R_):
+        return jnp.sum(wasi_matmul_project(x, w_, L_, R_, xt) ** 2)
+
+    gw, gL, gR = jax.grad(f, argnums=(0, 1, 2))(w, stw.L, stw.R)
+    assert float(jnp.abs(gL).max()) == 0.0
+    assert float(jnp.abs(gR).max()) == 0.0
+    # gw == dy^T x with dy from the FACTORED forward
+    dy = 2 * (x @ stw.R.T @ stw.L.T)
+    gw_or = jnp.einsum("bno,bni->oi", dy, x)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(gw_or), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_project_exact_matches_project_with_identity_asi():
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (2, 8, 32))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (16, 32)) / 32 ** 0.5
+    from repro.core.wsi import wsi_init
+
+    stw = wsi_init(w, 6)
+    st = asi_init(key, x.shape, (2, 8, 32))
+    xt, _ = asi_step(x, st)
+    g1 = jax.grad(lambda w_: jnp.sum(
+        wasi_matmul_project(x, w_, stw.L, stw.R, xt) ** 2))(w)
+    g2 = jax.grad(lambda w_: jnp.sum(
+        wsi_matmul_project_exact(x, w_, stw.L, stw.R) ** 2))(w)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-3,
+                               atol=1e-3)

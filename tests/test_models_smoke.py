@@ -1,0 +1,162 @@
+"""Per-architecture smoke tests (assignment requirement: reduced config of
+the same family, one forward/train step on CPU, output shapes + no NaNs),
+plus a decode step per arch with a decoder."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.configs as configs
+from repro.models.lm import (
+    init_lm,
+    init_lm_cache,
+    init_lm_states,
+    lm_decode_step,
+    lm_forward,
+    lm_loss,
+)
+
+LM_ARCHS = ["zamba2-7b", "gemma3-4b", "qwen2-0.5b", "granite-3-8b",
+            "stablelm-3b", "internvl2-26b", "falcon-mamba-7b",
+            "deepseek-moe-16b", "mixtral-8x7b", "tinyllama-1.1b"]
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def _batch(cfg, arch):
+    if arch == "internvl2-26b":
+        toks = jax.random.normal(KEY, (B, S, cfg.d_model))
+    else:
+        toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    return {"tokens": toks,
+            "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = configs.get_smoke(arch)
+    params = init_lm(KEY, cfg)
+    states = init_lm_states(KEY, cfg, B, S)
+    batch = _batch(cfg, arch)
+
+    logits, _, _, _ = lm_forward(params, batch["tokens"], cfg, states=states)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+    (loss, (_, metrics)), grads = jax.value_and_grad(
+        lm_loss, has_aux=True)(params, batch, cfg, states=states)
+    assert bool(jnp.isfinite(loss))
+    assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = configs.get_smoke(arch)
+    if not cfg.has_decoder:
+        pytest.skip("encoder-only")
+    params = init_lm(KEY, cfg)
+    caches = init_lm_cache(cfg, B, 32, dtype=jnp.float32)
+    tok = jax.random.randint(KEY, (B, 1), 0, cfg.vocab_size)
+    logits, nc = lm_decode_step(params, tok, caches, 3, cfg)
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+    assert jax.tree.structure(nc) == jax.tree.structure(caches)
+
+
+def test_smoke_whisper():
+    cfg = configs.get_smoke("whisper-tiny")
+    from repro.models.encdec import (
+        encdec_decode_step,
+        encdec_loss,
+        encode,
+        init_encdec,
+        init_encdec_cache,
+        init_encdec_states,
+    )
+
+    params = init_encdec(KEY, cfg)
+    states = init_encdec_states(KEY, cfg, B, S)
+    batch = {"frames": jax.random.normal(KEY, (B, cfg.enc_seq, cfg.d_model)),
+             "tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)}
+    (loss, _), grads = jax.value_and_grad(encdec_loss, has_aux=True)(
+        params, batch, cfg, states=states)
+    assert bool(jnp.isfinite(loss))
+    assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads))
+    mem, _ = encode(params, batch["frames"], cfg)
+    caches = init_encdec_cache(cfg, B, 32, dtype=jnp.float32)
+    logits, _ = encdec_decode_step(params, batch["tokens"][:, :1], mem,
+                                   caches, 0, cfg)
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_smoke_vit():
+    cfg = configs.get_smoke("vit-base")
+    from repro.models.vit import init_vit, init_vit_states, vit_loss
+
+    n_patches, patch_dim, n_classes = 16, 48, 10
+    params = init_vit(KEY, cfg, n_classes, patch_dim, n_patches)
+    states = init_vit_states(KEY, cfg, B, n_patches)
+    batch = {"patches": jax.random.normal(KEY, (B, n_patches, patch_dim)),
+             "labels": jax.random.randint(KEY, (B,), 0, n_classes)}
+    (loss, (_, m)), grads = jax.value_and_grad(vit_loss, has_aux=True)(
+        params, batch, cfg, states=states)
+    assert bool(jnp.isfinite(loss))
+    assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS[:3])
+def test_wasi_methods_all_run(arch):
+    """Every WasiConfig.method lowers and differentiates on every family."""
+    base = configs.get_smoke(arch)
+    batch = _batch(base, arch)
+    for method in ["none", "wsi", "asi", "wasi"]:
+        cfg = base.replace(wasi=dataclasses.replace(base.wasi, method=method))
+        params = init_lm(KEY, cfg)
+        states = init_lm_states(KEY, cfg, B, S) if cfg.wasi.compress_acts else None
+        (loss, _), grads = jax.value_and_grad(lm_loss, has_aux=True)(
+            params, batch, cfg, states=states)
+        assert bool(jnp.isfinite(loss)), method
+        assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads)), method
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs carry the exact assigned hyperparameters."""
+    checks = {
+        "zamba2-7b": dict(n_layers=81, d_model=3584, n_heads=32, d_ff=14336,
+                          vocab_size=32000),
+        "gemma3-4b": dict(n_layers=34, d_model=2560, n_heads=8, n_kv_heads=4,
+                          d_ff=10240, vocab_size=262144),
+        "qwen2-0.5b": dict(n_layers=24, d_model=896, n_heads=14, n_kv_heads=2,
+                           d_ff=4864, vocab_size=151936, qkv_bias=True),
+        "granite-3-8b": dict(n_layers=40, d_model=4096, n_heads=32,
+                             n_kv_heads=8, d_ff=12800, vocab_size=49155),
+        "stablelm-3b": dict(n_layers=32, d_model=2560, n_heads=32,
+                            n_kv_heads=32, d_ff=6912, vocab_size=50304),
+        "internvl2-26b": dict(n_layers=48, d_model=6144, n_heads=48,
+                              n_kv_heads=8, d_ff=16384, vocab_size=92553),
+        "falcon-mamba-7b": dict(n_layers=64, d_model=4096, vocab_size=65024),
+        "whisper-tiny": dict(n_layers=4, d_model=384, n_heads=6, d_ff=1536,
+                             vocab_size=51865),
+        "tinyllama-1.1b": dict(n_layers=22, d_model=2048, n_heads=32,
+                               n_kv_heads=4, d_ff=5632, vocab_size=32000),
+    }
+    for arch, fields in checks.items():
+        cfg = configs.get(arch)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+    assert configs.get("deepseek-moe-16b").moe.n_experts == 64
+    assert configs.get("deepseek-moe-16b").moe.top_k == 6
+    assert configs.get("deepseek-moe-16b").moe.n_shared == 2
+    assert configs.get("deepseek-moe-16b").moe.expert_d_ff == 1408
+    assert configs.get("mixtral-8x7b").moe.n_experts == 8
+    assert configs.get("mixtral-8x7b").moe.top_k == 2
+    assert configs.get("zamba2-7b").ssm.d_state == 64
+    assert configs.get("falcon-mamba-7b").ssm.d_state == 16
+    # layer-pattern sums match the assigned depths
+    for arch in LM_ARCHS:
+        cfg = configs.get(arch)
+        assert cfg.total_pattern_layers == cfg.n_layers, arch

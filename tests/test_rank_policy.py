@@ -1,0 +1,77 @@
+"""Rank policies: static ranks, mode caps, App. A.2 perplexity DP."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rank_policy import (
+    align_up,
+    asi_mode_ranks,
+    gradient_perplexity,
+    perplexity_dp,
+    static_rank,
+)
+
+
+def test_static_rank_alignment_and_bounds():
+    assert static_rank(896, 4864, 0.25, align=128) == 256
+    assert static_rank(64, 64, 0.25, align=128) == 64  # capped at full
+    assert static_rank(64, 64, 0.5, align=1, min_rank=4) == 32
+    assert static_rank(8, 8, 0.01, align=1, min_rank=4) == 4
+
+
+@given(d=st.integers(2, 64), n=st.integers(2, 64), i=st.integers(2, 64),
+       f=st.floats(0.05, 1.0))
+@settings(max_examples=30, deadline=None)
+def test_mode_ranks_never_exceed_unfold_rank(d, n, i, f):
+    ranks = asi_mode_ranks((d, n, i), (f, f, f), skip_batch=True, align=1)
+    total = d * n * i
+    for m, (dim, r) in enumerate(zip((d, n, i), ranks)):
+        assert 1 <= r <= min(dim, total // dim), (m, dim, r)
+
+
+def test_skip_batch_gives_full_rank_mode0():
+    ranks = asi_mode_ranks((8, 64, 32), (0.5, 0.5, 0.5), skip_batch=True)
+    assert ranks[0] == 8
+
+
+def test_perplexity_dp_respects_budget_and_beats_greedy():
+    rng = np.random.RandomState(0)
+    P = rng.rand(5, 4)
+    M = rng.rand(5, 4) * 0.5 + 0.1
+    budget = 1.8
+    res = perplexity_dp(P, M, budget, bins=2048)
+    assert res.total_memory <= budget + 1e-6
+    # brute force over 4^5 = 1024 combos
+    best = None
+    import itertools
+
+    for combo in itertools.product(range(4), repeat=5):
+        mem = sum(M[i, j] for i, j in enumerate(combo))
+        if mem > budget:
+            continue
+        ppl = sum(P[i, j] for i, j in enumerate(combo))
+        if best is None or ppl < best:
+            best = ppl
+    # DP on a discretized budget is near-optimal (quantization slack)
+    assert res.total_perplexity <= best * 1.05 + 1e-6
+
+
+def test_perplexity_dp_infeasible_raises():
+    P = np.ones((3, 2))
+    M = np.ones((3, 2)) * 10
+    with pytest.raises(ValueError):
+        perplexity_dp(P, M, budget=1.0)
+
+
+def test_gradient_perplexity_is_frobenius():
+    import jax.numpy as jnp
+
+    a = jnp.ones((3, 4))
+    b = jnp.zeros((3, 4))
+    assert gradient_perplexity(a, b) == pytest.approx(np.sqrt(12.0))
+
+
+def test_align_up():
+    assert align_up(1, 128) == 128
+    assert align_up(129, 128) == 256
+    assert align_up(256, 128) == 256

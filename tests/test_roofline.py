@@ -1,0 +1,57 @@
+"""Roofline analyzer conventions + math."""
+import pytest
+
+import repro.configs as configs
+from repro.config import SHAPES
+from repro.launch.roofline import (
+    active_params,
+    head_flops,
+    loop_correction,
+    model_flops,
+    roofline_terms,
+)
+
+
+def test_loop_correction_counts_layers_and_microbatches():
+    cfg = configs.get("qwen2-0.5b")       # 24 uniform layers, 1 body
+    assert loop_correction(cfg, SHAPES["train_4k"], 1) == 24
+    assert loop_correction(cfg, SHAPES["train_4k"], 4) == 96
+    assert loop_correction(cfg, SHAPES["decode_32k"], 4) == 24  # no accum
+    z = configs.get("zamba2-7b")          # 13x6 + 3 tail: bodies 6+3
+    assert loop_correction(z, SHAPES["train_4k"], 1) == pytest.approx(81 / 9)
+
+
+def test_model_flops_dense_vs_moe():
+    dense = configs.get("granite-3-8b")
+    moe = configs.get("mixtral-8x7b")
+    sh = SHAPES["train_4k"]
+    # mixtral active ~13B > granite ~8B, but far below 8x7B total
+    f_dense = model_flops(dense, sh)
+    f_moe = model_flops(moe, sh)
+    n_moe_total = moe.n_layers * 3 * moe.d_model * moe.d_ff * moe.moe.n_experts
+    assert f_moe < 6 * n_moe_total * sh.global_batch * sh.seq_len
+    assert f_dense > 0 and f_moe > 0
+
+
+def test_head_flops_train_is_3x_forward():
+    cfg = configs.get("qwen2-0.5b")
+    assert head_flops(cfg, SHAPES["train_4k"]) == pytest.approx(
+        3 * head_flops(cfg, SHAPES["prefill_32k"]) *
+        (SHAPES["train_4k"].global_batch * SHAPES["train_4k"].seq_len) /
+        (SHAPES["prefill_32k"].global_batch * SHAPES["prefill_32k"].seq_len))
+
+
+def test_roofline_terms_pick_dominant():
+    rec = {"cost": {"flops": 1e12, "bytes": 1e9},
+           "collectives": {"total": 1e12}}
+    t = roofline_terms(rec)
+    assert t["bottleneck"] == "collective"
+    rec = {"cost": {"flops": 1e15, "bytes": 1e9}, "collectives": {"total": 1e6}}
+    assert roofline_terms(rec)["bottleneck"] == "compute"
+
+
+def test_active_params_scales():
+    small = active_params(configs.get("qwen2-0.5b"))
+    big = active_params(configs.get("granite-3-8b"))
+    assert 3e8 < small < 9e8
+    assert 5e9 < big < 1.2e10

@@ -1,0 +1,76 @@
+"""Rank selection + truncated SVD (paper Eq. 5-7) — unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.svd import (
+    explained_variance,
+    pick_rank,
+    rank_for_threshold,
+    reconstruction_rel_error,
+    truncated_svd,
+)
+
+
+def _matrix(seed, m=48, n=32, decay=0.8):
+    key = jax.random.PRNGKey(seed)
+    u = jnp.linalg.qr(jax.random.normal(key, (m, n)))[0]
+    v = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(seed + 1), (n, n)))[0]
+    s = decay ** jnp.arange(n)
+    return (u * s) @ v.T
+
+
+def test_explained_variance_sums_to_one():
+    s = jnp.array([3.0, 2.0, 1.0, 0.5])
+    ev = explained_variance(s)
+    np.testing.assert_allclose(float(ev.sum()), 1.0, rtol=1e-6)
+
+
+@given(eps1=st.floats(0.1, 0.9), eps2=st.floats(0.1, 0.9))
+@settings(max_examples=20, deadline=None)
+def test_rank_monotonic_in_eps(eps1, eps2):
+    w = _matrix(0)
+    s = jnp.linalg.svd(w, compute_uv=False)
+    k1, k2 = int(rank_for_threshold(s, eps1)), int(rank_for_threshold(s, eps2))
+    if eps1 <= eps2:
+        assert k1 <= k2
+    else:
+        assert k1 >= k2
+
+
+def test_rank_bounds():
+    w = _matrix(1)
+    s = jnp.linalg.svd(w, compute_uv=False)
+    assert int(rank_for_threshold(s, 0.0)) >= 1
+    assert int(rank_for_threshold(s, 1.0)) <= len(s)
+
+
+def test_truncated_svd_is_best_rank_k():
+    """Eckart-Young: SVD truncation error == sqrt(sum of trailing s^2)."""
+    w = _matrix(2)
+    s = jnp.linalg.svd(w, compute_uv=False)
+    for k in (1, 4, 16):
+        f = truncated_svd(w, k)
+        err = reconstruction_rel_error(w, f)
+        expect = jnp.sqrt(jnp.sum(s[k:] ** 2)) / jnp.linalg.norm(w)
+        np.testing.assert_allclose(float(err), float(expect), rtol=1e-4, atol=1e-6)
+
+
+def test_epsilon_controls_error():
+    """Higher eps => kept variance >= eps (the paper's control knob)."""
+    w = _matrix(3)
+    for eps in (0.4, 0.6, 0.8, 0.9):
+        k = pick_rank(w, eps)
+        f = truncated_svd(w, k)
+        err = float(reconstruction_rel_error(w, f))
+        assert err ** 2 <= 1 - eps + 1e-5, (eps, err)
+
+
+def test_align_rounds_up_only():
+    w = _matrix(4, 256, 256, decay=0.95)
+    k_unaligned = pick_rank(w, 0.8, align=1)
+    k_aligned = pick_rank(w, 0.8, align=128)
+    assert k_aligned >= k_unaligned
+    assert k_aligned % 128 == 0 or k_aligned == 256

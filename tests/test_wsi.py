@@ -1,0 +1,87 @@
+"""Weight Subspace Iteration (paper Alg. 1) behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.svd import truncated_svd
+from repro.core.wsi import (
+    wsi_apply,
+    wsi_flops,
+    wsi_init,
+    wsi_refresh_factored,
+    wsi_step,
+)
+
+
+def _w(seed=0, o=64, i=48, decay=0.85):
+    key = jax.random.PRNGKey(seed)
+    u = jnp.linalg.qr(jax.random.normal(key, (o, i)))[0]
+    v = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(seed + 9), (i, i)))[0]
+    return (u * decay ** jnp.arange(i)) @ v.T
+
+
+def test_init_matches_truncated_svd():
+    w = _w()
+    st = wsi_init(w, 8)
+    f = truncated_svd(w, 8)
+    np.testing.assert_allclose(np.asarray(st.L @ st.R), np.asarray(f.L @ f.R),
+                               atol=1e-4)
+
+
+def test_iteration_tracks_svd_on_static_weights():
+    w = _w(1)
+    st = wsi_init(w, 8)
+    for _ in range(3):
+        st = wsi_step(w, st)
+    best = truncated_svd(w, 8)
+    err_wsi = float(jnp.linalg.norm(w - wsi_apply(st)))
+    err_svd = float(jnp.linalg.norm(w - best.L @ best.R))
+    assert err_wsi <= err_svd * 1.02  # within 2% of optimal
+
+
+def test_subspace_stable_under_small_updates():
+    """The paper's core hypothesis (§3.3, Fig. 3a): small gradient steps
+    leave the essential subspace trackable by ONE iteration per step."""
+    w = _w(2)
+    st = wsi_init(w, 8)
+    key = jax.random.PRNGKey(3)
+    for t in range(20):
+        key, sub = jax.random.split(key)
+        w = w + 1e-3 * jax.random.normal(sub, w.shape)  # ~ small SGD step
+        st = wsi_step(w, st)
+    best = truncated_svd(w, 8)
+    err_wsi = float(jnp.linalg.norm(w - wsi_apply(st)))
+    err_svd = float(jnp.linalg.norm(w - best.L @ best.R))
+    assert err_wsi <= err_svd * 1.05
+
+
+def test_refresh_factored_preserves_product():
+    key = jax.random.PRNGKey(4)
+    L = jax.random.normal(key, (32, 6))
+    R = jax.random.normal(jax.random.PRNGKey(5), (6, 24))
+    from repro.core.wsi import WSIState
+
+    st = wsi_refresh_factored(WSIState(L=L, R=R))
+    np.testing.assert_allclose(np.asarray(st.L @ st.R), np.asarray(L @ R),
+                               rtol=1e-4, atol=1e-4)
+    from repro.core.orthogonal import orthonormality_error
+
+    assert float(orthonormality_error(st.L)) < 1e-3
+
+
+def test_batched_wsi_step():
+    ws = jnp.stack([_w(s) for s in range(3)])
+    st = jax.vmap(lambda w: wsi_init(w, 8))(ws)
+    st2 = wsi_step(ws, st)  # batched path
+    assert st2.L.shape == (3, 64, 8)
+    for j in range(3):
+        err = float(jnp.linalg.norm(ws[j] - st2.L[j] @ st2.R[j])
+                    / jnp.linalg.norm(ws[j]))
+        best = truncated_svd(ws[j], 8)
+        err_svd = float(jnp.linalg.norm(ws[j] - best.L @ best.R)
+                        / jnp.linalg.norm(ws[j]))
+        assert err <= err_svd * 1.05
+
+
+def test_wsi_flops_formula():
+    assert wsi_flops(10, 20, 4) == 4 * 20 * 10 * 4 + 2 * 10 * 16
