@@ -1,6 +1,11 @@
 """Paper Tab. 2 / Fig. 8: wall-clock per-iteration train + inference time,
 WASI vs ASI vs vanilla across eps (the CPU host stands in for the paper's
 Raspberry Pi — same relative comparison, different absolute scale).
+
+Serving columns (beyond-paper): prefill throughput of the token-parallel
+path vs the seed's scanned (token-by-token) prefill, steady-state decode
+throughput, engine requests/sec, and the fused vs two-launch lowrank
+kernel.
 """
 from __future__ import annotations
 
@@ -12,11 +17,21 @@ import jax.numpy as jnp
 import repro.configs as configs
 from repro.config import TrainConfig
 from repro.data.synthetic import SyntheticLM
-from repro.models.lm import init_lm, init_lm_states, lm_forward, lm_loss
+from repro.models.lm import (
+    init_lm,
+    init_lm_cache,
+    init_lm_states,
+    lm_decode_step,
+    lm_forward,
+    lm_loss,
+    lm_prefill,
+)
+from repro.serve import ServeEngine
 from repro.train.step import make_train_state, make_train_step
 from benchmarks.common import time_call
 
 B, S = 8, 64
+SERVE_B, SERVE_P, SERVE_NEW = 4, 32, 16
 
 
 def run() -> list[str]:
@@ -41,6 +56,77 @@ def run() -> list[str]:
         name = f"{method}" + (f"_frac{frac}" if method == "wasi" else "")
         rows.append(f"tab2/train_{name},{t_train:.1f},per_iter_us")
         rows.append(f"tab2/infer_{name},{t_infer:.1f},per_iter_us")
+    rows += serve_rows()
+    return rows
+
+
+def serve_rows() -> list[str]:
+    """Serving columns: prefill throughput (batched one-forward vs the seed
+    scanned token-by-token loop), decode throughput, requests/sec."""
+    rows = []
+    cfg = configs.get_smoke("qwen2-0.5b")
+    key = jax.random.PRNGKey(0)
+    params = init_lm(key, cfg, jnp.dtype(cfg.dtype))
+    prompt = jax.random.randint(key, (SERVE_B, SERVE_P), 0, cfg.vocab_size)
+    max_cache = SERVE_P + SERVE_NEW + 1
+    dtype = jnp.dtype(cfg.dtype)
+
+    # scanned prefill: the seed serving path (decode step per prompt token)
+    step = jax.jit(lambda pr, t, c, pos: lm_decode_step(pr, t, c, pos, cfg))
+
+    def scanned(params, prompt):
+        caches = init_lm_cache(cfg, SERVE_B, max_cache, dtype=dtype)
+        logits = None
+        for i in range(SERVE_P):
+            logits, caches = step(params, prompt[:, i:i + 1], caches, i)
+        return logits
+
+    # batched prefill: one token-parallel forward writes all caches
+    # (last_only: the serving path projects one next-token row per prompt)
+    prefill = jax.jit(
+        lambda pr, t, c: lm_prefill(pr, t, cfg, caches=c, last_only=True))
+
+    def batched(params, prompt):
+        caches = init_lm_cache(cfg, SERVE_B, max_cache, dtype=dtype)
+        return prefill(params, prompt, caches)
+
+    tokens = SERVE_B * SERVE_P
+    us_scan = time_call(scanned, params, prompt)
+    us_batch = time_call(batched, params, prompt)
+    rows.append(f"tab2/prefill_scanned,{us_scan:.1f},"
+                f"{tokens / (us_scan * 1e-6):.0f}_tok_s")
+    rows.append(f"tab2/prefill_batched,{us_batch:.1f},"
+                f"{tokens / (us_batch * 1e-6):.0f}_tok_s")
+
+    # decode throughput + requests/sec through the continuous-batching engine
+    engine = ServeEngine(params, cfg, max_slots=SERVE_B, max_cache=max_cache)
+    for i in range(SERVE_B):  # warmup compiles
+        engine.submit(list(map(int, prompt[i])), max_new=2)
+    engine.run()
+    engine.reset_stats()
+    for i in range(SERVE_B):
+        engine.submit(list(map(int, prompt[i])), max_new=SERVE_NEW)
+    engine.run()
+    s = engine.summary()
+    rows.append(f"tab2/serve_decode,{s['wall_s'] * 1e6:.1f},"
+                f"{s['decode_tok_s']:.0f}_tok_s")
+    rows.append(f"tab2/serve_requests,{s['wall_s'] * 1e6:.1f},"
+                f"{s['requests_s']:.2f}_req_s")
+
+    # fused vs two-launch lowrank kernel (serve-shape linear). Off-TPU both
+    # run in Pallas interpret mode, where the ratio measures dispatch
+    # overhead only — the VMEM-residency win needs real hardware, so the
+    # rows are labeled accordingly.
+    from repro.kernels import lowrank_matmul_fused, lowrank_matmul_unfused
+    from repro.kernels.ops import INTERPRET
+    suffix = "_interpret" if INTERPRET else ""
+    x = jax.random.normal(key, (SERVE_B * SERVE_P, 896))
+    R = jax.random.normal(key, (224, 896))
+    L = jax.random.normal(key, (896, 224))
+    us_f = time_call(lowrank_matmul_fused, x, R, L)
+    us_u = time_call(lowrank_matmul_unfused, x, R, L)
+    rows.append(f"tab2/lowrank_fused{suffix},{us_f:.1f},per_call_us")
+    rows.append(f"tab2/lowrank_unfused{suffix},{us_u:.1f},per_call_us")
     return rows
 
 

@@ -6,8 +6,10 @@ Each kernel ships three artifacts:
   ref.py    — pure-jnp oracles the tests assert against
 
 Kernels:
-  matmul_tiled     — f32-accumulator tiled matmul; building block for the
-                     fused low-rank pair (x R^T) L^T (paper Eq. 8)
+  matmul_tiled     — f32-accumulator tiled matmul (general building block)
+  lowrank          — FUSED (x R^T) L^T (paper Eq. 8): rank-K intermediate
+                     lives in VMEM across both contractions; every factored
+                     linear (training and serving) routes through it
   gram             — tall-skinny Y^T Y reduction (CholeskyQR stage of WSI/ASI)
   flash_attention  — causal/sliding-window online-softmax attention
   ssd_scan         — Mamba-2 SSD chunked scan with on-chip state carry
@@ -17,6 +19,8 @@ from repro.kernels.ops import (
     flash_attention,
     gram,
     lowrank_matmul,
+    lowrank_matmul_fused,
+    lowrank_matmul_unfused,
     matmul,
 )
 from repro.kernels.ssd_scan import ssd_scan_tiled

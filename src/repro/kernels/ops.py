@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_tiled
 from repro.kernels.gram import gram_tiled
+from repro.kernels.lowrank import lowrank_fused_tiled
 from repro.kernels.matmul_tiled import matmul_tiled
 
 INTERPRET = jax.default_backend() != "tpu"
@@ -24,11 +25,69 @@ def matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128):
     return matmul_tiled(a, b, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)
 
 
+@jax.custom_vjp
+def _lowrank_fused(x2, r_factor, l_factor):
+    """Fused (x R^T) L^T — the rank-K intermediate stays in VMEM."""
+    return lowrank_fused_tiled(x2, r_factor.T, l_factor.T,
+                               interpret=INTERPRET)
+
+
+def _lowrank_fused_fwd(x2, r_factor, l_factor):
+    return _lowrank_fused(x2, r_factor, l_factor), (x2, r_factor, l_factor)
+
+
+def _lowrank_fused_bwd(res, dy):
+    # Plain-jnp backward (rank-K contractions are thin; the fused kernel is
+    # a forward/serving optimization). h is recomputed — 2*M*I*K FLOPs —
+    # instead of saved, keeping the forward's residual footprint at O(M*I).
+    x2, r_factor, l_factor = res
+    xf = x2.astype(jnp.float32)
+    rf = r_factor.astype(jnp.float32)
+    lf = l_factor.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+    h = xf @ rf.T                                   # (M, K)
+    dh = dyf @ lf                                   # (M, K)
+    dx = (dh @ rf).astype(x2.dtype)
+    dr = (dh.T @ xf).astype(r_factor.dtype)         # (K, I)
+    dl = (dyf.T @ h).astype(l_factor.dtype)         # (O, K)
+    return dx, dr, dl
+
+
+_lowrank_fused.defvjp(_lowrank_fused_fwd, _lowrank_fused_bwd)
+
+
+@jax.jit
+def lowrank_matmul_fused(x, r_factor, l_factor):
+    """The fused Pallas kernel, unconditionally (tests/benchmarks).
+    x (..., I), R (K, I), L (O, K) -> (..., O). Leading dims flattened.
+    One kernel launch; the (M, K) intermediate never round-trips HBM.
+    Differentiable (custom VJP with exact rank-K backward)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = _lowrank_fused(x2, r_factor, l_factor)
+    return y.reshape(lead + (l_factor.shape[0],))
+
+
+@jax.jit
+def lowrank_matmul(x, r_factor, l_factor):
+    """WASI factored linear (Eq. 8): y = (x @ R^T) @ L^T — the public entry
+    every factored linear routes through.
+
+    On TPU this is the FUSED kernel (rank-K intermediate stays in VMEM
+    across both contractions). Off-TPU the kernel would run in interpret
+    mode — measured ~2x slower than the XLA einsum pair — so the dispatch
+    falls back there; callers get the fast path on every backend."""
+    if INTERPRET:
+        h = jnp.einsum("...i,ki->...k", x, r_factor)
+        return jnp.einsum("...k,ok->...o", h, l_factor)
+    return lowrank_matmul_fused(x, r_factor, l_factor)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
-def lowrank_matmul(x, r_factor, l_factor, *, bm: int = 128, bn: int = 128,
-                   bk: int = 128):
-    """WASI factored linear (Eq. 8): y = (x @ R^T) @ L^T.
-    x (..., I), R (K, I), L (O, K) -> (..., O). Leading dims flattened."""
+def lowrank_matmul_unfused(x, r_factor, l_factor, *, bm: int = 128,
+                           bn: int = 128, bk: int = 128):
+    """Two-launch reference path (pre-fusion): kept for benchmarking the
+    HBM round-trip the fused kernel removes (benchmarks/tab2_latency.py)."""
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     h = matmul_tiled(x2, r_factor.T, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)

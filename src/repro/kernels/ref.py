@@ -12,7 +12,9 @@ def matmul_ref(a, b, out_dtype=None):
 
 
 def lowrank_matmul_ref(x, r_factor, l_factor, out_dtype=None):
-    """y = (x @ R^T) @ L^T; x (M, I), R (K, I), L (O, K) -> (M, O)."""
+    """y = (x @ R^T) @ L^T; x (..., I), R (K, I), L (O, K) -> (..., O).
+    Two-matmul f32 oracle for the FUSED kernel (kernels/lowrank.py); leading
+    dims pass through like the jit wrapper's."""
     h = jnp.matmul(x.astype(jnp.float32), r_factor.astype(jnp.float32).T)
     y = jnp.matmul(h, l_factor.astype(jnp.float32).T)
     return y.astype(out_dtype or x.dtype)

@@ -1,55 +1,71 @@
-"""Serving launcher: batched prefill + decode with factored (WASI) weights.
+"""Serving launcher: thin CLI over the continuous-batching engine.
 
 ``python -m repro.launch.serve --arch qwen2-0.5b --tokens 32 --batch 4``
 
-Prefill is token-parallel (one forward over the prompt, caches built by a
-scan of decode steps for exactness on rolling-window layers); decode is a
-jit'd single-token step reused across the generation loop. WASI inference
-benefit: every linear runs in the rank-K subspace (paper C_inference /
-S_inference — measured by benchmarks/tab2_latency.py).
+Prefill is token-parallel — ONE forward over the whole prompt writes every
+layer's decode caches (models/lm.py::lm_prefill); decode is a jit'd
+single-token step over all serve slots at per-slot positions. WASI
+inference benefit: every linear runs in the rank-K subspace through the
+fused lowrank kernel (paper C_inference / S_inference — measured by
+benchmarks/tab2_latency.py). The engine itself (admission queue, bucketing,
+slot recycling) lives in repro/serve/engine.py.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import time
 
 import jax
 import jax.numpy as jnp
 
 import repro.configs as configs
-from repro.models.lm import init_lm, init_lm_cache, lm_decode_step
+from repro.models.lm import init_lm, init_lm_cache, lm_decode_step, lm_prefill
+from repro.serve import ServeEngine
+
+
+@functools.lru_cache(maxsize=8)
+def _jitted_steps(cfg):
+    """Per-config jitted prefill/decode, cached so repeated generate()
+    calls (warmup-then-time benchmarks, test reference loops) reuse the
+    compiled executables instead of retracing fresh lambdas each call."""
+    prefill = jax.jit(
+        lambda pr, t, c: lm_prefill(pr, t, cfg, caches=c, last_only=True))
+    step = jax.jit(
+        lambda pr, tok, c, pos: lm_decode_step(pr, tok, c, pos, cfg))
+    return prefill, step
 
 
 def generate(params, cfg, prompt, max_cache: int, n_new: int, *, greedy=True,
              key=None):
-    """prompt (B, P) -> (B, P + n_new). Warmup = scanned decode steps (exact
-    for rolling caches); generation = the same jit'd step."""
+    """prompt (B, P) -> (B, P + n_new). Lockstep batch: one token-parallel
+    prefill (no per-token Python loop), then a jit'd decode step."""
     b, p = prompt.shape
     caches = init_lm_cache(cfg, b, max_cache, dtype=jnp.dtype(cfg.dtype))
+    prefill, step = _jitted_steps(cfg)
 
-    step = jax.jit(
-        lambda pr, tok, c, pos: lm_decode_step(pr, tok, c, pos, cfg))
-
-    toks = prompt
-    logits = None
-    for i in range(p):  # prefill via decode steps (small prompts)
-        logits, caches = step(params, toks[:, i:i + 1], caches, i)
-    out = [toks]
-    cur = None
+    logits, caches = prefill(params, prompt, caches)
+    logits = logits[:, 0]
+    out = [prompt]
     for j in range(n_new):
         nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         out.append(nxt)
-        logits, caches = step(params, nxt, caches, p + j)
+        if j < n_new - 1:  # the last token needs no further forward
+            logits, caches = step(params, nxt, caches, p + j)
     return jnp.concatenate(out, axis=1)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of requests to submit")
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--max-slots", type=int, default=0,
+                    help="serve slots (0 => min(batch, 4)); fewer slots than "
+                         "requests exercises queueing + slot recycling")
     ap.add_argument("--wasi", default=None)
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
@@ -59,18 +75,25 @@ def main():
         cfg = cfg.replace(wasi=dataclasses.replace(cfg.wasi, method=args.wasi))
     key = jax.random.PRNGKey(0)
     params = init_lm(key, cfg, jnp.dtype(cfg.dtype))
-    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                cfg.vocab_size)
+    slots = args.max_slots or min(args.batch, 4)
+    engine = ServeEngine(params, cfg, max_slots=slots,
+                         max_cache=args.prompt_len + args.tokens + 1)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
     t0 = time.time()
-    out = generate(params, cfg, prompt,
-                   max_cache=args.prompt_len + args.tokens + 1,
-                   n_new=args.tokens)
+    reqs = [engine.submit(list(map(int, prompts[i])), max_new=args.tokens)
+            for i in range(args.batch)]
+    engine.run()
     dt = time.time() - t0
-    total_new = args.batch * args.tokens
-    print(f"[serve] arch={cfg.name} wasi={cfg.wasi.method} "
-          f"generated {total_new} tokens in {dt:.2f}s "
-          f"({total_new / dt:.1f} tok/s)")
-    print("[serve] sample:", out[0].tolist())
+    s = engine.summary()
+    print(f"[serve] arch={cfg.name} wasi={cfg.wasi.method} slots={slots} "
+          f"requests={args.batch} wall={dt:.2f}s")
+    print(f"[serve] prefill {s['prefill_tokens']} tok "
+          f"({s['prefill_tok_s']:.1f} tok/s, one forward per admission "
+          f"group) | decode {s['decode_tokens']} tok "
+          f"({s['decode_tok_s']:.1f} tok/s) | "
+          f"{s['requests_s']:.2f} req/s")
+    print("[serve] sample:", reqs[0].tokens)
 
 
 if __name__ == "__main__":

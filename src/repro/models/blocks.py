@@ -110,8 +110,14 @@ def apply_block(kind: str, p: dict, x: jax.Array, cfg: ModelConfig, *,
                 shared: dict | None = None,
                 cache: dict | None = None, pos=None,
                 states: dict | None = None,
-                policy: MeshPolicy | None = None):
-    """Returns (x, new_cache, new_states, aux_loss)."""
+                policy: MeshPolicy | None = None,
+                valid_len: jax.Array | None = None):
+    """Returns (x, new_cache, new_states, aux_loss).
+
+    With a cache and S > 1 this is a token-parallel PREFILL step: the block
+    attends/scans over the whole prompt and writes its decode cache in the
+    same pass. ``valid_len`` (B,) masks right-padded rows (length-bucketed
+    serve admission) out of cache writes and recurrent-state updates."""
     st = states or {}
     new_st = {}
     aux = jnp.zeros((), jnp.float32)
@@ -122,7 +128,7 @@ def apply_block(kind: str, p: dict, x: jax.Array, cfg: ModelConfig, *,
         a, new_kv, s_attn = apply_attention(
             p["attn"], h, cfg, causal=True, window=window,
             cache=None if cache is None else cache["kv"], pos=pos,
-            states=st.get("attn"), policy=policy)
+            states=st.get("attn"), policy=policy, valid_len=valid_len)
         new_st["attn"] = s_attn
         x = x + a
         h = apply_norm(cfg.norm, p["ln2"], x)
@@ -140,7 +146,8 @@ def apply_block(kind: str, p: dict, x: jax.Array, cfg: ModelConfig, *,
         fn = apply_mamba1 if kind == "mamba1" else apply_mamba2
         m, new_ssm, s_m = fn(p["mixer"], h, cfg,
                              state=None if cache is None else cache["ssm"],
-                             states=st.get("mixer"), policy=policy)
+                             states=st.get("mixer"), policy=policy,
+                             valid_len=valid_len)
         new_st["mixer"] = s_m
         x = x + m
         new_cache = None if cache is None else {"ssm": new_ssm}
@@ -151,7 +158,8 @@ def apply_block(kind: str, p: dict, x: jax.Array, cfg: ModelConfig, *,
             a, new_kv, s_sh = apply_attention(
                 shared["attn"], h, cfg, causal=True, window=0,
                 cache=None if cache is None else cache["kv"], pos=pos,
-                states=st.get("shared_attn"), policy=policy)
+                states=st.get("shared_attn"), policy=policy,
+                valid_len=valid_len)
             new_st["shared_attn"] = s_sh
             x = x + a
             h = apply_norm(cfg.norm, shared["ln2"], x)

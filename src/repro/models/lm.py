@@ -108,7 +108,7 @@ def _empty_like_states(cfg: ModelConfig) -> list:
 
 
 def _group_scan(cfg: ModelConfig, gi: int, x, gparams, gstates, gcaches,
-                shared, pos, policy, with_states: bool):
+                shared, pos, policy, with_states: bool, valid_len=None):
     """Scan one layer group. gparams/gstates/gcaches: list per pattern pos."""
     g = cfg.groups[gi]
 
@@ -124,7 +124,7 @@ def _group_scan(cfg: ModelConfig, gi: int, x, gparams, gstates, gcaches,
                 kind, pslices[j], h, cfg, shared=shared,
                 cache=cslices[j] if with_caches else None,
                 pos=pos, states=sslices[j] if with_states else None,
-                policy=policy)
+                policy=policy, valid_len=valid_len)
             # SP residual storage: the tensor saved at the remat boundary
             # is seq-sharded on the model axis (EXPERIMENTS.md §Perf)
             h = shard(h, policy, "batch", "seq_resid", None)
@@ -146,7 +146,7 @@ def _group_scan(cfg: ModelConfig, gi: int, x, gparams, gstates, gcaches,
 
 
 def lm_backbone(params, x, cfg: ModelConfig, *, states=None, caches=None,
-                pos=None, policy: MeshPolicy | None = None):
+                pos=None, policy: MeshPolicy | None = None, valid_len=None):
     """Run embedded hidden states through all layer groups.
     Returns (x, new_states, new_caches, aux)."""
     shared = params.get("shared_attn")
@@ -158,7 +158,7 @@ def lm_backbone(params, x, cfg: ModelConfig, *, states=None, caches=None,
             cfg, gi, x, params["groups"][gi],
             states[gi] if with_states else None,
             caches[gi] if caches is not None else None,
-            shared, pos, policy, with_states)
+            shared, pos, policy, with_states, valid_len)
         new_states.append(ns)
         new_caches.append(nc)
         aux_total = aux_total + aux.sum()
@@ -211,8 +211,10 @@ def lm_loss(params, batch: dict, cfg: ModelConfig, *, states=None,
 
 def lm_decode_step(params, token, caches, pos, cfg: ModelConfig, *,
                    policy: MeshPolicy | None = None):
-    """One serve step. token (B, 1) int32; pos: scalar absolute position of
-    this token. Returns (logits (B, V), new_caches)."""
+    """One serve step. token (B, 1) int32; pos: absolute position of this
+    token — a scalar (lockstep batch) or a (B,) vector of per-slot positions
+    (continuous batching: each serve slot is at its own depth).
+    Returns (logits (B, V), new_caches)."""
     x = params["embed"]["w"].astype(jnp.float32)[token].astype(
         jnp.dtype(cfg.dtype))
     x, _, nc, _ = lm_backbone(params, x, cfg, states=None, caches=caches,
@@ -220,17 +222,38 @@ def lm_decode_step(params, token, caches, pos, cfg: ModelConfig, *,
     return _logits(params, x, cfg, policy)[:, 0], nc
 
 
-def lm_prefill(params, tokens, cfg: ModelConfig, *, cache_len: int,
+def lm_prefill(params, tokens, cfg: ModelConfig, *, caches,
+               valid_len=None, last_only: bool = False,
                policy: MeshPolicy | None = None):
-    """Prefill: full forward + build caches for subsequent decode.
+    """Token-parallel prefill: ONE forward over the whole prompt that also
+    writes every layer's decode cache (KV slots — full and rolling — plus
+    Mamba conv buffers and recurrent states) in the same pass. No per-token
+    Python loop; decode continues from position ``tokens.shape[1]`` exactly
+    as if the prompt had been scanned through ``lm_decode_step``.
 
-    Implemented as forward WITHOUT caches (fast path), then caches are
-    constructed by re-running attention K/V projections — for the framework's
-    serve example we use the simpler token-by-token warmup for short prompts
-    and this bulk path for benchmarking (see launch/serve.py).
+    tokens (B, P) int32 prompts starting at absolute position 0; ``caches``
+    from :func:`init_lm_cache`. ``valid_len`` (B,) gives per-row true prompt
+    lengths when rows are right-padded to a common bucket length (serve
+    admission): padded positions are masked out of cache writes and freeze
+    recurrent states, so each row's caches match an exact-length prefill.
+
+    Returns (logits, new_caches): logits (B, P, V), with the next-token
+    logits for row b at ``logits[b, valid_len[b] - 1]`` (or ``[:, -1]``
+    unpadded). ``last_only=True`` gathers each row's last VALID hidden state
+    before the output projection and returns (B, 1, V) — serving only needs
+    one next-token distribution per prompt, so this skips P-1 rows of vocab
+    projection (with bucket-padded admission the saving is bucket-sized).
     """
-    logits, _, _, _ = lm_forward(params, tokens, cfg, policy=policy)
-    return logits
+    x = params["embed"]["w"].astype(jnp.float32)[tokens].astype(
+        jnp.dtype(cfg.dtype))
+    x = shard(x, policy, "batch", "seq", None)
+    x, _, nc, _ = lm_backbone(params, x, cfg, states=None, caches=caches,
+                              pos=0, policy=policy, valid_len=valid_len)
+    if last_only:
+        last = (jnp.full((x.shape[0],), x.shape[1] - 1, jnp.int32)
+                if valid_len is None else valid_len - 1)
+        x = jnp.take_along_axis(x, last[:, None, None], axis=1)   # (B, 1, d)
+    return _logits(params, x, cfg, policy), nc
 
 
 def count_params(params) -> int:

@@ -202,8 +202,18 @@ def _rolling_slot_positions(pos: jax.Array, w: int) -> jax.Array:
     return pos - (pos - slots) % w  # in (pos-W, pos]; negative if unwritten
 
 
+def is_vector_pos(pos) -> bool:
+    """Per-slot (B,) vector vs a single shared scalar — the convention for
+    decode positions and prefill valid lengths across nn/ modules."""
+    return hasattr(pos, "ndim") and pos.ndim == 1
+
+
 def decode_attention(q, cache: KVCache, pos, *, window: int = 0) -> jax.Array:
     """Single-token decode. q (B,1,H,Dh); cache holds positions <= pos.
+
+    ``pos`` is either a scalar (all rows at the same absolute position —
+    lockstep batch) or a (B,) vector of per-row positions (continuous
+    batching: every serve slot decodes at its own offset).
 
     For full caches, slot index == absolute position; for rolling caches
     (cache length == window) slot positions are reconstructed.
@@ -214,26 +224,76 @@ def decode_attention(q, cache: KVCache, pos, *, window: int = 0) -> jax.Array:
     g = h // kvh
     qg = q.reshape(b, 1, kvh, g, dh) * (dh ** -0.5)
     s = _gqa_scores(qg, cache.k).astype(jnp.float32)   # (B,KVH,G,1,S)
+    posb = pos[:, None] if is_vector_pos(pos) else jnp.full((1, 1), pos)
     if window > 0 and s_cache == window:
-        slot_pos = _rolling_slot_positions(pos, window)
+        slot_pos = _rolling_slot_positions(posb, window)   # (B|1, W)
         ok = slot_pos >= 0
     else:
-        kpos = jnp.arange(s_cache)
-        ok = kpos <= pos
+        kpos = jnp.arange(s_cache)[None, :]
+        ok = kpos <= posb
         if window > 0:
-            ok &= kpos > pos - window
-    s = s + jnp.where(ok, 0.0, NEG_INF)[None, None, None, None, :]
+            ok &= kpos > posb - window
+    s = s + jnp.where(ok, 0.0, NEG_INF)[:, None, None, None, :]
     p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
     o = _gqa_combine(p, cache.v)
     return o.reshape(b, 1, h, dh)
 
 
 def cache_update(cache: KVCache, k_new, v_new, pos, *, window: int = 0) -> KVCache:
-    """Write one token's K/V at ``pos`` (rolling if cache len == window)."""
+    """Write one token's K/V at ``pos`` (rolling if cache len == window).
+    ``pos`` scalar or (B,) per-row positions."""
     s_cache = cache.k.shape[1]
-    slot = pos % window if (window > 0 and s_cache == window) else pos
+    rolling = window > 0 and s_cache == window
+    if is_vector_pos(pos):
+        slot = pos % window if rolling else pos
+        rows = jnp.arange(cache.k.shape[0])
+        k = cache.k.at[rows, slot].set(k_new[:, 0])
+        v = cache.v.at[rows, slot].set(v_new[:, 0])
+        return KVCache(k=k, v=v)
+    slot = pos % window if rolling else pos
     k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
     v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
+    return KVCache(k=k, v=v)
+
+
+def cache_update_prefill(cache: KVCache, k_new, v_new, offset, *,
+                         window: int = 0,
+                         valid_len: jax.Array | None = None) -> KVCache:
+    """Write a whole prompt's K/V (S tokens starting at absolute position
+    ``offset``) into the cache in one pass — the batched-prefill analogue of
+    scanning :func:`cache_update` token by token.
+
+    ``valid_len`` (B,) marks per-row true prompt lengths for right-padded
+    (length-bucketed) prefill: positions >= valid_len are NOT written, so
+    the cache is indistinguishable from an exact-length prefill and the
+    decode masks (slot-position arithmetic included) stay correct.
+    """
+    s_cache = cache.k.shape[1]
+    b, s = k_new.shape[:2]
+    rolling = window > 0 and s_cache == window
+    if rolling:
+        # Slot j of a rolling cache must hold the LAST valid position p with
+        # p % W == j. Gather that position's K/V per (row, slot); slots whose
+        # owner predates this prefill chunk keep their current contents.
+        last = (jnp.full((b,), offset + s)
+                if valid_len is None else jnp.minimum(offset + s, valid_len)) - 1
+        slots = jnp.arange(window)[None, :]
+        owner = last[:, None] - (last[:, None] - slots) % window   # (B, W)
+        take = jnp.clip(owner - offset, 0, s - 1)
+        kg = jnp.take_along_axis(k_new, take[..., None, None], axis=1)
+        vg = jnp.take_along_axis(v_new, take[..., None, None], axis=1)
+        write = (owner >= offset)[..., None, None]
+        return KVCache(k=jnp.where(write, kg, cache.k),
+                       v=jnp.where(write, vg, cache.v))
+    if valid_len is not None:
+        cur_k = jax.lax.dynamic_slice_in_dim(cache.k, offset, s, axis=1)
+        cur_v = jax.lax.dynamic_slice_in_dim(cache.v, offset, s, axis=1)
+        pos_abs = offset + jnp.arange(s)
+        valid = (pos_abs[None, :] < valid_len[:, None])[..., None, None]
+        k_new = jnp.where(valid, k_new, cur_k)
+        v_new = jnp.where(valid, v_new, cur_v)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, offset, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, offset, axis=1)
     return KVCache(k=k, v=v)
 
 
@@ -255,13 +315,19 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
                     states: dict | None = None,
                     policy: MeshPolicy | None = None,
                     kv_memory: jax.Array | None = None,
+                    valid_len: jax.Array | None = None,
                     chunked_threshold: int = 2048):
     """Attention sublayer (projections + core + output projection).
 
     Modes:
-      - train/prefill: cache None      -> full (chunked) attention over x
-      - decode:        cache given     -> one-token step, cache updated
-      - cross:         kv_memory given -> keys/values from encoder memory
+      - train:   cache None            -> full (chunked) attention over x
+      - prefill: cache given, S > 1    -> token-parallel forward over the
+                 whole prompt; K/V for ALL positions written to the cache in
+                 one pass (``pos`` = offset of x[_, 0], normally 0;
+                 ``valid_len`` (B,) masks right-padding of bucketed prompts)
+      - decode:  cache given, S == 1   -> one-token step, cache updated
+                 (``pos`` scalar, or (B,) per-slot for continuous batching)
+      - cross:   kv_memory given       -> keys/values from encoder memory
     Returns (out, new_cache, new_states).
     """
     h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
@@ -302,11 +368,27 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
         else:
             o = dense_attention(q, k, v, causal=causal, window=window)
         new_cache = None
-    else:  # decode one token at absolute position ``pos``
+    elif sq > 1:  # token-parallel prefill: attend + build caches in one pass
         k = proj("wk", x).reshape(b, sq, kvh, dh)
         v = proj("wv", x).reshape(b, sq, kvh, dh)
-        q = maybe_rope(q, jnp.full((sq,), pos))
-        k = maybe_rope(k, jnp.full((sq,), pos))
+        offset = 0 if pos is None else pos
+        positions = offset + jnp.arange(sq)
+        q = maybe_rope(q, positions)
+        k = maybe_rope(k, positions)
+        new_cache = cache_update_prefill(cache, k, v, offset, window=window,
+                                         valid_len=valid_len)
+        if sq > chunked_threshold:
+            o = chunked_attention(q, k, v, causal=causal, window=window,
+                                  q_offset=offset)
+        else:
+            o = dense_attention(q, k, v, causal=causal, window=window,
+                                q_offset=offset)
+    else:  # decode one token at absolute position ``pos`` (scalar or (B,))
+        k = proj("wk", x).reshape(b, sq, kvh, dh)
+        v = proj("wv", x).reshape(b, sq, kvh, dh)
+        rope_pos = pos[:, None] if is_vector_pos(pos) else jnp.full((sq,), pos)
+        q = maybe_rope(q, rope_pos)
+        k = maybe_rope(k, rope_pos)
         new_cache = cache_update(cache, k, v, pos, window=window)
         o = decode_attention(q, new_cache, pos, window=window)
     o = o.reshape(b, sq, h * dh)

@@ -118,8 +118,11 @@ def apply_linear(p: dict, x: jax.Array, cfg: WasiConfig,
             xt, new_state = compress(x)
             y = wasi_matmul(x, p["L"], p["R"], xt)
         else:
-            h = jnp.einsum("...i,ki->...k", x, p["R"])
-            y = jnp.einsum("...k,ok->...o", h, p["L"])
+            # no-ASI factored path (serving, and `wsi` factored training):
+            # fused Pallas kernel on TPU, XLA einsum pair elsewhere —
+            # ops.lowrank_matmul dispatches per backend
+            from repro.kernels.ops import lowrank_matmul
+            y = lowrank_matmul(x, p["R"], p["L"])
     else:
         if state is not None:
             xt, new_state = compress(x)

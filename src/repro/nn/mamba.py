@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.distributed.sharding import MeshPolicy, shard
+from repro.nn.attention import is_vector_pos
 from repro.nn.linear import apply_linear, asi_spec, init_linear, wasi_applies
 
 
@@ -48,6 +49,27 @@ def _conv_step(state_buf: jax.Array, x_t: jax.Array, w: jax.Array,
     window = jnp.concatenate([state_buf, x_t[:, None, :]], axis=1)  # (B, K, C)
     y = jnp.einsum("bkc,kc->bc", window, w) + b[None, :]
     return window[:, 1:, :], y
+
+
+def _prefill_conv_buf(prev_buf: jax.Array, raw_seq: jax.Array,
+                      count) -> jax.Array:
+    """Rolling conv buffer after consuming ``count`` tokens of ``raw_seq``
+    (pre-conv inputs) — what a scan of ``_conv_step`` from position 0 would
+    leave behind. ``count`` is a scalar or (B,) per-row valid length, so
+    right-padded (bucketed) prefill rows pick up their own last K-1 REAL
+    inputs.
+
+    Prefill always starts at absolute position 0, so the pre-history is
+    zeros BY CONSTRUCTION — ``prev_buf`` supplies only the (B, K-1, C)
+    buffer shape, never its contents. (A recycled serve slot hands in a
+    stale buffer from the previous request; reading it would leak that
+    request's activations into prompts shorter than K-1.)
+    """
+    b, km1 = prev_buf.shape[0], prev_buf.shape[1]
+    hist = jnp.concatenate([jnp.zeros_like(prev_buf), raw_seq], axis=1)
+    cnt = count if is_vector_pos(count) else jnp.full((b,), count)
+    idx = cnt[:, None] + jnp.arange(km1)[None, :]         # hist idx of the
+    return jnp.take_along_axis(hist, idx[..., None], axis=1)  # last K-1 valid
 
 
 # ---------------------------------------------------------------------------
@@ -92,7 +114,8 @@ def init_mamba1_state(key, cfg: ModelConfig, batch: int, seq: int,
     }
 
 
-def _selective_scan(u, dt, A, B, C, D, chunk: int = 128):
+def _selective_scan(u, dt, A, B, C, D, chunk: int = 128, *,
+                    return_final: bool = False):
     """u (B,S,di), dt (B,S,di), A (di,N), B/C (B,S,N) -> y (B,S,di).
 
     h_t = exp(dt_t A) h_{t-1} + dt_t B_t u_t ;  y_t = C_t . h_t + D u_t
@@ -102,6 +125,10 @@ def _selective_scan(u, dt, A, B, C, D, chunk: int = 128):
     (B,chunk,di,N) — never the full-sequence state history (which for
     falcon-mamba at 4k would be tens of GiB). The chunk body is
     jax.checkpoint'ed so the backward recomputes instead of stacking.
+
+    ``return_final=True`` additionally returns h_S (B,di,N) — the recurrent
+    state after the last token, i.e. exactly the decode-cache state a scan
+    of single-token steps would have produced (token-parallel prefill).
     """
     bsz, s, di = u.shape
     n = B.shape[-1]
@@ -125,22 +152,34 @@ def _selective_scan(u, dt, A, B, C, D, chunk: int = 128):
     xs = tuple(jnp.moveaxis(t.reshape(bsz, nc, chunk, *t.shape[2:]), 1, 0)
                for t in (u, dt, B, C))
     h0 = jnp.zeros((bsz, di, n), u.dtype)
-    _, ys = jax.lax.scan(per_chunk, h0, xs)
+    h_last, ys = jax.lax.scan(per_chunk, h0, xs)
     y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, di)
-    return y + D[None, None] * u
+    y = y + D[None, None] * u
+    if return_final:
+        return y, h_last
+    return y
 
 
 def apply_mamba1(p: dict, x: jax.Array, cfg: ModelConfig, *,
                  state: MambaState | None = None,
                  states: dict | None = None,
-                 policy: MeshPolicy | None = None):
-    """Returns (y, new_state, new_asi_states)."""
+                 policy: MeshPolicy | None = None,
+                 valid_len: jax.Array | None = None):
+    """Returns (y, new_state, new_asi_states).
+
+    Modes: train (state None); token-parallel prefill (state given, S > 1 —
+    the full-sequence scan also emits the final recurrent state + conv
+    buffer, so decode continues exactly where a scanned prefill would);
+    decode (state given, S == 1). ``valid_len`` (B,) freezes the recurrence
+    (dt = 0) past each row's true prompt length for right-padded prefill.
+    """
     ssm = cfg.ssm
     di = ssm.expand * cfg.d_model
     n = ssm.d_state
     dtr = ssm.dt_rank or max(cfg.d_model // 16, 1)
     st = states or {}
     new_st = dict(st)
+    prefill = state is not None and x.shape[1] > 1
 
     def lin(name, inp):
         y, ns = apply_linear(p[name], inp, cfg.wasi, st.get(name))
@@ -153,15 +192,31 @@ def apply_mamba1(p: dict, x: jax.Array, cfg: ModelConfig, *,
     u, z = jnp.split(xz, 2, axis=-1)
     A = -jnp.exp(p["A_log"])
 
-    if state is None:  # train / prefill
+    if state is None or prefill:  # train, or prefill (cache-building) pass
+        s = u.shape[1]
+        u_raw = u
         u = _causal_conv(u, p["conv_w"], p["conv_b"])
         u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
         dbc = lin("x_proj", u)
         dt_r, B, C = jnp.split(dbc, [dtr, dtr + n], axis=-1)
         dt = jax.nn.softplus(lin("dt_proj", dt_r).astype(jnp.float32))
-        y = _selective_scan(u.astype(jnp.float32), dt, A,
-                            B.astype(jnp.float32), C.astype(jnp.float32), p["D"])
-        new_state = None
+        if valid_len is not None:
+            # dt = 0 past the true length: exp(0*A) = 1 and dt*B*u = 0, so
+            # the state rides through padding untouched
+            live = jnp.arange(s)[None, :] < valid_len[:, None]
+            dt = jnp.where(live[..., None], dt, 0.0)
+        scanned = _selective_scan(u.astype(jnp.float32), dt, A,
+                                  B.astype(jnp.float32), C.astype(jnp.float32),
+                                  p["D"], return_final=prefill)
+        if prefill:
+            y, h_final = scanned
+            cnt = s if valid_len is None else valid_len
+            new_state = MambaState(
+                ssm=h_final,
+                conv=_prefill_conv_buf(state.conv, u_raw, cnt))
+        else:
+            y = scanned
+            new_state = None
     else:  # decode one token: x (B,1,d)
         u1 = u[:, 0]
         conv_buf, u1 = _conv_step(state.conv, u1, p["conv_w"], p["conv_b"])
@@ -239,17 +294,30 @@ def init_mamba2_state(key, cfg: ModelConfig, batch: int, seq: int,
     }
 
 
-def _ssd_chunked(u, dt, A, B, C, D, chunk: int):
+def _ssd_chunked(u, dt, A, B, C, D, chunk: int, *,
+                 return_final: bool = False):
     """SSD (Mamba-2) chunked scan.
 
     u (B,S,H,dh); dt (B,S,H) >0; A (H,)<0; B,C (B,S,N); D (H,).
     Within each chunk of length Q: y_intra = (L ⊙ (C B^T)) (dt u), where
     L[i,j] = exp(sum_{j<k<=i} dt_k A) for j<=i. Across chunks a scan carries
     the (H, dh, N) state. All heavy ops are matmuls (MXU-friendly).
+
+    Ragged S is zero-padded up to a chunk multiple with dt = 0 — an identity
+    step (decay exp(0) = 1, zero input), so the carried state and the sliced
+    output are exactly those of the unpadded sequence. ``return_final=True``
+    additionally returns the (B,H,dh,N) state after token S (prefill).
     """
     b, s, h, dh = u.shape
     n = B.shape[-1]
-    assert s % chunk == 0, "sequence must be divisible by SSD chunk"
+    s_orig = s
+    if s % chunk != 0:
+        pad = chunk - s % chunk
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
     nc = s // chunk
     uc = u.reshape(b, nc, chunk, h, dh)
     dtc = dt.reshape(b, nc, chunk, h)
@@ -283,16 +351,24 @@ def _ssd_chunked(u, dt, A, B, C, D, chunk: int):
     s0 = jnp.zeros((b, h, dh, n), u.dtype)
     xs = (jnp.moveaxis(uc, 1, 0), jnp.moveaxis(dtc, 1, 0),
           jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
-    _, ys = jax.lax.scan(per_chunk, s0, xs)                 # (NC,B,Q,H,dh)
+    s_last, ys = jax.lax.scan(per_chunk, s0, xs)            # (NC,B,Q,H,dh)
     y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, dh)
-    return y + D[None, None, :, None] * u
+    y = (y + D[None, None, :, None] * u)[:, :s_orig]
+    if return_final:
+        return y, s_last
+    return y
 
 
 def apply_mamba2(p: dict, x: jax.Array, cfg: ModelConfig, *,
                  state: MambaState | None = None,
                  states: dict | None = None,
-                 policy: MeshPolicy | None = None):
-    """Returns (y, new_state, new_asi_states)."""
+                 policy: MeshPolicy | None = None,
+                 valid_len: jax.Array | None = None):
+    """Returns (y, new_state, new_asi_states).
+
+    Same mode split as :func:`apply_mamba1`: train / token-parallel prefill
+    (state given, S > 1: emits final SSD state + both conv buffers) / decode.
+    """
     ssm = cfg.ssm
     di = ssm.expand * cfg.d_model
     n = ssm.d_state
@@ -300,6 +376,7 @@ def apply_mamba2(p: dict, x: jax.Array, cfg: ModelConfig, *,
     dh = ssm.head_dim
     st = states or {}
     new_st = dict(st)
+    prefill = state is not None and x.shape[1] > 1
 
     def lin(name, inp):
         y, ns = apply_linear(p[name], inp, cfg.wasi, st.get(name))
@@ -314,20 +391,34 @@ def apply_mamba2(p: dict, x: jax.Array, cfg: ModelConfig, *,
     Bv, Cv, dt_raw = jnp.split(bcdt, [n, 2 * n], axis=-1)
     A = -jnp.exp(p["A_log"])
 
-    if state is None:
+    if state is None or prefill:
+        u_raw, bc_raw = u, jnp.concatenate([Bv, Cv], axis=-1)
         u = _causal_conv(u, p["conv_w"], p["conv_b"])       # sharded channels
         u = jax.nn.silu(u.astype(jnp.float32)).astype(x.dtype)
-        bc = _causal_conv(jnp.concatenate([Bv, Cv], axis=-1),
-                          p["conv_w_bc"], p["conv_b_bc"])   # replicated, tiny
+        bc = _causal_conv(bc_raw, p["conv_w_bc"], p["conv_b_bc"])  # repl, tiny
         bc = jax.nn.silu(bc.astype(jnp.float32)).astype(x.dtype)
         Bv, Cv = jnp.split(bc, 2, axis=-1)
         dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None])
         bsz, s, _ = u.shape
-        y = _ssd_chunked(u.reshape(bsz, s, nh, dh).astype(jnp.float32),
-                         dt, A, Bv.astype(jnp.float32), Cv.astype(jnp.float32),
-                         p["D"], min(ssm.chunk, s))
+        if valid_len is not None:
+            live = jnp.arange(s)[None, :] < valid_len[:, None]
+            dt = jnp.where(live[..., None], dt, 0.0)        # identity steps
+        scanned = _ssd_chunked(u.reshape(bsz, s, nh, dh).astype(jnp.float32),
+                               dt, A, Bv.astype(jnp.float32),
+                               Cv.astype(jnp.float32),
+                               p["D"], min(ssm.chunk, s), return_final=prefill)
+        if prefill:
+            y, s_final = scanned
+            cnt = s if valid_len is None else valid_len
+            conv_u_prev, conv_bc_prev = state.conv
+            new_state = MambaState(
+                ssm=s_final,
+                conv=(_prefill_conv_buf(conv_u_prev, u_raw, cnt),
+                      _prefill_conv_buf(conv_bc_prev, bc_raw, cnt)))
+        else:
+            y = scanned
+            new_state = None
         y = y.reshape(bsz, s, di)
-        new_state = None
     else:  # decode
         conv_u, conv_bc = state.conv
         conv_u, u1 = _conv_step(conv_u, u[:, 0], p["conv_w"], p["conv_b"])

@@ -1,0 +1,8 @@
+"""Request-level serving subsystem (continuous batching over WASI models).
+
+The engine owns the decode caches and the slot <-> request mapping; model
+code stays purely functional (models/lm.py). See docs/architecture.md for
+the request lifecycle diagram.
+"""
+
+from repro.serve.engine import Request, ServeEngine, bucket_for

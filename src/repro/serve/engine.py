@@ -1,0 +1,236 @@
+"""Continuous-batching serve engine: admission queue, per-slot KV caches,
+prompt-length bucketing, slot recycling on EOS.
+
+Design (the TrainDeeploy lesson: kernel and serving loop co-designed):
+
+* The engine owns ONE set of batched decode caches (`init_lm_cache` with
+  batch = max_slots). A *slot* is a batch row; admitting a request means
+  prefilling its prompt into that row, finishing means freeing the row for
+  the next queued request. Model code never sees the queue.
+
+* Prefill is token-parallel (`lm_prefill`): one forward over the whole
+  prompt writes every layer's KV slots / conv buffers / SSM states. To keep
+  jit recompiles bounded, admitted prompts are right-padded to a small set
+  of bucket lengths and the per-row true length rides in as `valid_len` —
+  padded positions are masked out of cache writes and freeze recurrent
+  state, so the caches are indistinguishable from exact-length prefill.
+  Same-bucket admissions prefill together as one batch.
+
+* Decode runs ALL slots in lockstep shapes but at per-slot positions
+  (`pos` is a (B,) vector): every active request decodes one token per
+  engine step regardless of when it was admitted — that is the continuous
+  batching. Free slots ride along as dead rows (their writes land at stale
+  positions that the causal/rolling masks provably never read back).
+
+The jit cache ends up with exactly one decode executable plus one prefill
+executable per (bucket, group-size) pair actually seen.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.lm import init_lm_cache, lm_decode_step, lm_prefill
+
+DEFAULT_BUCKETS = (8, 16, 32, 64, 128, 256)
+
+
+def bucket_for(length: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket >= length; prompts beyond the largest bucket get an
+    exact-length prefill (one extra compile, still a single forward)."""
+    for b in buckets:
+        if b >= length:
+            return b
+    return length
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    eos_id: int | None = None
+    generated: list[int] = dataclasses.field(default_factory=list)
+    submitted_at: float = 0.0
+    first_token_at: float = 0.0
+    finished_at: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        if self.generated and self.eos_id is not None \
+                and self.generated[-1] == self.eos_id:
+            return True
+        return len(self.generated) >= self.max_new
+
+    @property
+    def tokens(self) -> list[int]:
+        return list(self.prompt) + list(self.generated)
+
+
+class ServeEngine:
+    """Greedy-decoding continuous-batching engine over a fixed slot pool."""
+
+    def __init__(self, params, cfg: ModelConfig, *, max_slots: int = 4,
+                 max_cache: int = 512,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS):
+        self.params = params
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_cache = max_cache
+        self.buckets = tuple(sorted(buckets))
+        self.caches = init_lm_cache(cfg, max_slots, max_cache,
+                                    dtype=jnp.dtype(cfg.dtype))
+        self.slots: list[Request | None] = [None] * max_slots
+        # per-slot next decode position / next input token (row-aligned)
+        self.pos = np.zeros(max_slots, np.int32)
+        self.next_tok = np.zeros(max_slots, np.int32)
+        self.queue: collections.deque[Request] = collections.deque()
+        self._rid = 0
+        self.stats = {"prefill_tokens": 0, "decode_steps": 0,
+                      "decode_tokens": 0, "completed": 0, "wall_s": 0.0,
+                      "prefill_s": 0.0, "decode_s": 0.0}
+
+        def _decode(params_, toks, caches, pos):
+            return lm_decode_step(params_, toks, caches, pos, cfg)
+
+        def _prefill(params_, toks, caches, valid_len, rows):
+            # gather the admitted rows, prefill them as one batch, scatter
+            # back — cache leaves are (repeat, B, ...), batch on axis 1
+            sub = jax.tree.map(lambda a: a[:, rows], caches)
+            logits, sub = lm_prefill(params_, toks, cfg, caches=sub,
+                                     valid_len=valid_len, last_only=True)
+            new = jax.tree.map(lambda g, l: g.at[:, rows].set(l), caches, sub)
+            return jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32), new
+
+        # donate the cache pytree: the engine rebinds self.caches on every
+        # call and never touches the old buffers, so XLA can update KV/SSM
+        # state in place instead of copying the whole cache per token.
+        # (CPU ignores donation with a warning — skip it there.)
+        donate = () if jax.default_backend() == "cpu" else (2,)
+        self._decode = jax.jit(_decode, donate_argnums=donate)
+        self._prefill = jax.jit(_prefill, donate_argnums=donate)
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], max_new: int,
+               eos_id: int | None = None) -> Request:
+        if len(prompt) + max_new > self.max_cache:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
+                f"max_cache ({self.max_cache})")
+        if len(prompt) < 1:
+            raise ValueError("empty prompt")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1 (prefill always emits "
+                             "the first token)")
+        req = Request(rid=self._rid, prompt=list(map(int, prompt)),
+                      max_new=max_new, eos_id=eos_id,
+                      submitted_at=time.perf_counter())
+        self._rid += 1
+        self.queue.append(req)
+        return req
+
+    # -- internals ----------------------------------------------------------
+
+    def _finish_if_done(self, slot: int) -> None:
+        req = self.slots[slot]
+        if req is not None and req.done:
+            req.finished_at = time.perf_counter()
+            self.slots[slot] = None           # recycle: next _admit reuses it
+            self.stats["completed"] += 1
+
+    def _admit(self) -> None:
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        if not free or not self.queue:
+            return
+        t0 = time.perf_counter()
+        admitted: list[tuple[int, Request]] = []
+        while free and self.queue:
+            admitted.append((free.pop(0), self.queue.popleft()))
+        # group by bucket so same-shape prompts prefill as one batch; the
+        # bucket is capped at max_cache (prompt itself always fits: submit()
+        # validated len + max_new <= max_cache)
+        groups: dict[int, list[tuple[int, Request]]] = collections.defaultdict(list)
+        for slot, req in admitted:
+            bucket = min(bucket_for(len(req.prompt), self.buckets),
+                         self.max_cache)
+            groups[bucket].append((slot, req))
+        for bucket, group in groups.items():
+            rows = np.array([s for s, _ in group], np.int32)
+            vlen = np.array([len(r.prompt) for _, r in group], np.int32)
+            toks = np.zeros((len(group), bucket), np.int32)
+            for i, (_, r) in enumerate(group):
+                toks[i, :len(r.prompt)] = r.prompt
+            first, self.caches = self._prefill(
+                self.params, jnp.asarray(toks), self.caches,
+                jnp.asarray(vlen), jnp.asarray(rows))
+            first = np.asarray(first)
+            now = time.perf_counter()
+            for i, (slot, req) in enumerate(group):
+                self.slots[slot] = req
+                req.generated.append(int(first[i]))
+                req.first_token_at = now
+                self.pos[slot] = int(vlen[i])
+                self.next_tok[slot] = int(first[i])
+                self.stats["prefill_tokens"] += int(vlen[i])
+                self._finish_if_done(slot)
+        self.stats["prefill_s"] += time.perf_counter() - t0
+
+    def _decode_all(self) -> None:
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return
+        t0 = time.perf_counter()
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(self.next_tok[:, None]),
+            self.caches, jnp.asarray(self.pos))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.stats["decode_steps"] += 1
+        for slot in active:
+            req = self.slots[slot]
+            req.generated.append(int(nxt[slot]))
+            self.pos[slot] += 1
+            self.next_tok[slot] = int(nxt[slot])
+            self.stats["decode_tokens"] += 1
+            self._finish_if_done(slot)
+        self.stats["decode_s"] += time.perf_counter() - t0
+
+    # -- driving ------------------------------------------------------------
+
+    def step(self) -> None:
+        """One engine tick: admit whatever fits, then decode every active
+        slot by one token. Accumulates wall_s so summary() rates are
+        correct for callers driving step() directly, not just run()."""
+        t0 = time.perf_counter()
+        self._admit()
+        self._decode_all()
+        self.stats["wall_s"] += time.perf_counter() - t0
+
+    def run(self) -> None:
+        """Drain queue + slots to completion."""
+        while self.queue or any(r is not None for r in self.slots):
+            self.step()
+
+    # -- reporting ----------------------------------------------------------
+
+    def reset_stats(self) -> None:
+        """Zero all counters/timers (e.g. after warmup runs)."""
+        for k in self.stats:
+            self.stats[k] = type(self.stats[k])()
+
+    def summary(self) -> dict:
+        """Counters plus derived rates. Phase throughputs use each phase's
+        own wall time (prefill_s / decode_s) so they measure the phase,
+        not the mix; requests_s uses total engine time."""
+        s = dict(self.stats)
+        s["prefill_tok_s"] = s["prefill_tokens"] / max(s["prefill_s"], 1e-9)
+        s["decode_tok_s"] = s["decode_tokens"] / max(s["decode_s"], 1e-9)
+        s["requests_s"] = s["completed"] / max(s["wall_s"], 1e-9)
+        return s

@@ -1,0 +1,38 @@
+"""Minimal stand-in for when `hypothesis` isn't installed.
+
+conftest.py registers this module as ``sys.modules["hypothesis"]``, so
+``from hypothesis import given, settings, strategies`` works everywhere:
+property tests decorated with @given SKIP cleanly instead of killing the
+whole module at collection; every plain pytest test in the same file keeps
+running. Install the real thing with `pip install -e .[test]`.
+"""
+import pytest
+
+
+class _Strategy:
+    """Chainable dummy: any call or attribute yields another strategy, so
+    idiomatic compositions (st.integers(0, 8).filter(...).map(...)) still
+    import cleanly and the @given test skips at run time."""
+
+    def __call__(self, *a, **k):
+        return self
+
+    def __getattr__(self, name):
+        return self
+
+
+class _Strategies:
+    def __getattr__(self, name):
+        return _Strategy()
+
+
+st = _Strategies()
+strategies = st
+
+
+def given(*a, **k):
+    return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+
+def settings(*a, **k):
+    return lambda f: f

@@ -4,3 +4,15 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# When `hypothesis` isn't installed, register the stub under its name so a
+# plain `from hypothesis import given, ...` works in every test file and
+# property tests skip instead of killing collection (the seed-state failure
+# mode). New property-test files need no boilerplate.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub

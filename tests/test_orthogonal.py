@@ -3,6 +3,7 @@ subspace (DESIGN.md §3.1)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core.orthogonal import (

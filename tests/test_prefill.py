@@ -1,0 +1,160 @@
+"""Token-parallel prefill vs the scanned single-token-decode oracle.
+
+The contract (models/lm.py::lm_prefill): ONE forward over the prompt leaves
+every layer's decode caches — full KV, rolling-window KV, Mamba conv
+buffers and recurrent states — in the same state a scan of lm_decode_step
+would have. Pure-attention stacks match BITWISE (identical op sequences per
+row); Mamba recurrences and rolling-window softmax run through parallel
+scans whose float reassociation shifts low-order bits, so those compare at
+tight f32 tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models.lm import (
+    init_lm,
+    init_lm_cache,
+    lm_decode_step,
+    lm_prefill,
+)
+
+KEY = jax.random.PRNGKey(0)
+B, P, CACHE = 2, 12, 24
+
+# arch -> exact: bitwise cache equality expected (pure causal attention);
+# others allow parallel-scan reassociation tolerance
+CASES = [("qwen2-0.5b", True),     # dense causal
+         ("gemma3-4b", False),     # sliding-window (rolling caches, W=8 < P)
+         ("falcon-mamba-7b", False),   # mamba1 selective scan
+         ("zamba2-7b", False)]     # mamba2 SSD + shared attention
+
+
+def _scanned_oracle(params, cfg, prompt):
+    caches = init_lm_cache(cfg, B, CACHE, dtype=jnp.float32)
+    step = jax.jit(lambda pr, t, c, pos: lm_decode_step(pr, t, c, pos, cfg))
+    logits = None
+    for i in range(prompt.shape[1]):
+        logits, caches = step(params, prompt[:, i:i + 1], caches, i)
+    return logits, caches
+
+
+@pytest.mark.parametrize("arch,exact", CASES)
+def test_prefill_matches_scanned_decode(arch, exact):
+    cfg = configs.get_smoke(arch)
+    params = init_lm(KEY, cfg)
+    prompt = jax.random.randint(KEY, (B, P), 0, cfg.vocab_size)
+
+    logits_o, caches_o = _scanned_oracle(params, cfg, prompt)
+
+    caches = init_lm_cache(cfg, B, CACHE, dtype=jnp.float32)
+    logits_p, caches_p = jax.jit(
+        lambda pr, t, c: lm_prefill(pr, t, cfg, caches=c))(
+        params, prompt, caches)
+
+    np.testing.assert_allclose(np.asarray(logits_p[:, -1]),
+                               np.asarray(logits_o), rtol=1e-5, atol=1e-5)
+    for o, p_ in zip(jax.tree.leaves(caches_o), jax.tree.leaves(caches_p)):
+        if exact:
+            np.testing.assert_array_equal(np.asarray(o), np.asarray(p_))
+        else:
+            np.testing.assert_allclose(np.asarray(o, np.float32),
+                                       np.asarray(p_, np.float32),
+                                       rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", [a for a, _ in CASES])
+def test_padded_prefill_matches_exact_length(arch):
+    """Right-padded bucketed prefill with valid_len must leave caches (and
+    last-valid-token logits) identical to an exact-length prefill — the
+    invariant serve admission relies on."""
+    cfg = configs.get_smoke(arch)
+    params = init_lm(KEY, cfg)
+    lens = jnp.array([7, P], jnp.int32)          # ragged rows, bucket = P
+    prompt = jax.random.randint(KEY, (B, P), 0, cfg.vocab_size)
+
+    caches = init_lm_cache(cfg, B, CACHE, dtype=jnp.float32)
+    logits_pad, caches_pad = jax.jit(
+        lambda pr, t, c, vl: lm_prefill(pr, t, cfg, caches=c, valid_len=vl))(
+        params, prompt, caches, lens)
+
+    for row, true_len in enumerate(map(int, lens)):
+        caches1 = init_lm_cache(cfg, 1, CACHE, dtype=jnp.float32)
+        logits1, caches1 = jax.jit(
+            lambda pr, t, c: lm_prefill(pr, t, cfg, caches=c))(
+            params, prompt[row:row + 1, :true_len], caches1)
+        np.testing.assert_allclose(
+            np.asarray(logits_pad[row, true_len - 1]),
+            np.asarray(logits1[0, -1]), rtol=1e-5, atol=1e-5)
+        for pad_leaf, one_leaf in zip(jax.tree.leaves(caches_pad),
+                                      jax.tree.leaves(caches1)):
+            # cache leaves are (repeat, B, ...): compare this row only
+            np.testing.assert_allclose(
+                np.asarray(pad_leaf[:, row:row + 1], np.float32),
+                np.asarray(one_leaf, np.float32), rtol=1e-4, atol=1e-4)
+
+
+def test_last_only_prefill_matches_full():
+    """last_only=True (the serving path: one vocab projection per prompt)
+    must return exactly logits[b, valid_len[b]-1] of the full projection,
+    with identical caches."""
+    cfg = configs.get_smoke("qwen2-0.5b")
+    params = init_lm(KEY, cfg)
+    lens = jnp.array([5, P], jnp.int32)
+    prompt = jax.random.randint(KEY, (B, P), 0, cfg.vocab_size)
+    full, caches_f = lm_prefill(
+        params, prompt, cfg,
+        caches=init_lm_cache(cfg, B, CACHE, dtype=jnp.float32),
+        valid_len=lens)
+    last, caches_l = lm_prefill(
+        params, prompt, cfg,
+        caches=init_lm_cache(cfg, B, CACHE, dtype=jnp.float32),
+        valid_len=lens, last_only=True)
+    want = jnp.take_along_axis(full, (lens - 1)[:, None, None], axis=1)
+    np.testing.assert_array_equal(np.asarray(last), np.asarray(want))
+    for a, b in zip(jax.tree.leaves(caches_f), jax.tree.leaves(caches_l)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_decode_continues_from_prefill():
+    """Greedy decode after batched prefill == greedy decode after scanned
+    prefill, several tokens deep (caches truly interchangeable)."""
+    cfg = configs.get_smoke("qwen2-0.5b")
+    params = init_lm(KEY, cfg)
+    prompt = jax.random.randint(KEY, (B, P), 0, cfg.vocab_size)
+    step = jax.jit(lambda pr, t, c, pos: lm_decode_step(pr, t, c, pos, cfg))
+
+    def roll(logits, caches):
+        toks = []
+        for j in range(5):
+            nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            toks.append(nxt)
+            logits, caches = step(params, nxt, caches, P + j)
+        return jnp.concatenate(toks, axis=1)
+
+    logits_o, caches_o = _scanned_oracle(params, cfg, prompt)
+    caches = init_lm_cache(cfg, B, CACHE, dtype=jnp.float32)
+    logits_p, caches_p = jax.jit(
+        lambda pr, t, c: lm_prefill(pr, t, cfg, caches=c))(
+        params, prompt, caches)
+    np.testing.assert_array_equal(np.asarray(roll(logits_o, caches_o)),
+                                  np.asarray(roll(logits_p[:, -1], caches_p)))
+
+
+def test_vector_pos_decode_matches_scalar():
+    """A (B,) per-slot position vector with equal entries must reproduce the
+    scalar-pos decode step exactly (continuous-batching decode path)."""
+    cfg = configs.get_smoke("gemma3-4b")   # rolling-window slot arithmetic
+    params = init_lm(KEY, cfg)
+    prompt = jax.random.randint(KEY, (B, P), 0, cfg.vocab_size)
+    _, caches = _scanned_oracle(params, cfg, prompt)
+    tok = jax.random.randint(KEY, (B, 1), 0, cfg.vocab_size)
+
+    logits_s, caches_s = lm_decode_step(params, tok, caches, P, cfg)
+    logits_v, caches_v = lm_decode_step(params, tok, caches,
+                                        jnp.full((B,), P, jnp.int32), cfg)
+    np.testing.assert_array_equal(np.asarray(logits_s), np.asarray(logits_v))
+    for a, b in zip(jax.tree.leaves(caches_s), jax.tree.leaves(caches_v)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,120 @@
+"""Continuous-batching serve engine: admission, bucketing, recycling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.launch.serve import generate
+from repro.models.lm import init_lm
+from repro.serve import ServeEngine, bucket_for
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _engine(arch="qwen2-0.5b", **kw):
+    cfg = configs.get_smoke(arch)
+    params = init_lm(KEY, cfg, jnp.dtype(cfg.dtype))
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_cache", 64)
+    kw.setdefault("buckets", (4, 8, 16))
+    return ServeEngine(params, cfg, **kw), cfg, params
+
+
+def test_bucket_for():
+    assert bucket_for(3, (4, 8)) == 4
+    assert bucket_for(4, (4, 8)) == 4
+    assert bucket_for(9, (4, 8)) == 9   # beyond largest: exact length
+
+
+def test_more_requests_than_slots_recycles():
+    eng, cfg, _ = _engine()
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(list(rng.integers(0, cfg.vocab_size, 3 + 2 * i)),
+                       max_new=4) for i in range(5)]
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert all(len(r.generated) == 4 for r in reqs)
+    assert eng.stats["completed"] == 5
+    assert eng.queue == type(eng.queue)()          # drained
+    assert all(s is None for s in eng.slots)       # all recycled
+    # prefill counted true prompt tokens, not bucket padding
+    assert eng.stats["prefill_tokens"] == sum(3 + 2 * i for i in range(5))
+
+
+def test_engine_matches_lockstep_generate():
+    """Greedy tokens from the continuous-batching path (bucketed ragged
+    prefill + per-slot-position decode alongside unrelated requests) must
+    equal the lockstep single-prompt path."""
+    eng, cfg, params = _engine()
+    rng = np.random.default_rng(1)
+    prompts = [list(rng.integers(0, cfg.vocab_size, n)) for n in (3, 7, 5, 11)]
+    reqs = [eng.submit(p, max_new=6) for p in prompts]
+    eng.run()
+    for p, r in zip(prompts, reqs):
+        ref = generate(params, cfg, jnp.asarray([p], jnp.int32),
+                       max_cache=64, n_new=6)
+        assert r.tokens == [int(t) for t in ref[0]], p
+
+
+def test_eos_frees_slot_early():
+    eng, cfg, _ = _engine()
+    r = eng.submit([1, 2, 3], max_new=50, eos_id=None)
+    eng.run()
+    first = r.generated[0]
+    # replay with that token as EOS: must stop at the first occurrence
+    eng2, _, _ = _engine()
+    r2 = eng2.submit([1, 2, 3], max_new=50, eos_id=first)
+    eng2.run()
+    assert r2.generated[-1] == first
+    assert len(r2.generated) < 50
+
+
+def test_submit_validates_capacity():
+    eng, cfg, _ = _engine(max_cache=16)
+    with pytest.raises(ValueError):
+        eng.submit(list(range(10)), max_new=10)
+    with pytest.raises(ValueError):
+        eng.submit([], max_new=1)
+
+
+def test_bucket_capped_at_max_cache():
+    """A prompt whose bucket would exceed max_cache must still admit (the
+    bucket is clamped; the prompt itself fits by submit() validation)."""
+    eng, cfg, _ = _engine(max_cache=12, buckets=(4, 16))
+    r = eng.submit([1] * 9, max_new=2)   # bucket_for(9) = 16 > max_cache
+    eng.run()
+    assert r.done and len(r.generated) == 2
+
+
+def test_submit_rejects_zero_max_new():
+    eng, cfg, _ = _engine()
+    with pytest.raises(ValueError):
+        eng.submit([1, 2], max_new=0)
+
+
+def test_recycled_slot_short_prompt_mamba():
+    """A recycled slot's stale conv buffer must not leak into a new request
+    whose prompt is shorter than d_conv-1 (prefill pre-history is zeros by
+    construction)."""
+    eng, cfg, params = _engine(arch="falcon-mamba-7b", max_slots=1)
+    eng.submit(list(range(1, 9)), max_new=6)   # occupy + dirty the slot
+    eng.run()
+    short = [3, 4]                              # len 2 < d_conv-1 = 3
+    r = eng.submit(short, max_new=4)
+    eng.run()
+    ref = generate(params, cfg, jnp.asarray([short], jnp.int32),
+                   max_cache=64, n_new=4)
+    assert r.tokens == [int(t) for t in ref[0]]
+
+
+def test_mamba_arch_through_engine():
+    eng, cfg, params = _engine(arch="falcon-mamba-7b")
+    rng = np.random.default_rng(2)
+    prompts = [list(rng.integers(0, cfg.vocab_size, n)) for n in (3, 9, 6)]
+    reqs = [eng.submit(p, max_new=5) for p in prompts]
+    eng.run()
+    for p, r in zip(prompts, reqs):
+        ref = generate(params, cfg, jnp.asarray([p], jnp.int32),
+                       max_cache=64, n_new=5)
+        assert r.tokens == [int(t) for t in ref[0]], p
