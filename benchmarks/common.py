@@ -1,9 +1,38 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities: timing, CSV rows, and the stable JSON schema.
+
+Benchmark output has two faces. The human one is the historical CSV
+(``name,us_per_call,derived`` with ``k=v;k=v`` derived pairs). The machine
+one is JSON with a STABLE schema so `BENCH_*.json` files from different
+commits diff cleanly:
+
+* top-level: {"schema_version", "units", "records"} — serialized with
+  ``sort_keys=True`` and a fixed indent, so byte diffs are semantic diffs;
+* every record is flat, keys sorted, numbers plain (no locale formatting);
+* units are EXPLICIT in the key name where ambiguity is possible
+  (``*_us``, ``*_mib``, ``*_bytes``) and summarized in the ``units`` map;
+* measured-vs-analytic memory columns are distinguished by prefix:
+  ``meas_*`` is an actual observation (utils/memprof.py), everything else
+  is formula-derived. A measured value the backend cannot observe is
+  ``null``, never an analytic stand-in.
+"""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
+
+SCHEMA_VERSION = 2
+
+UNITS = {
+    "us_per_call": "microseconds (wall, median)",
+    "*_us": "microseconds",
+    "*_mib": "mebibytes (2**20 bytes)",
+    "*_bytes": "bytes",
+    "*_flops": "floating-point operations",
+    "acc": "fraction in [0, 1]",
+    "meas_*": "measured (utils/memprof.py); null = backend cannot observe",
+}
 
 
 def time_call(fn, *args, iters: int = 3, warmup: int = 1) -> float:
@@ -23,3 +52,36 @@ def time_call(fn, *args, iters: int = 3, warmup: int = 1) -> float:
 
 def csv_row(name: str, us: float, derived: str) -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+def _parse_scalar(v: str):
+    try:
+        f = float(v)
+    except ValueError:
+        return v
+    return int(f) if f.is_integer() and "." not in v and "e" not in v.lower() \
+        else f
+
+
+def row_to_record(row: str) -> dict:
+    """Parse a ``name,us_per_call,derived`` CSV row into a flat record."""
+    name, us, derived = row.split(",", 2)
+    rec: dict = {"name": name}
+    try:
+        rec["us_per_call"] = float(us)
+    except ValueError:
+        rec["us_per_call"] = None
+    for pair in filter(None, derived.split(";")):
+        if "=" in pair:
+            k, v = pair.split("=", 1)
+            rec[k] = _parse_scalar(v)
+    return rec
+
+
+def write_json(path: str, records: list[dict]) -> None:
+    """Write records under the stable schema (sorted keys, fixed indent)."""
+    payload = {"schema_version": SCHEMA_VERSION, "units": UNITS,
+               "records": records}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")

@@ -1,10 +1,15 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows. Roofline terms come from the
-dry-run (launch/dryrun.py + launch/roofline.py) — see EXPERIMENTS.md.
+Prints ``name,us_per_call,derived`` CSV rows; ``--json PATH`` additionally
+writes every row as a record under the stable schema in
+benchmarks/common.py (sorted keys, explicit units, measured-memory columns
+``meas_*`` kept apart from analytic ones) so BENCH_*.json files diff
+cleanly across commits. Roofline terms come from the dry-run
+(launch/dryrun.py + launch/roofline.py) — see EXPERIMENTS.md.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
@@ -16,20 +21,30 @@ def main() -> None:
     import benchmarks.fig5_tab1_resources as fig5
     import benchmarks.fig7_tinyllama as fig7
     import benchmarks.tab2_latency as tab2
+    from benchmarks.common import row_to_record, write_json
 
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="", help="write stable-schema JSON")
+    ap.add_argument("--fig5-steps", type=int, default=40)
+    args = ap.parse_args()
+
+    records = []
     print("name,us_per_call,derived")
     for mod in (fig2, fig4, fig3, fig7, tab2):
         try:
             for row in mod.run():
                 print(row)
+                records.append(row_to_record(row))
         except Exception:
             print(f"{mod.__name__},ERROR,", file=sys.stderr)
             traceback.print_exc()
             raise
-    for row in fig5.run("mlp"):
-        print(row)
-    for row in fig5.run("all"):
-        print(row.replace("fig5/", "tab1/"))
+    # fig5/tab1 produce structured records natively (measured memory rides
+    # along); CSV is derived from them, not the other way around
+    records += fig5.run_both(steps=args.fig5_steps)
+    if args.json:
+        write_json(args.json, records)
+        print(f"[bench] wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

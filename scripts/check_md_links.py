@@ -1,0 +1,56 @@
+#!/usr/bin/env python
+"""Markdown link check for README + docs/ (CI docs job).
+
+Verifies that every relative link/image target in the repo's markdown
+files exists on disk (anchors are stripped; external http(s)/mailto links
+are skipped — CI must not depend on network). Also flags absolute-path
+links, which would break on clones. Exit code 1 on any broken link.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def md_files() -> list[Path]:
+    files = [p for p in ROOT.glob("*.md")]
+    files += sorted((ROOT / "docs").glob("**/*.md"))
+    return files
+
+
+def check(path: Path) -> list[str]:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        if target.startswith("/"):
+            errors.append(f"{path.relative_to(ROOT)}: absolute link {target}")
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (path.parent / rel).exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link {target}")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    files = md_files()
+    for f in files:
+        errors += check(f)
+    for e in errors:
+        print(f"[md-links] {e}", file=sys.stderr)
+    print(f"[md-links] checked {len(files)} files, "
+          f"{len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -179,6 +179,23 @@ def tucker_rel_error(a: jax.Array, f: TuckerFactors) -> jax.Array:
 # f_LR — weight gradient straight from Tucker factors (paper App. A.1).
 # ---------------------------------------------------------------------------
 
+def _flr_general(f: TuckerFactors, dy: jax.Array) -> jax.Array:
+    """dW for ANY None pattern of Tucker factors: partially reconstruct all
+    modes but the feature mode (so the biggest intermediate is dy-sized,
+    never the dense activation), contract with dy over every position dim,
+    then expand the feature factor. Fallback for factor patterns the
+    specialized reorderings below don't cover (e.g. compressed batch with
+    identity token mode)."""
+    t = f.core
+    for mode, u in enumerate(f.us[:-1]):
+        if u is not None:
+            t = _mode_product(t, u, mode)           # expand (D_m, r_m)
+    lead = tuple(range(dy.ndim - 1))
+    g = jnp.tensordot(dy, t, axes=(lead, lead))     # (O, r_last or I)
+    u_last = f.us[-1]
+    return g if u_last is None else jnp.einsum("ot,it->oi", g, u_last)
+
+
 def flr_weight_grad_3d(f: TuckerFactors, dy: jax.Array) -> jax.Array:
     """dW (O,I) from Tucker-compressed A (B,N,I) and dy (B,N,O).
 
@@ -204,6 +221,8 @@ def flr_weight_grad_3d(f: TuckerFactors, dy: jax.Array) -> jax.Array:
             return jnp.einsum("bqi,bqo->oi", s, t)
         g = jnp.einsum("bqt,bqo->to", s, t)
         return jnp.einsum("to,it->oi", g, u3)
+    if u2 is None or u3 is None:
+        return _flr_general(f, dy)
     z1 = jnp.einsum("bno,br->nor", dy, u1)          # Eq. 15
     z2 = jnp.einsum("rqt,nq->rtn", s, u2)           # Eq. 16 (r=r1,q=r2,t=r3)
     z3 = jnp.einsum("rtn,it->rin", z2, u3)          # Eq. 17
@@ -227,6 +246,8 @@ def flr_weight_grad_4d(f: TuckerFactors, dy: jax.Array) -> jax.Array:
             return jnp.einsum("bqti,bqto->oi", s, t)
         g = jnp.einsum("bqtf,bqto->fo", s, t)
         return jnp.einsum("fo,if->oi", g, u4)
+    if u2 is None or u3 is None or u4 is None:
+        return _flr_general(f, dy)
     z1 = jnp.einsum("bhwo,br->rhwo", dy, u1)        # Eq. 22
     z2 = jnp.einsum("rqtf,hq->rhtf", s, u2)         # Eq. 23
     z3 = jnp.einsum("rhwo,wt->rhto", z1, u3)        # Eq. 24

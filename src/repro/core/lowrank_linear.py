@@ -20,6 +20,16 @@ directly (core/asi.flr_weight_grad_*), the dense activation is NEVER rebuilt.
 Key trick: h~ = x~ R^T is itself a Tucker tensor whose last-mode factor is
 (R @ U_last); so dL reuses the same f_LR kernel as dW.
 
+SKETCH-SAVING RESIDUALS: the custom-VJP boundary is what makes the paper's
+memory claim real — JAX saves exactly what the fwd rule returns, nothing
+else. ``wasi_matmul`` saves the Tucker factors of x~ plus the rank-K sketch
+h~ = x~ R^T (itself in Tucker form: same core, last factor R @ U_last,
+materialized at FORWARD time so backward does zero residual rebuilding) —
+never the (B, N, I) activation. ``measured_residual_bytes`` in
+utils/memprof.py verifies this against a jax.vjp probe; the no-ASI factored
+path gets the analogous treatment in kernels/ops.py (dense rank-K sketch
+saved by the fused Pallas forward, consumed by the single-launch backward).
+
 The ASI warm-start state is threaded functionally: compress() is called on a
 stop-gradient copy of x OUTSIDE the custom-VJP boundary and its output rides
 in as residual-only input (zero cotangent).
@@ -72,14 +82,20 @@ def wasi_matmul(x: jax.Array, L: jax.Array, R: jax.Array, xt: TuckerFactors):
 
 def _wasi_fwd(x, L, R, xt):
     y = wasi_matmul(x, L, R, xt)
-    return y, (xt, L, R)
+    # Residuals are the SKETCH, not the activation: the Tucker factors of
+    # x~ plus h~ = x~ R^T in Tucker form (shares x~'s core; only the K×r_m
+    # last factor is new, built here at forward time). x itself is dropped
+    # at this boundary — residual bytes per linear are
+    # tucker_storage(shape, ranks) + K*r_m + |L| + |R| instead of B*N*I
+    # (utils/memprof.py measures exactly this via a jax.vjp probe).
+    ht = _project_last_mode(xt, R)
+    return y, (xt, ht, L, R)
 
 
 def _wasi_bwd(res, dy):
-    xt, L, R = res
+    xt, ht, L, R = res
     dh = jnp.einsum("...o,ok->...k", dy, L)            # (B,N,K)
     dx = jnp.einsum("...k,ki->...i", dh, R)            # Eq. 10
-    ht = _project_last_mode(xt, R)                      # Tucker of x~ R^T
     # _flr returns dW[o,i] for dy[...,o], act[...,i]; here the activation is
     # h~ whose feature dim is K, so this is directly dL (O, K).
     dL = _flr(ht, dy)
@@ -203,12 +219,13 @@ def wasi_linear_apply(params: WasiLinearParams, x: jax.Array,
     """Apply a WASI linear. Returns (y, new_asi_state).
 
     If ``asi_state`` is None the layer runs without activation compression
-    (inference / serve path, or ASI disabled) — gradients then use exact
-    activations through plain autodiff of the factored matmul.
+    (inference / serve path, or ASI disabled) — the fused kernel path then
+    applies, with exact gradients from its sketch-saving custom VJP.
     """
     if asi_state is None:
-        h = jnp.einsum("...i,ki->...k", x, params.R)
-        y = jnp.einsum("...k,ok->...o", h, params.L)
+        from repro.kernels.ops import lowrank_matmul  # kernel on TPU
+
+        y = lowrank_matmul(x, params.R, params.L)
     else:
         xt, new_state = asi_step(jax.lax.stop_gradient(x), asi_state)
         y = wasi_matmul(x, params.L, params.R, xt)

@@ -46,8 +46,7 @@ def cholesky_qr(y: jax.Array, shift: float = 1e-6) -> jax.Array:
     inputs (the shifted direction is immaterial: only the spanned subspace
     matters for subspace iteration). If the first factorization still fails
     (NaN), a second attempt with a 1e4-times larger shift is selected via
-    ``where`` — branch-free, so it stays jit/scan-safe; the extra K×K
-    Cholesky is noise next to the Gram matmul.
+    ``where`` — see ``_shifted_cholesky``.
 
     NOTE for callers implementing power iteration: never orthogonalize
     ``A (A^T U)`` in one shot — the Gram condition is cond(A)^4. Stage it:
@@ -55,17 +54,39 @@ def cholesky_qr(y: jax.Array, shift: float = 1e-6) -> jax.Array:
     """
     yf = y.astype(jnp.float32)
     g = jnp.einsum("...mk,...mn->...kn", yf, yf)
-    k = g.shape[-1]
-    scale = jnp.maximum(jnp.trace(g, axis1=-2, axis2=-1) / k, 1e-30)
-    eye = jnp.eye(k, dtype=g.dtype)
-
-    c1 = jnp.linalg.cholesky(g + (shift * scale)[..., None, None] * eye)
-    c2 = jnp.linalg.cholesky(g + (1e4 * shift * scale)[..., None, None] * eye)
-    bad = ~jnp.isfinite(c1).all(axis=(-2, -1), keepdims=True)
-    c = jnp.where(bad, c2, c1)
+    c = _shifted_cholesky(g, shift)
     # Q = Y C^{-T}  <=>  solve  C Q^T = Y^T  (lower-triangular)
     qt = jax.scipy.linalg.solve_triangular(c, jnp.swapaxes(yf, -1, -2), lower=True)
     return jnp.swapaxes(qt, -1, -2).astype(y.dtype)
+
+
+def _shifted_cholesky(g: jax.Array, shift: float) -> jax.Array:
+    """Lower Cholesky of g + shift*scale*I with the NaN-fallback ladder:
+    if the first factorization fails, a 1e4-times larger shift is selected
+    via ``where`` — branch-free, so it stays jit/scan-safe; the extra K×K
+    Cholesky is noise next to the Gram matmul."""
+    k = g.shape[-1]
+    scale = jnp.maximum(jnp.trace(g, axis1=-2, axis2=-1) / k, 1e-30)
+    eye = jnp.eye(k, dtype=g.dtype)
+    c1 = jnp.linalg.cholesky(g + (shift * scale)[..., None, None] * eye)
+    c2 = jnp.linalg.cholesky(g + (1e4 * shift * scale)[..., None, None] * eye)
+    bad = ~jnp.isfinite(c1).all(axis=(-2, -1), keepdims=True)
+    return jnp.where(bad, c2, c1)
+
+
+def cholesky_qr_mix_ref(y: jax.Array, shift: float = 1e-6):
+    """(Q, M = Q^T Y) with the mix derived from the Gram factor, not a
+    second tall-skinny product: Q = Y C^{-T} implies
+    Q^T Y = C^{-1} (Y^T Y) = C^{-1} G — a K×K triangular solve instead of
+    an O(M·K^2) sweep over Y. jnp reference for the fused CholeskyQR
+    kernel (kernels/qr.py); also the off-TPU / batched fallback behind
+    ``kernels.ops.cholesky_qr_mix``. Batched over leading dims."""
+    yf = y.astype(jnp.float32)
+    g = jnp.einsum("...mk,...mn->...kn", yf, yf)
+    c = _shifted_cholesky(g, shift)
+    qt = jax.scipy.linalg.solve_triangular(c, jnp.swapaxes(yf, -1, -2), lower=True)
+    mix = jax.scipy.linalg.solve_triangular(c, g, lower=True)
+    return jnp.swapaxes(qt, -1, -2).astype(y.dtype), mix
 
 
 def cholesky_qr2(y: jax.Array) -> jax.Array:

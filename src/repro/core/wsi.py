@@ -72,9 +72,16 @@ def wsi_refresh_factored(state: WSIState) -> WSIState:
     i.e. the column space of W W^T L lives inside span(L) — so the refresh
     reduces to orthogonalizing L and folding the mixing matrix into R.
     Cost O(O*K^2 + K^2*I): no O×I product, scales to pods.
+
+    The orthogonalization AND the mixing matrix M = Q^T L come from ONE
+    fused CholeskyQR (kernels.ops.cholesky_qr_mix: single Pallas launch on
+    TPU, Gram-factor identity M = C^{-1}(L^T L) everywhere) — L is swept
+    twice total and the second O(O*K^2) tall-skinny product of the naive
+    formulation is gone.
     """
-    q = cholesky_qr(state.L).astype(jnp.float32)          # (..., O, K)
-    m = jnp.einsum("...ok,...oj->...kj", q, state.L.astype(jnp.float32))
+    from repro.kernels.ops import cholesky_qr_mix  # lazy: core stays pallas-free
+
+    q, m = cholesky_qr_mix(state.L)                       # (...,O,K), (...,K,K)
     r = jnp.einsum("...kj,...ji->...ki", m, state.R.astype(jnp.float32))
     return WSIState(L=q.astype(state.L.dtype), R=r.astype(state.R.dtype))
 

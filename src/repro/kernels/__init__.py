@@ -9,15 +9,26 @@ Kernels:
   matmul_tiled     — f32-accumulator tiled matmul (general building block)
   lowrank          — FUSED (x R^T) L^T (paper Eq. 8): rank-K intermediate
                      lives in VMEM across both contractions; every factored
-                     linear (training and serving) routes through it
+                     linear (training and serving) routes through it.
+                     Training adds a sketch-saving single-launch backward
+                     (dx, dL, dR with dh = dy L VMEM-resident)
   gram             — tall-skinny Y^T Y reduction (CholeskyQR stage of WSI/ASI)
+  qr               — FUSED CholeskyQR: Gram -> in-kernel Cholesky/triangular
+                     inverse -> apply, plus the Q^T Y mix matrix, one launch
+                     (the WSI factored-refresh hot path)
   flash_attention  — causal/sliding-window online-softmax attention
   ssd_scan         — Mamba-2 SSD chunked scan with on-chip state carry
+
+See docs/kernels.md for grid/BlockSpec conventions and the interpret-mode
+(CPU) caveats.
 """
 
 from repro.kernels.ops import (
+    cholesky_qr_mix,
+    choleskyqr_fused,
     flash_attention,
     gram,
+    lowrank_bwd_fused,
     lowrank_matmul,
     lowrank_matmul_fused,
     lowrank_matmul_unfused,

@@ -24,8 +24,30 @@ to either contraction.
 The second dot promotes L^T to f32 (the scratch is f32): rank-K thin
 matmuls are bandwidth-bound, so the MXU throughput cost of f32 operands is
 hidden; accuracy matches the two-matmul reference at f32 tolerance.
+
+TRAINING (sketch-saving backward): with ``save_sketch=True`` the forward
+additionally writes the rank-K sketch h = x R^T (already computed into the
+VMEM scratch) out once per row block — the custom VJP in kernels/ops.py
+then saves (x, h) as residuals and never recomputes the projection. The
+backward is ONE launch too (``lowrank_bwd_tiled``): per row block the
+rank-K cotangent dh = dy L lives only in a VMEM scratch while all three
+gradients are formed from it —
+
+    dx_b  = dh_b R                  (written per block)
+    dL   += dy_b^T h_b              (accumulated in a VMEM (O, K) tile)
+    dR   += dh_b^T x_b              (accumulated in a VMEM (K, I) tile)
+
+so dh never round-trips HBM (the unfused backward writes and re-reads it
+three times). VMEM budget per step (operand tiles + output tiles + f32
+scratches): 4 * (bm*(O + 2I + 2K) + 3*(O*K + K*I)) bytes —
+``kernels/ops.py::_bwd_fits_vmem`` is the authoritative gate (12 MiB
+headroom); with the WASI rank policy (K <= 0.5*min(O,I)) that admits
+layers up to O ~ 3k, I ~ 3k at bm = 128, and larger ones fall back to the
+XLA einsum backward.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -45,13 +67,29 @@ def _lowrank_kernel(x_ref, rt_ref, lt_ref, o_ref, h_ref):
                          preferred_element_type=jnp.float32).astype(o_ref.dtype)
 
 
+def _lowrank_sketch_kernel(x_ref, rt_ref, lt_ref, o_ref, hout_ref, h_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _project():
+        h_ref[...] = jnp.dot(x_ref[...], rt_ref[...],
+                             preferred_element_type=jnp.float32)
+        # persist the sketch for the backward: one extra (bm, K) store per
+        # row block — the residual the sketch-saving VJP keeps instead of
+        # recomputing the projection (2*M*I*K FLOPs) at backward time
+        hout_ref[...] = h_ref[...].astype(hout_ref.dtype)
+
+    o_ref[...] = jnp.dot(h_ref[...], lt_ref[...].astype(jnp.float32),
+                         preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
 def lowrank_fused_tiled(x: jax.Array, rt: jax.Array, lt: jax.Array, *,
                         bm: int = 128, bn: int = 128, out_dtype=None,
-                        interpret: bool = True) -> jax.Array:
+                        save_sketch: bool = False, interpret: bool = True):
     """y (M, O) = x (M, I) @ rt (I, K) @ lt (K, O), fused.
 
     Pads ragged shapes (M to bm, O to bn, I/K to lane multiples of 128) and
-    slices the output back.
+    slices the output back. With ``save_sketch`` returns ``(y, h)`` where
+    h (M, K) f32 is the rank-K sketch x @ rt written from the same VMEM
+    scratch the expansion reads.
     """
     m, i = x.shape
     i2, k = rt.shape
@@ -72,17 +110,119 @@ def lowrank_fused_tiled(x: jax.Array, rt: jax.Array, lt: jax.Array, *,
     K = rt.shape[1]
     N = lt.shape[1]
 
+    in_specs = [
+        pl.BlockSpec((bm, I), lambda i_, j: (i_, 0)),
+        pl.BlockSpec((I, K), lambda i_, j: (0, 0)),
+        pl.BlockSpec((K, bn), lambda i_, j: (0, j)),
+    ]
+    if save_sketch:
+        out, h = pl.pallas_call(
+            _lowrank_sketch_kernel,
+            grid=(M // bm, N // bn),
+            in_specs=in_specs,
+            out_specs=[pl.BlockSpec((bm, bn), lambda i_, j: (i_, j)),
+                       pl.BlockSpec((bm, K), lambda i_, j: (i_, 0))],
+            out_shape=[jax.ShapeDtypeStruct((M, N), out_dtype),
+                       jax.ShapeDtypeStruct((M, K), jnp.float32)],
+            scratch_shapes=[pltpu.VMEM((bm, K), jnp.float32)],
+            interpret=interpret,
+        )(x, rt, lt)
+        return out[:m, :n], h[:m, :k]
+
     out = pl.pallas_call(
         _lowrank_kernel,
         grid=(M // bm, N // bn),
-        in_specs=[
-            pl.BlockSpec((bm, I), lambda i_, j: (i_, 0)),
-            pl.BlockSpec((I, K), lambda i_, j: (0, 0)),
-            pl.BlockSpec((K, bn), lambda i_, j: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i_, j: (i_, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, K), jnp.float32)],
         interpret=interpret,
     )(x, rt, lt)
     return out[:m, :n]
+
+
+def _lowrank_bwd_kernel(dy_ref, x_ref, h_ref, l_ref, r_ref,
+                        dx_ref, dl_ref, dr_ref,
+                        dh_ref, dl_acc, dr_acc, *, m_steps: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        dl_acc[...] = jnp.zeros_like(dl_acc)
+        dr_acc[...] = jnp.zeros_like(dr_acc)
+
+    dy = dy_ref[...].astype(jnp.float32)
+    # rank-K cotangent of the sketch: dh = dy L — VMEM-resident for all
+    # three consumers below (the unfused path round-trips it through HBM)
+    dh_ref[...] = jnp.dot(dy, l_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+    dh = dh_ref[...]
+    dx_ref[...] = jnp.dot(dh, r_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32).astype(dx_ref.dtype)
+    dl_acc[...] += jnp.dot(dy.T, h_ref[...],
+                           preferred_element_type=jnp.float32)
+    dr_acc[...] += jnp.dot(dh.T, x_ref[...].astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(0) == m_steps - 1)
+    def _store():
+        dl_ref[...] = dl_acc[...].astype(dl_ref.dtype)
+        dr_ref[...] = dr_acc[...].astype(dr_ref.dtype)
+
+
+def lowrank_bwd_tiled(dy: jax.Array, x: jax.Array, h: jax.Array,
+                      l: jax.Array, r: jax.Array, *, bm: int = 128,
+                      interpret: bool = True):
+    """Fused factored-matmul backward: (dx, dL, dR) in ONE pallas_call.
+
+    dy (M, O), x (M, I), h (M, K) [the forward's saved sketch x R^T],
+    l (O, K), r (K, I)  ->  dx (M, I), dL (O, K), dR (K, I).
+
+    Grid (M/bm,): per row block the rank-K dh = dy L is computed once into
+    a VMEM scratch and consumed by all three products; dL/dR accumulate in
+    revisited f32 VMEM tiles (gram.py-style) and are stored at the last
+    step. Zero-padding (M to bm; O/I/K to lane multiples) is sound: padded
+    dy/x/h rows contribute zero to every accumulation.
+    """
+    m, o = dy.shape
+    m2, i = x.shape
+    m3, k = h.shape
+    assert m == m2 == m3 and l.shape == (o, k) and r.shape == (k, i), (
+        dy.shape, x.shape, h.shape, l.shape, r.shape)
+    bm = min(bm, m)
+    pm = (-m) % bm
+    po, pi, pk = (-o) % 128, (-i) % 128, (-k) % 128
+    if pm or po:
+        dy = jnp.pad(dy, ((0, pm), (0, po)))
+    if pm or pi:
+        x = jnp.pad(x, ((0, pm), (0, pi)))
+    if pm or pk:
+        h = jnp.pad(h, ((0, pm), (0, pk)))
+    if po or pk:
+        l = jnp.pad(l, ((0, po), (0, pk)))
+    if pk or pi:
+        r = jnp.pad(r, ((0, pk), (0, pi)))
+    M, O = dy.shape
+    I, K = x.shape[1], h.shape[1]
+    m_steps = M // bm
+
+    dx, dl, dr = pl.pallas_call(
+        functools.partial(_lowrank_bwd_kernel, m_steps=m_steps),
+        grid=(m_steps,),
+        in_specs=[
+            pl.BlockSpec((bm, O), lambda s: (s, 0)),
+            pl.BlockSpec((bm, I), lambda s: (s, 0)),
+            pl.BlockSpec((bm, K), lambda s: (s, 0)),
+            pl.BlockSpec((O, K), lambda s: (0, 0)),
+            pl.BlockSpec((K, I), lambda s: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((bm, I), lambda s: (s, 0)),
+                   pl.BlockSpec((O, K), lambda s: (0, 0)),
+                   pl.BlockSpec((K, I), lambda s: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((M, I), x.dtype),
+                   jax.ShapeDtypeStruct((O, K), jnp.float32),
+                   jax.ShapeDtypeStruct((K, I), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm, K), jnp.float32),
+                        pltpu.VMEM((O, K), jnp.float32),
+                        pltpu.VMEM((K, I), jnp.float32)],
+        interpret=interpret,
+    )(dy, x, h, l, r)
+    return dx[:m, :i], dl[:o, :k], dr[:k, :i]

@@ -14,10 +14,23 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_tiled
 from repro.kernels.gram import gram_tiled
-from repro.kernels.lowrank import lowrank_fused_tiled
+from repro.kernels.lowrank import lowrank_bwd_tiled, lowrank_fused_tiled
 from repro.kernels.matmul_tiled import matmul_tiled
+from repro.kernels.qr import choleskyqr_tiled
 
 INTERPRET = jax.default_backend() != "tpu"
+
+# VMEM headroom for the single-launch fused backward (kernels/lowrank.py):
+# all five operand tiles plus the two (O,K)/(K,I) f32 accumulators must
+# co-reside. Larger layers fall back to the XLA einsum backward.
+_BWD_VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def _bwd_fits_vmem(m: int, o: int, i: int, k: int, bm: int = 128) -> bool:
+    bm = min(bm, m)
+    o_, i_, k_ = (-(-o // 128)) * 128, (-(-i // 128)) * 128, (-(-k // 128)) * 128
+    tiles = bm * (o_ + 2 * i_ + 2 * k_) + 3 * (o_ * k_ + k_ * i_)
+    return 4 * tiles <= _BWD_VMEM_BUDGET
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
@@ -33,19 +46,32 @@ def _lowrank_fused(x2, r_factor, l_factor):
 
 
 def _lowrank_fused_fwd(x2, r_factor, l_factor):
-    return _lowrank_fused(x2, r_factor, l_factor), (x2, r_factor, l_factor)
+    # Sketch-saving forward: the kernel writes the rank-K sketch h = x R^T
+    # out of its VMEM scratch once per row block, and h rides along as a
+    # residual. The backward therefore never recomputes the projection
+    # (2*M*I*K FLOPs saved) at a residual cost of M*K f32 — with the WASI
+    # rank policy (K <= 0.5*I) that is at most half the x residual we
+    # already keep for dR.
+    y, h = lowrank_fused_tiled(x2, r_factor.T, l_factor.T, save_sketch=True,
+                               interpret=INTERPRET)
+    return y, (x2, h, r_factor, l_factor)
 
 
 def _lowrank_fused_bwd(res, dy):
-    # Plain-jnp backward (rank-K contractions are thin; the fused kernel is
-    # a forward/serving optimization). h is recomputed — 2*M*I*K FLOPs —
-    # instead of saved, keeping the forward's residual footprint at O(M*I).
-    x2, r_factor, l_factor = res
+    x2, h, r_factor, l_factor = res
+    m, i = x2.shape
+    o, k = l_factor.shape
+    if not INTERPRET and _bwd_fits_vmem(m, o, i, k):
+        # single launch: dh = dy L stays VMEM-resident across dx, dL, dR
+        dx, dl, dr = lowrank_bwd_tiled(dy, x2, h, l_factor, r_factor,
+                                       interpret=INTERPRET)
+        return dx, dr.astype(r_factor.dtype), dl.astype(l_factor.dtype)
+    # XLA fallback (off-TPU, or layer too large for the VMEM budget);
+    # consumes the saved sketch rather than recomputing it
     xf = x2.astype(jnp.float32)
     rf = r_factor.astype(jnp.float32)
     lf = l_factor.astype(jnp.float32)
     dyf = dy.astype(jnp.float32)
-    h = xf @ rf.T                                   # (M, K)
     dh = dyf @ lf                                   # (M, K)
     dx = (dh @ rf).astype(x2.dtype)
     dr = (dh.T @ xf).astype(r_factor.dtype)         # (K, I)
@@ -54,6 +80,14 @@ def _lowrank_fused_bwd(res, dy):
 
 
 _lowrank_fused.defvjp(_lowrank_fused_fwd, _lowrank_fused_bwd)
+
+
+@jax.jit
+def lowrank_bwd_fused(dy, x, h, l_factor, r_factor):
+    """The fused backward kernel, unconditionally (tests/benchmarks).
+    dy (M, O), x (M, I), h (M, K) = x @ R^T -> (dx, dL f32, dR f32)."""
+    return lowrank_bwd_tiled(dy, x, h, l_factor, r_factor,
+                             interpret=INTERPRET)
 
 
 @jax.jit
@@ -99,6 +133,29 @@ def lowrank_matmul_unfused(x, r_factor, l_factor, *, bm: int = 128,
 def gram(y, *, bm: int = 512):
     """G = Y^T Y (f32), the CholeskyQR reduction. y (M, K)."""
     return gram_tiled(y, bm=bm, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def choleskyqr_fused(y, *, bm: int = 512):
+    """The fused CholeskyQR kernel, unconditionally (tests/benchmarks).
+    y (M, K) -> (Q (M, K), mix (K, K) f32 = Q^T Y) in one launch."""
+    return choleskyqr_tiled(y, bm=bm, interpret=INTERPRET)
+
+
+def cholesky_qr_mix(y):
+    """(Q, M = Q^T Y) for the WSI factored refresh — the public entry
+    core/wsi.py routes through.
+
+    On TPU with a 2D operand this is the single-launch fused kernel
+    (Gram -> in-kernel Cholesky/inverse -> apply; Y swept twice, nothing
+    else touches HBM). Off-TPU, or with leading batch dims (stacked scan
+    layers / expert banks), it falls back to the jnp CholeskyQR with the
+    mix computed from the Gram factor — still sparing the second
+    tall-skinny (M,K)^T (M,K) product either way."""
+    if INTERPRET or y.ndim != 2:
+        from repro.core.orthogonal import cholesky_qr_mix_ref
+        return cholesky_qr_mix_ref(y)
+    return choleskyqr_fused(y)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))

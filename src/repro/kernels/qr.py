@@ -1,0 +1,156 @@
+"""Fused CholeskyQR kernel: Q, M = qr(Y) in ONE pallas_call.
+
+The WSI factored refresh (core/wsi.py::wsi_refresh_factored) is
+CholeskyQR-shaped: G = L^T L (tall-skinny Gram), C = chol(G), Q = L C^{-T},
+plus the mixing matrix M = Q^T L that folds into R. Composed from XLA ops
+that is four HBM sweeps of the (M, K) operand — Gram read, solve read,
+Q write, mix read — with G, C and Q round-tripping HBM between them.
+
+This kernel pipelines the whole factorization behind a two-phase grid
+(grid (2, M/bm), phase outermost, so the grid is sequential):
+
+  phase 0  Gram reduction: G += y_b^T y_b into a VMEM (K, K) f32 scratch
+           (exactly kernels/gram.py, inlined). At the LAST phase-0 step the
+           K x K tail runs in-register: shifted Cholesky C of G, the
+           triangular inverse X = C^{-1}, and the mix M = X G = Q^T Y are
+           all computed inside the kernel (see below) and C^{-T} parks in a
+           second VMEM scratch. M is written out — the caller folds it into
+           R without ever touching Y again (M = C^{-1}(Y^T Y) algebraically
+           equals Q^T Y, so the refresh's second tall-skinny product is
+           gone entirely).
+  phase 1  Apply: q_b = y_b @ C^{-T} per row block.
+
+Y is read twice (phases 0 and 1) and Q written once — the unavoidable
+minimum for CholeskyQR — and nothing else touches HBM.
+
+TPU Pallas has no lax.linalg, so the K x K Cholesky and triangular inverse
+are implemented as masked rank-1 update loops (jax.lax.fori_loop over K):
+every iteration is a handful of (K, K) x (K, 1) products against a one-hot
+column — VPU/MXU-friendly, no dynamic slicing, no 1D iota. K iterations of
+O(K^2) work adds 2*K^3 FLOPs total, noise next to the 2*M*K^2 Gram for the
+tall-skinny M >> K regime this kernel serves. The shift (1e-6 * trace/K,
+same ladder base as core/orthogonal.cholesky_qr) is applied across the
+FULL padded diagonal so lane padding of K keeps the factorization
+invertible; sqrt/divide guards make the kernel NaN-free — pathologically
+conditioned inputs should go through cholesky_qr2 instead (two passes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _masked_cholesky(g: jax.Array) -> jax.Array:
+    """Lower Cholesky factor of PSD g (K, K) f32 via K masked rank-1
+    updates — no dynamic indexing (Pallas-TPU-safe)."""
+    kdim = g.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (kdim, 1), 0)
+
+    def body(j, c):
+        ej = (rows == j).astype(jnp.float32)              # one-hot col (K,1)
+        row_j = jnp.dot(ej.T, c)                          # row j of C (1,K)
+        s = jnp.dot(c, row_j.T)                           # sum_p C[:,p]C[j,p]
+        v = jnp.dot(g, ej) - s                            # G[:,j] - partials
+        vjj = jnp.dot(ej.T, v)                            # (1,1)
+        d = jnp.sqrt(jnp.maximum(vjj, 1e-30))
+        col = (v / d) * (rows >= j).astype(jnp.float32)   # zero above diag
+        return c + jnp.dot(col, ej.T)
+
+    return jax.lax.fori_loop(0, kdim, body, jnp.zeros_like(g))
+
+
+def _tril_inverse(c: jax.Array) -> jax.Array:
+    """X = C^{-1} for lower-triangular C (K, K) f32 by forward substitution,
+    all columns at once, masked — row i of X lands per iteration."""
+    kdim = c.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (kdim, 1), 0)
+    eye = (jax.lax.broadcasted_iota(jnp.int32, (kdim, kdim), 0) ==
+           jax.lax.broadcasted_iota(jnp.int32, (kdim, kdim), 1)
+           ).astype(jnp.float32)
+
+    def body(i, x):
+        ei = (rows == i).astype(jnp.float32)              # (K,1)
+        row_i = jnp.dot(ei.T, c)                          # row i of C (1,K)
+        cii = jnp.dot(row_i, ei)                          # (1,1)
+        # rows >= i of x are still zero, so this picks up only p < i terms
+        contrib = jnp.dot(row_i, x)                       # (1,K)
+        new_row = (jnp.dot(ei.T, eye) - contrib) / jnp.maximum(cii, 1e-30)
+        return x + jnp.dot(ei, new_row)
+
+    return jax.lax.fori_loop(0, kdim, body, jnp.zeros_like(c))
+
+
+def _choleskyqr_kernel(y_ref, q_ref, m_ref, g_acc, cinvt_ref, *,
+                       m_steps: int, shift: float):
+    phase = pl.program_id(0)
+    step = pl.program_id(1)
+
+    @pl.when(jnp.logical_and(phase == 0, step == 0))
+    def _init():
+        g_acc[...] = jnp.zeros_like(g_acc)
+
+    @pl.when(phase == 0)
+    def _gram():
+        yb = y_ref[...].astype(jnp.float32)
+        g_acc[...] += jnp.dot(yb.T, yb, preferred_element_type=jnp.float32)
+        # deterministic output: phase 0 visits every q block before phase 1
+        # rewrites it with the real values
+        q_ref[...] = jnp.zeros_like(q_ref)
+
+    @pl.when(jnp.logical_and(phase == 0, step == m_steps - 1))
+    def _factor():
+        g = g_acc[...]
+        kdim = g.shape[0]
+        eye = (jax.lax.broadcasted_iota(jnp.int32, (kdim, kdim), 0) ==
+               jax.lax.broadcasted_iota(jnp.int32, (kdim, kdim), 1)
+               ).astype(jnp.float32)
+        # shifted over the FULL padded diagonal: lane-pad rows stay SPD
+        scale = jnp.maximum(jnp.sum(g * eye) / kdim, 1e-30)
+        c = _masked_cholesky(g + shift * scale * eye)
+        x = _tril_inverse(c)                              # C^{-1}
+        cinvt_ref[...] = x.T                              # C^{-T} for phase 1
+        # mix M = C^{-1} (Y^T Y) == Q^T Y — the refresh folds this into R,
+        # sparing the second (M,K)-sweep tall-skinny product entirely
+        m_ref[...] = jnp.dot(x, g,
+                             preferred_element_type=jnp.float32
+                             ).astype(m_ref.dtype)
+
+    @pl.when(phase == 1)
+    def _apply():
+        q_ref[...] = jnp.dot(y_ref[...].astype(jnp.float32), cinvt_ref[...],
+                             preferred_element_type=jnp.float32
+                             ).astype(q_ref.dtype)
+
+
+def choleskyqr_tiled(y: jax.Array, *, bm: int = 512, shift: float = 1e-6,
+                     interpret: bool = True):
+    """(Q, M) = fused CholeskyQR of y (M rows, K cols), K <= ~1024.
+
+    Q (M, K) has orthonormal columns spanning col(y); M (K, K) = Q^T y is
+    the mixing matrix (f32). One launch; see module docstring.
+    """
+    m, k = y.shape
+    bm = min(bm, m)
+    pm, pk = (-m) % bm, (-k) % 128
+    if pm or pk:
+        y = jnp.pad(y, ((0, pm), (0, pk)))  # zero rows/cols: see docstring
+    M, K = y.shape
+    m_steps = M // bm
+
+    q, mix = pl.pallas_call(
+        functools.partial(_choleskyqr_kernel, m_steps=m_steps, shift=shift),
+        grid=(2, m_steps),
+        in_specs=[pl.BlockSpec((bm, K), lambda p, s: (s, 0))],
+        out_specs=[pl.BlockSpec((bm, K), lambda p, s: (s, 0)),
+                   pl.BlockSpec((K, K), lambda p, s: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((M, K), y.dtype),
+                   jax.ShapeDtypeStruct((K, K), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((K, K), jnp.float32),
+                        pltpu.VMEM((K, K), jnp.float32)],
+        interpret=interpret,
+    )(y)
+    return q[:m, :k], mix[:k, :k]

@@ -20,9 +20,33 @@ def lowrank_matmul_ref(x, r_factor, l_factor, out_dtype=None):
     return y.astype(out_dtype or x.dtype)
 
 
+def lowrank_bwd_ref(dy, x, h, l_factor, r_factor):
+    """(dx, dL, dR) oracle for the fused backward (kernels/lowrank.py).
+    dy (M, O), x (M, I), h (M, K) = x @ R^T, l (O, K), r (K, I)."""
+    dyf = dy.astype(jnp.float32)
+    dh = dyf @ l_factor.astype(jnp.float32)                 # (M, K)
+    dx = (dh @ r_factor.astype(jnp.float32)).astype(x.dtype)
+    dl = dyf.T @ h.astype(jnp.float32)                      # (O, K)
+    dr = dh.T @ x.astype(jnp.float32)                       # (K, I)
+    return dx, dl, dr
+
+
 def gram_ref(y):
     yf = y.astype(jnp.float32)
     return yf.T @ yf
+
+
+def choleskyqr_ref(y, shift=1e-6):
+    """(Q, M) oracle for the fused CholeskyQR kernel (kernels/qr.py):
+    Q = Y C^{-T} with C C^T = Y^T Y + shift*scale*I, M = C^{-1} Y^T Y."""
+    yf = y.astype(jnp.float32)
+    g = yf.T @ yf
+    k = g.shape[-1]
+    scale = jnp.maximum(jnp.trace(g) / k, 1e-30)
+    c = jnp.linalg.cholesky(g + shift * scale * jnp.eye(k, dtype=g.dtype))
+    qt = jax.scipy.linalg.solve_triangular(c, yf.T, lower=True)
+    mix = jax.scipy.linalg.solve_triangular(c, g, lower=True)
+    return qt.T.astype(y.dtype), mix
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0):

@@ -67,6 +67,8 @@ def main():
                     help="full (assigned) config instead of smoke")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--memprof", action="store_true",
+                    help="log measured memory columns (utils/memprof.py)")
     args = ap.parse_args()
 
     tcfg = TrainConfig(optimizer=args.optimizer, lr=args.lr, steps=args.steps,
@@ -80,8 +82,11 @@ def main():
     ckpt = CheckpointManager(tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints) \
         if args.ckpt_dir else None
     state, hist = train_loop(state, step, lambda s: data.batch(s), tcfg,
-                             ckpt=ckpt)
+                             ckpt=ckpt, memprof=args.memprof)
     print(f"[train] done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+    if args.memprof:
+        print(f"[train] live-bytes watermark: "
+              f"{hist[-1]['mem_live_peak_mib']:.1f} MiB")
 
 
 if __name__ == "__main__":

@@ -98,7 +98,20 @@ def asi_spec(key, act_shape: Sequence[int], cfg: WasiConfig,
 
 def apply_linear(p: dict, x: jax.Array, cfg: WasiConfig,
                  state: ASIState | None = None):
-    """Apply. Returns (y, new_state) — new_state is None when no ASI."""
+    """Apply. Returns (y, new_state) — new_state is None when no ASI.
+
+    What each branch saves for backward (the sketch-saving contract;
+    measured by utils/memprof.py, reference in docs/training.md):
+
+      {"L","R"} + ASI   -> Tucker x~ and the rank-K sketch h~ = x~ R^T
+                           (wasi_matmul; never the dense activation)
+      {"L","R"} no ASI  -> x plus the dense rank-K sketch h = x R^T,
+                           written by the fused forward kernel; backward is
+                           one Pallas launch on TPU (kernels/ops.py)
+      {"w","L","R"}     -> Tucker x~ (+ L, R); gradient lands on full W
+      {"w"} + ASI       -> Tucker x~ (asi_matmul)
+      {"w"} plain       -> dense x via plain autodiff (vanilla baseline)
+    """
     new_state = None
 
     def compress(x_):

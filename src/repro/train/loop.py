@@ -1,6 +1,7 @@
 """Fault-tolerant training loop: checkpoint/restart, async saves, step
-timing, straggler hooks. The data pipeline is a pure function of step, so
-restart = restore state + continue at state.step (no reader state).
+timing, straggler hooks, measured memory telemetry. The data pipeline is a
+pure function of step, so restart = restore state + continue at state.step
+(no reader state).
 """
 from __future__ import annotations
 
@@ -13,15 +14,23 @@ from repro.checkpoint import CheckpointManager
 from repro.config import TrainConfig
 from repro.distributed.fault import RestartPolicy, StepTimer
 from repro.train.step import TrainState
+from repro.utils.memprof import LiveWatermark
 
 
 def train_loop(state: TrainState, step_fn, batch_fn: Callable[[int], dict],
                tcfg: TrainConfig, *, log_every: int = 10,
                ckpt: CheckpointManager | None = None,
-               max_steps: int | None = None,
+               max_steps: int | None = None, memprof: bool = False,
                log_fn=print) -> tuple[TrainState, list[dict]]:
     """Runs up to ``max_steps or tcfg.steps``; resumes from the latest
-    checkpoint if ``ckpt`` has one. Returns (final_state, metrics_history)."""
+    checkpoint if ``ckpt`` has one. Returns (final_state, metrics_history).
+
+    ``memprof`` adds MEASURED memory columns to every logged step: live
+    jax-array bytes at the step boundary and the watermark across the run
+    (utils/memprof.py tier 2), plus the device allocator's intra-step peak
+    on backends that report one (tier 3; absent on CPU). Sampling is
+    host-side between steps — it never perturbs the jitted hot path.
+    """
     if ckpt is not None:
         restored_step, restored = ckpt.restore_latest(state)
         if restored is not None:
@@ -31,16 +40,22 @@ def train_loop(state: TrainState, step_fn, batch_fn: Callable[[int], dict],
     jit_step = jax.jit(step_fn, donate_argnums=0)
     total = max_steps or tcfg.steps
     timer = StepTimer()
+    watermark = LiveWatermark() if memprof else None
     history = []
     start = int(state.step)
     for step in range(start, total):
         timer.start()
         batch = batch_fn(step)
         state, metrics = jit_step(state, batch)
+        if watermark is not None:
+            jax.block_until_ready(metrics)
+            watermark.sample()
         if step % log_every == 0 or step == total - 1:
             m = {k: float(v) for k, v in metrics.items()}
             m["step"] = step
             m["sec"] = timer.stop()
+            if watermark is not None:
+                m.update(watermark.metrics())
             history.append(m)
             log_fn(f"[train] step {step}: " +
                    " ".join(f"{k}={v:.4g}" for k, v in m.items() if k != "step"))

@@ -7,7 +7,10 @@ launch/dryrun.py and runs eagerly in CPU tests.
 
 WASI maintenance per update mode:
 * factored — every ``refresh_every`` steps, re-orthogonalize each (L, R)
-  pair (wsi_refresh_factored), selected branch-free via jnp.where.
+  pair (wsi_refresh_factored: one fused CholeskyQR per pair). The refresh
+  sits under jax.lax.cond so the 1 - 1/refresh_every majority of steps pay
+  nothing for it (the step is jitted at the top level, where cond executes
+  only the taken branch — a where-select would run the QR every step).
 * project  — insert (L, R) from WSIState for the forward; after the
   optimizer updates W, run one WSI subspace iteration (paper Alg. 1).
 """
@@ -146,9 +149,11 @@ def make_train_step(loss_fn, cfg: ModelConfig, tcfg: TrainConfig, *,
             new_wsi = update_project_states(new_params, state.wsi)
         elif cfg.wasi.factored and cfg.wasi.refresh_every > 0:
             do = (state.step + 1) % cfg.wasi.refresh_every == 0
-            refreshed = _map_factored(new_params, wsi_refresh_factored)
-            new_params = jax.tree.map(
-                lambda a, b: jnp.where(do, a, b), refreshed, new_params)
+            new_params = jax.lax.cond(
+                do,
+                lambda p: _map_factored(p, wsi_refresh_factored),
+                lambda p: p,
+                new_params)
 
         metrics = dict(metrics)
         metrics.update({"loss": loss, "grad_norm": gnorm, "lr": lr})

@@ -1,3 +1,11 @@
+from repro.utils.memprof import (
+    LiveWatermark,
+    device_memory_stats,
+    device_peak_bytes,
+    live_bytes,
+    measured_residual_bytes,
+    role_residual_bytes,
+)
 from repro.utils.tree import (
     tree_bytes,
     tree_count,

@@ -1,0 +1,207 @@
+"""Measured memory telemetry: live-bytes watermarks, backward-residual
+probes, per-role residual accounting.
+
+benchmarks/fig5_tab1_resources.py historically reported memory ONLY from
+the paper's analytic formulas (Eq. 41-46). This module adds the measured
+side, with three tiers that are explicit about what each can and cannot
+see:
+
+1. ``measured_residual_bytes`` — a ``jax.vjp`` probe: linearize a function
+   at the given primals and count the bytes of the residual arrays the
+   returned VJP closure actually holds (deduplicated by buffer, so shared
+   Tucker factors are counted once). This is a TRUE measurement of
+   saved-for-backward memory — the quantity the paper's C_training ratio
+   compresses — independent of any formula. Run it eagerly (outside jit);
+   under jit the residuals are traced values with the same shapes, but the
+   probe here wants concrete buffers.
+2. ``live_bytes`` / ``LiveWatermark`` — sum over ``jax.live_arrays()``:
+   exact for persistent state (params, optimizer, ASI states, batches)
+   sampled at step boundaries from the host loop. Transients INSIDE a
+   jitted step are invisible to this tier.
+3. ``device_peak_bytes`` — the XLA allocator's peak
+   (``device.memory_stats()``): the real intra-step high-water mark, on
+   backends that expose it (TPU/GPU). CPU returns None — benchmark output
+   must say "n/a" there, never fake a number.
+
+``role_residual_bytes`` complements the measured tiers with the per-linear
+breakdown (which role saves what, dense vs compressed) that a single total
+cannot show.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import numpy as np
+
+
+def array_bytes(x) -> int:
+    """Bytes of one array-like (works on jax.Array / ShapeDtypeStruct)."""
+    return int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+
+
+def live_bytes() -> int:
+    """Total bytes of all live jax arrays on the default backend."""
+    return sum(array_bytes(a) for a in jax.live_arrays())
+
+
+def device_memory_stats() -> dict | None:
+    """Raw allocator stats of device 0, or None when the backend has no
+    allocator instrumentation (CPU)."""
+    dev = jax.devices()[0]
+    stats = getattr(dev, "memory_stats", None)
+    return stats() if stats is not None else None
+
+
+def device_peak_bytes() -> int | None:
+    """Allocator peak-bytes-in-use, or None when unavailable (CPU)."""
+    stats = device_memory_stats()
+    if not stats:
+        return None
+    return stats.get("peak_bytes_in_use")
+
+
+class LiveWatermark:
+    """Step-boundary live-bytes watermark for host-driven training loops.
+
+    ``sample()`` after each step; ``peak`` is the highest boundary total
+    seen, ``baseline`` the first. Pairs with ``device_peak_bytes`` (which
+    sees intra-step transients) when the backend has allocator stats.
+    """
+
+    def __init__(self):
+        self.baseline = live_bytes()
+        self.peak = self.baseline
+        self.last = self.baseline
+
+    def sample(self) -> int:
+        self.last = live_bytes()
+        self.peak = max(self.peak, self.last)
+        return self.last
+
+    def metrics(self, prefix: str = "mem_") -> dict:
+        """Host-side metrics dict merged into train-loop logging."""
+        out = {f"{prefix}live_mib": self.last / 2**20,
+               f"{prefix}live_peak_mib": self.peak / 2**20}
+        dev = device_peak_bytes()
+        if dev is not None:
+            out[f"{prefix}dev_peak_mib"] = dev / 2**20
+        return out
+
+
+class ResidualReport(NamedTuple):
+    total_bytes: int
+    n_arrays: int
+
+
+def measured_residual_bytes(fn: Callable, *args, has_aux: bool = False,
+                            **kwargs) -> ResidualReport:
+    """Measure the saved-for-backward bytes of ``fn`` at ``args``.
+
+    Runs ``jax.vjp`` and walks the returned VJP closure's pytree: its array
+    leaves ARE the residuals autodiff decided to keep (for custom-VJP ops,
+    exactly what the fwd rule returned). Buffers are deduplicated by
+    identity so a Tucker factor shared between the x~ and h~ residuals
+    (core/lowrank_linear.py) counts once. Differentiated-argument buffers
+    that appear as residuals are counted too — if autodiff keeps the dense
+    activation alive, that is precisely what this probe must report.
+    """
+    f = (lambda *a: fn(*a, **kwargs)) if kwargs else fn
+    if has_aux:
+        _, vjp_fn, _ = jax.vjp(f, *args, has_aux=True)
+    else:
+        _, vjp_fn = jax.vjp(f, *args)
+    seen: set[int] = set()
+    total = 0
+    count = 0
+    for leaf in jax.tree.leaves(vjp_fn):
+        if not hasattr(leaf, "shape") or not hasattr(leaf, "dtype"):
+            continue
+        key = id(leaf)
+        try:  # same underlying buffer via different Array wrappers
+            key = leaf.unsafe_buffer_pointer()
+        except Exception:
+            pass
+        if key in seen:
+            continue
+        seen.add(key)
+        total += array_bytes(leaf)
+        count += 1
+    return ResidualReport(total_bytes=total, n_arrays=count)
+
+
+# ---------------------------------------------------------------------------
+# Per-role residual accounting (analytic, from the config's own policies).
+# ---------------------------------------------------------------------------
+
+def tucker_residual_bytes(act_shape, ranks, itemsize: int = 4) -> int:
+    """Bytes of one linear's Tucker residual (paper Eq. 31/44) plus the
+    rank-K sketch's extra last-mode factor is charged by the caller."""
+    from repro.core.asi import tucker_storage
+
+    return tucker_storage(act_shape, ranks) * itemsize
+
+
+def dense_residual_bytes(act_shape, itemsize: int = 4) -> int:
+    n = 1
+    for d in act_shape:
+        n *= d
+    return n * itemsize
+
+
+def role_residual_bytes(cfg, batch: int, seq: int,
+                        itemsize: int = 4) -> list[dict]:
+    """Per-linear-role saved-activation bytes under ``cfg.wasi``, next to
+    the dense baseline. Covers one transformer block's projections (the
+    repeating cost); embedding/head stay dense by design (DESIGN.md §5).
+
+    Returns records {role, in_dim, out_dim, dense_bytes, bytes, kind} where
+    kind names what the backward actually saves for that linear:
+    ``tucker`` (+ sketch factor) for compressed roles, ``x+sketch`` for the
+    factored-no-ASI path (kernels/ops.py saves x and the M×K sketch), and
+    ``dense`` otherwise.
+    """
+    from repro.core.rank_policy import asi_mode_ranks
+    from repro.nn.linear import linear_rank, wasi_applies
+
+    w = cfg.wasi
+    d, f = cfg.d_model, cfg.d_ff
+    dh = cfg.resolved_head_dim
+    roles = [
+        ("mlp_up", "mlp", d, f),
+        ("mlp_down", "mlp", f, d),
+        ("attn_qkv", "attn", d, (cfg.n_heads + 2 * cfg.n_kv_heads) * dh),
+        ("attn_out", "attn", cfg.n_heads * dh, d),
+    ]
+    out = []
+    for name, role, i_dim, o_dim in roles:
+        act = (batch, seq, i_dim)
+        dense = dense_residual_bytes(act, itemsize)
+        treated = wasi_applies(w, role)
+        if treated and w.compress_acts:
+            a = w.asi
+            fracs = (a.batch_frac, a.token_frac, a.feature_frac)
+            ranks = asi_mode_ranks(act, fracs, skip_batch=a.skip_batch,
+                                   align=a.align)
+            bytes_ = tucker_residual_bytes(act, ranks, itemsize)
+            if w.factored:  # + the h~ sketch's (K, r_feat) last factor
+                bytes_ += linear_rank(i_dim, o_dim, w) * ranks[-1] * itemsize
+            kind = "tucker"
+        elif treated and w.factored:  # wsi: exact sketch-saving backward
+            k = linear_rank(i_dim, o_dim, w)
+            bytes_ = dense + batch * seq * k * 4  # x (model dtype) + h (f32)
+            kind = "x+sketch"
+        else:
+            bytes_ = dense
+            kind = "dense"
+        out.append({"role": name, "in_dim": i_dim, "out_dim": o_dim,
+                    "dense_bytes": dense, "bytes": bytes_, "kind": kind})
+    return out
+
+
+def summarize_roles(records: list[dict]) -> dict:
+    """Totals over a role report: {dense_bytes, bytes, ratio}."""
+    dense = sum(r["dense_bytes"] for r in records)
+    got = sum(r["bytes"] for r in records)
+    return {"dense_bytes": dense, "bytes": got,
+            "ratio": dense / max(got, 1)}

@@ -111,6 +111,38 @@ def test_gram_sweep(m, k, dtype):
                                rtol=tol, atol=tol * m)
 
 
+@pytest.mark.parametrize("m,k,bm", [(512, 16, 128), (200, 24, 64),
+                                    (64, 8, 64), (33, 7, 32), (1000, 48, 512)])
+def test_choleskyqr_kernel_sweep(m, k, bm):
+    """Fused single-launch CholeskyQR (kernels/qr.py) vs the jnp oracle:
+    orthonormal Q, exact reconstruction Q @ (Q^T Y) = Y (full-rank Y), and
+    agreement with the solve_triangular reference."""
+    from repro.core.orthogonal import orthonormality_error
+    from repro.kernels.qr import choleskyqr_tiled
+
+    y = jax.random.normal(KEY, (m, k))
+    q, mix = choleskyqr_tiled(y, bm=bm)
+    assert float(orthonormality_error(q)) < 1e-3
+    np.testing.assert_allclose(np.asarray(q @ mix), np.asarray(y),
+                               rtol=1e-3, atol=1e-3)
+    qr_, mixr = ref.choleskyqr_ref(y)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(qr_),
+                               rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(mix), np.asarray(mixr),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_choleskyqr_matches_wsi_refresh_semantics():
+    """ops.cholesky_qr_mix (any backend) must preserve L @ R through the
+    factored refresh: Q (Q^T L) == L up to the regularization shift."""
+    from repro.kernels import cholesky_qr_mix
+
+    L = jax.random.normal(KEY, (96, 12))
+    q, mix = cholesky_qr_mix(L)
+    np.testing.assert_allclose(np.asarray(q @ mix), np.asarray(L),
+                               rtol=1e-4, atol=1e-4)
+
+
 @pytest.mark.parametrize(
     "b,sq,sk,h,kvh,dh,causal,window",
     [(2, 128, 128, 4, 2, 32, True, 0),
