@@ -131,29 +131,31 @@ def _measured_lin_resid(cfg, eps: float | None = None) -> tuple[int, int]:
     the per-linear saved-for-backward footprint from what neighboring ops
     keep. Builds the param dict the training path would use: {"w"} dense,
     {"L","R"} factored, {"w","L","R"} project (eps-ranked via WSI init)."""
+    from repro.api import bind, resolve_linear_spec
     from repro.config import WasiConfig
     from repro.core.wsi import wsi_init
-    from repro.nn.linear import apply_linear, asi_spec, init_linear
 
     key = jax.random.PRNGKey(1)
     b, n, i, o = BATCH, N_PATCHES + 1, cfg.d_model, cfg.d_ff
     x = jax.random.normal(key, (b, n, i))
     w = cfg.wasi
+    spec = resolve_linear_spec(w, "mlp/up", "mlp", i, o)
     if w.project:
         wd = jax.random.normal(key, (o, i)) / i ** 0.5
         st = wsi_init(wd, pick_rank(wd, eps if eps is not None else w.epsilon))
         p = {"w": wd, "L": st.L, "R": st.R}
-    else:  # dense ("none") and factored share the init_linear layout
-        p = init_linear(key, i, o, w, role="mlp")
-    asi = asi_spec(key, (b, n, i), w)
+    else:  # dense ("none") and factored share the planned init layout
+        p = bind.init_params(key, spec)
+    asi = bind.asi_state(key, (b, n, i), w)
     got = measured_residual_bytes(
-        lambda p_, x_: apply_linear(p_, x_, w, asi)[0].sum(), p, x)
+        lambda p_, x_: bind.apply(spec, p_, x_, w, asi)[0].sum(), p, x)
     shape_key = (b, n, i, o)
     if shape_key not in _DENSE_LIN_RESID:  # identical for every sweep row
         dense_cfg = WasiConfig(method="none")
+        dspec = resolve_linear_spec(dense_cfg, "mlp/up", "mlp", i, o)
         pd = {"w": jax.random.normal(key, (o, i)) / i ** 0.5}
         _DENSE_LIN_RESID[shape_key] = measured_residual_bytes(
-            lambda p_, x_: apply_linear(p_, x_, dense_cfg, None)[0].sum(),
+            lambda p_, x_: bind.apply(dspec, p_, x_, dense_cfg, None)[0].sum(),
             pd, x).total_bytes
     return got.total_bytes, _DENSE_LIN_RESID[shape_key]
 

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.configs as configs
+from repro import api
 from repro.config import TrainConfig
 from repro.data.synthetic import SyntheticLM
 from repro.models.lm import (
@@ -65,6 +66,7 @@ def serve_rows() -> list[str]:
     scanned token-by-token loop), decode throughput, requests/sec."""
     rows = []
     cfg = configs.get_smoke("qwen2-0.5b")
+    plan = api.install(api.resolve(cfg))   # one resolved plan for all rows
     key = jax.random.PRNGKey(0)
     params = init_lm(key, cfg, jnp.dtype(cfg.dtype))
     prompt = jax.random.randint(key, (SERVE_B, SERVE_P), 0, cfg.vocab_size)
@@ -99,7 +101,8 @@ def serve_rows() -> list[str]:
                 f"{tokens / (us_batch * 1e-6):.0f}_tok_s")
 
     # decode throughput + requests/sec through the continuous-batching engine
-    engine = ServeEngine(params, cfg, max_slots=SERVE_B, max_cache=max_cache)
+    engine = ServeEngine(params, plan=plan, max_slots=SERVE_B,
+                         max_cache=max_cache)
     for i in range(SERVE_B):  # warmup compiles
         engine.submit(list(map(int, prompt[i])), max_new=2)
     engine.run()

@@ -9,6 +9,7 @@ import dataclasses
 import jax
 
 import repro.configs as configs
+from repro import api
 from repro.config import TrainConfig
 from repro.data.synthetic import SyntheticVision
 from repro.models.vit import init_vit, init_vit_states, vit_loss
@@ -17,6 +18,7 @@ from repro.train.step import make_train_state, make_train_step
 
 def train(cfg, steps, label):
     key = jax.random.PRNGKey(233)
+    api.install(api.resolve(cfg, batch=16, seq=17))
     n_classes, n_patches, patch_dim = 4, 16, 24
     params = init_vit(key, cfg, n_classes, patch_dim, n_patches)
     states = init_vit_states(key, cfg, 16, n_patches) \

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.configs as configs
+from repro import api
 from repro.config import TrainConfig
 from repro.core import pick_rank, truncated_svd, wsi_init, wsi_step
 from repro.data.synthetic import SyntheticLM
@@ -33,10 +34,14 @@ def main():
     print(f"[2] after a weight update: WSI err {float(err):.4f} "
           f"vs fresh-SVD optimum {float(err_best):.4f}")
 
-    # --- 2. end-to-end: train a tiny LM with WASI --------------------------
+    # --- 2. the SubspacePlan: decide every layer's subspace ONCE -----------
     cfg = configs.get_smoke("qwen2-0.5b")  # WASI on by default
     B, S = 8, 32
-    params = init_lm(key, cfg)
+    plan = api.install(api.resolve(cfg, batch=B, seq=S))
+    print("[plan]", plan.summary().replace("\n", "\n[plan] "))
+
+    # --- 3. end-to-end: train a tiny LM with WASI --------------------------
+    params = init_lm(key, cfg)   # layouts come from the installed plan
     states = init_lm_states(key, cfg, B, S)
     tcfg = TrainConfig(optimizer="sgd", lr=0.3, momentum=0.9, steps=40,
                        checkpoint_every=0)
@@ -49,7 +54,16 @@ def main():
         if i % 10 == 0 or i == 39:
             print(f"[3] step {i:3d} loss {float(m['loss']):.4f} "
                   f"(weights factored, activations Tucker-compressed)")
-    print("[4] done — see examples/finetune_vit.py for the paper's setting")
+
+    # --- 4. convert: densify the trained factored params via the plan ------
+    from repro.api.convert import densify
+    dense = densify(state.params, plan)
+    n_dense = sum(int(x.size) for x in jax.tree.leaves(dense))
+    n_fact = sum(int(x.size) for x in jax.tree.leaves(state.params))
+    print(f"[4] densify(params, plan): {n_fact:,} factored params "
+          f"-> {n_dense:,} dense (export-ready)")
+    print("[5] done — see examples/finetune_vit.py for the paper's setting "
+          "and docs/api.md for the plan lifecycle")
 
 
 if __name__ == "__main__":

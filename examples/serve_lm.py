@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.configs as configs
+from repro import api
 from repro.launch.serve import generate
 from repro.models.lm import count_params, init_lm
 
@@ -26,6 +27,7 @@ def main():
     for method in ("wasi", "none"):
         cfg = configs.get_smoke(args.arch)
         cfg = cfg.replace(wasi=dataclasses.replace(cfg.wasi, method=method))
+        api.install(api.resolve(cfg))  # one subspace decision per method
         params = init_lm(key, cfg, jnp.dtype(cfg.dtype))
         prompt = jax.random.randint(key, (args.batch, 8), 0, cfg.vocab_size)
         # warmup compile

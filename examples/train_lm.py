@@ -1,15 +1,18 @@
 """End-to-end driver: train a ~100M-param decoder LM with WASI for a few
-hundred steps on synthetic data, with checkpointing + restart.
+hundred steps on synthetic data, with plan-bearing checkpointing + restart.
 
   PYTHONPATH=src python examples/train_lm.py --steps 300
 (defaults to a reduced model so it finishes on CPU; --d-model 768 --layers 12
-gives the full ~100M configuration on beefier hosts)
+gives the full ~100M configuration on beefier hosts; --smoke is the CI
+configuration: tiny model, a handful of steps, exercising the whole public
+API surface — plan resolve -> init -> train -> checkpoint -> serve restore)
 """
 import argparse
 
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.config import LayerGroup, ModelConfig, TrainConfig, WasiConfig, AsiConfig
 from repro.checkpoint import CheckpointManager
 from repro.data.synthetic import SyntheticLM
@@ -27,20 +30,32 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--ckpt", default="/tmp/repro_example_lm")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny model, 12 steps, full plan ->"
+                         " train -> checkpoint -> serve-restore round trip")
     args = ap.parse_args()
+    if args.smoke:
+        args.steps, args.d_model, args.layers = 12, 64, 2
+        args.vocab, args.batch, args.seq = 512, 2, 16
+        if args.ckpt == ap.get_default("ckpt"):
+            args.ckpt += "_smoke"   # never restore a full-size run's ckpt
+        import shutil
+        shutil.rmtree(args.ckpt, ignore_errors=True)  # smoke runs are fresh
 
     cfg = ModelConfig(
         name="example-lm", n_layers=args.layers, d_model=args.d_model,
         n_heads=max(4, args.d_model // 64), n_kv_heads=max(2, args.d_model // 128),
-        d_ff=args.d_model * 4, vocab_size=args.vocab, head_dim=64,
+        d_ff=args.d_model * 4, vocab_size=args.vocab, head_dim=64 if not args.smoke else 16,
         groups=(LayerGroup(("dense",), args.layers),),
         wasi=WasiConfig(method="wasi", scope="all", rank_frac=0.25,
                         rank_align=8, min_rank=8,
                         asi=AsiConfig(token_frac=0.25, feature_frac=0.25)),
         dtype="float32", remat="none")
     tcfg = TrainConfig(optimizer="adamw", lr=3e-3, steps=args.steps,
-                       clip_norm=1.0, checkpoint_every=100,
+                       clip_norm=1.0, checkpoint_every=100 if not args.smoke else 8,
                        checkpoint_dir=args.ckpt)
+    # ONE plan, resolved up front; the checkpoint manifest carries it
+    plan = api.install(api.resolve(cfg, batch=args.batch, seq=args.seq))
     key = jax.random.PRNGKey(tcfg.seed)
     params = init_lm(key, cfg)
     print(f"[train_lm] params: {count_params(params):,}")
@@ -49,11 +64,23 @@ def main():
     step = make_train_step(lm_loss, cfg, tcfg)
     data = SyntheticLM(vocab_size=args.vocab, seq_len=args.seq,
                        global_batch=args.batch, seed=tcfg.seed)
-    ckpt = CheckpointManager(args.ckpt, keep=2)
+    ckpt = CheckpointManager(args.ckpt, keep=2, plan=plan, label="train_state")
     state, hist = train_loop(state, step, lambda s: data.batch(s), tcfg,
-                             ckpt=ckpt, log_every=20)
-    print(f"[train_lm] CE {hist[0]['ce']:.3f} -> {hist[-1]['ce']:.3f} "
-          f"(log-vocab = {jnp.log(args.vocab):.2f})")
+                             ckpt=ckpt, log_every=20 if not args.smoke else 4)
+    if hist:
+        print(f"[train_lm] CE {hist[0]['ce']:.3f} -> {hist[-1]['ce']:.3f} "
+              f"(log-vocab = {jnp.log(args.vocab):.2f})")
+    else:   # resumed at the final step: nothing left to train
+        print(f"[train_lm] already trained to step {int(state.step)} "
+              f"(checkpoint at {args.ckpt})")
+
+    # the checkpoint is self-describing: restore it into the serve engine
+    # with no config in hand (api/convert.py reads the manifest's plan)
+    from repro.serve import ServeEngine
+    engine = ServeEngine.from_checkpoint(args.ckpt, max_slots=2, max_cache=24)
+    req = engine.submit([1, 2, 3], max_new=4)
+    engine.run()
+    print(f"[train_lm] serve-from-checkpoint OK: {req.tokens}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,38 @@
+"""Declarative SubspacePlan API: one plan -> init / apply / convert /
+checkpoint, shared by train and serve.
+
+    from repro import api
+
+    plan = api.resolve(cfg, batch=B, seq=S)        # decide subspaces ONCE
+    api.install(plan)                              # model internals read it
+    params = init_lm(key, cfg)                     # plan-driven layouts
+    factored = api.convert.factorize(dense, plan)  # pretrained -> subspace
+    # ... checkpoint with plan=...; ServeEngine.from_checkpoint(dir)
+
+See docs/api.md for the full lifecycle.
+"""
+from repro.api import bind, convert, plan
+from repro.api.plan import (
+    LinearSpec,
+    SubspacePlan,
+    install,
+    plan_of,
+    resolve,
+    resolve_linear_spec,
+    role_treated,
+    uninstall,
+)
+
+__all__ = [
+    "LinearSpec",
+    "SubspacePlan",
+    "bind",
+    "convert",
+    "install",
+    "plan",
+    "plan_of",
+    "resolve",
+    "resolve_linear_spec",
+    "role_treated",
+    "uninstall",
+]

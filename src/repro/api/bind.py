@@ -1,0 +1,267 @@
+"""Plan-driven linear init/apply + the ONLY place allowed to look at raw
+param-dict keys.
+
+``init_params`` / ``apply`` replace the cfg-threaded ``nn.linear``
+entry points: dispatch is on the typed :class:`~repro.api.plan.LinearSpec`
+(mode, rank, kernel route), not on ``"L" in p`` sniffing. Param layouts are
+unchanged plain pytrees:
+
+    dense:    {"w": (O, I) [, "b"]}
+    factored: {"L": (O, K), "R": (K, I) [, "b"]}
+    project:  {"w": (O, I) [, "L", "R"]}   (factors injected per-step by
+              core/project.py, or carried by a converted checkpoint)
+
+What each path saves for backward is unchanged (the sketch-saving contract,
+docs/training.md): Tucker x~ + rank-K sketch for WASI, x + dense sketch via
+the fused kernel for factored-no-ASI, dense x for vanilla.
+
+Everything else in the tree that must walk param structure by key
+(factored-refresh mapping, project-factor injection/extraction, legacy
+param inspection) lives here too, so no other module dispatches on keys.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.plan import (
+    LinearSpec,
+    SubspacePlan,
+    _act_mode_ranks,
+    resolve_linear_spec,
+    role_treated,
+)
+from repro.config import WasiConfig
+from repro.core.asi import ASIState, asi_init, asi_project, asi_step
+from repro.core.lowrank_linear import (
+    asi_matmul,
+    wasi_matmul,
+    wasi_matmul_project,
+    wsi_matmul_project_exact,
+)
+from repro.core.wsi import WSIState
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(key, spec: LinearSpec, *, dtype=jnp.float32,
+                scale: float | None = None, bias: bool | None = None) -> dict:
+    """Random init for one linear site, in the layout its spec dictates.
+    RNG consumption matches the historical ``nn.linear.init_linear`` so
+    seeded runs reproduce across the API change."""
+    std = scale if scale is not None else spec.in_dim ** -0.5
+    with_bias = spec.bias if bias is None else bias
+    kw, kb = jax.random.split(key)
+    p: dict = {}
+    if spec.mode == "factored":
+        k = spec.rank
+        kl, kr = jax.random.split(kw)
+        split = (std / k ** 0.5) ** 0.5
+        p["L"] = (jax.random.normal(kl, (spec.out_dim, k), jnp.float32)
+                  * split).astype(dtype)
+        p["R"] = (jax.random.normal(kr, (k, spec.in_dim), jnp.float32)
+                  * split).astype(dtype)
+    else:
+        # project mode inits DENSE; its (L, R) live in WSI states (train) or
+        # arrive via convert.factorize (checkpoints)
+        p["w"] = (jax.random.normal(kw, (spec.out_dim, spec.in_dim),
+                                    jnp.float32) * std).astype(dtype)
+    if with_bias:
+        p["b"] = jnp.zeros((spec.out_dim,), dtype)
+    return p
+
+
+def asi_state(key, act_shape: Sequence[int], wasi: WasiConfig,
+              dtype=jnp.float32) -> ASIState | None:
+    """Warm-start ASI state for a linear whose input activation has
+    ``act_shape`` (B, N, I) or (B, H, W, I). None if compression is off."""
+    if not wasi.compress_acts:
+        return None
+    ranks = _act_mode_ranks(tuple(act_shape), wasi)
+    return asi_init(key, act_shape, ranks, dtype)
+
+
+def init_state(key, spec: LinearSpec, act_shape: Sequence[int],
+               wasi: WasiConfig, dtype=jnp.float32) -> ASIState | None:
+    """Per-spec ASI warm-start state; None when this site's activations
+    stay dense under the plan."""
+    if not (wasi.compress_acts and role_treated(wasi, spec.role)):
+        return None
+    return asi_state(key, act_shape, wasi, dtype)
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+def apply(spec: LinearSpec, p: dict, x: jax.Array, wasi: WasiConfig,
+          state: ASIState | None = None):
+    """Apply one linear site per its spec. Returns (y, new_state) —
+    new_state is None when no ASI state is involved."""
+    new_state = None
+
+    def compress(x_):
+        if wasi.asi.frozen:
+            return asi_project(jax.lax.stop_gradient(x_), state), state
+        return asi_step(jax.lax.stop_gradient(x_), state)
+
+    if spec.mode == "project" and "L" in p:
+        # factored forward, dense-W gradient (paper Eq. 9-11); factors come
+        # from the per-step WSI injection or a converted checkpoint
+        if state is not None:
+            xt, new_state = compress(x)
+            y = wasi_matmul_project(x, p["w"], p["L"], p["R"], xt)
+        else:
+            y = wsi_matmul_project_exact(x, p["w"], p["L"], p["R"])
+    elif spec.mode == "factored":
+        if state is not None:
+            xt, new_state = compress(x)
+            y = wasi_matmul(x, p["L"], p["R"], xt)
+        else:
+            # no-ASI factored path (serving, `wsi` factored training)
+            if spec.kernel == "fused_lowrank":
+                # fused Pallas kernel on TPU, XLA einsum pair elsewhere
+                from repro.kernels.ops import lowrank_matmul
+                y = lowrank_matmul(x, p["R"], p["L"])
+            else:
+                h = jnp.einsum("...i,ki->...k", x, p["R"])
+                y = jnp.einsum("...k,ok->...o", h, p["L"])
+    else:
+        # dense weights (vanilla, ASI baseline, or un-injected project)
+        if state is not None:
+            xt, new_state = compress(x)
+            y = asi_matmul(x, p["w"], xt)
+        else:
+            y = jnp.einsum("...i,oi->...o", x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y, new_state
+
+
+def linear_out_dim(p: dict) -> int:
+    return p["L"].shape[0] if "L" in p else p["w"].shape[0]
+
+
+def linear_layout(p: dict) -> str:
+    """The subspace layout a param dict is in: "dense" | "factored" |
+    "project". The canonical key-inspection entry for api.convert."""
+    if "L" in p and "w" in p:
+        return "project"
+    if "L" in p:
+        return "factored"
+    return "dense"
+
+
+def is_linear_params(v) -> bool:
+    """Does ``v`` look like one linear's param dict (any layout)?"""
+    return isinstance(v, dict) and ("w" in v or "L" in v)
+
+
+def dense_weight(v):
+    """The dense (…, O, I) weight of a dense-layout linear dict, else
+    None (used by plan calibration, which only reads dense trees)."""
+    if isinstance(v, dict) and "w" in v and getattr(v["w"], "ndim", 0) >= 2:
+        return v["w"]
+    return None
+
+
+def linear_dims(p: dict) -> tuple[int, int]:
+    """(out_dim, in_dim) of a linear param dict in any layout."""
+    if linear_layout(p) == "factored":
+        return int(p["L"].shape[-2]), int(p["R"].shape[-1])
+    return int(p["w"].shape[-2]), int(p["w"].shape[-1])
+
+
+def infer_spec(p: dict, wasi: WasiConfig, *, role: str = "mlp",
+               name: str = "adhoc") -> LinearSpec:
+    """Bridge for the legacy dict-first API: recover a spec from a param
+    dict's layout. Mode comes from the keys (the one sanctioned place),
+    dims/rank from the shapes, kernel route from the plan policy."""
+    if "L" in p and "w" in p:
+        mode, rank = "project", p["L"].shape[-1]
+        out_dim, in_dim = p["w"].shape[-2:]
+    elif "L" in p:
+        mode, rank = "factored", p["L"].shape[-1]
+        out_dim, in_dim = p["L"].shape[-2], p["R"].shape[-1]
+    else:
+        mode, rank = "dense", 0
+        out_dim, in_dim = p["w"].shape[-2:]
+    return LinearSpec(name=name, role=role, in_dim=int(in_dim),
+                      out_dim=int(out_dim), mode=mode, rank=int(rank),
+                      bias="b" in p,
+                      kernel="fused_lowrank" if mode == "factored"
+                      else "einsum")
+
+
+# ---------------------------------------------------------------------------
+# Structure-walking helpers (the key-dispatch monopoly)
+# ---------------------------------------------------------------------------
+
+def map_factored(params, fn):
+    """Apply fn(WSIState) -> WSIState to every {L, R} factor pair in a
+    param tree (factored-mode WSI refresh)."""
+    def walk(node):
+        if isinstance(node, dict):
+            if "L" in node and "R" in node and "w" not in node:
+                st = fn(WSIState(L=node["L"], R=node["R"]))
+                out = dict(node)
+                out["L"], out["R"] = st.L, st.R
+                return out
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        if isinstance(node, tuple) and not hasattr(node, "_fields"):
+            return tuple(walk(v) for v in node)
+        return node
+
+    return walk(params)
+
+
+def inject_factors(params, states: dict):
+    """Insert (L, R) from ``states`` (path-keyed WSIState dict, paths ending
+    "/w") next to each dense W so ``apply`` takes the project path."""
+    def patch(node, prefix=""):
+        if isinstance(node, dict):
+            if "w" in node and prefix + "/w" in states:
+                st = states[prefix + "/w"]
+                node = dict(node)
+                node["L"] = jax.lax.stop_gradient(st.L)
+                node["R"] = jax.lax.stop_gradient(st.R)
+                return node
+            return {k: patch(v, f"{prefix}/{k}" if prefix else k)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [patch(v, f"{prefix}/{i}" if prefix else str(i))
+                 for i, v in enumerate(node)]
+            return type(node)(t) if not isinstance(node, tuple) else tuple(t)
+        return node
+
+    return patch(params)
+
+
+def extract_project_factors(params):
+    """Split converted project-mode params {"w","L","R"} into a dense param
+    tree plus a path-keyed {".../w": WSIState} dict (same keying as
+    core/project.init_project_states) for warm-starting the WSI states.
+    Trees without carried factors return (params, {})."""
+    factors: dict[str, WSIState] = {}
+
+    def strip(node, prefix=""):
+        if isinstance(node, dict):
+            if "w" in node and "L" in node and "R" in node:
+                factors[prefix + "/w"] = WSIState(L=node["L"], R=node["R"])
+                return {k: v for k, v in node.items() if k not in ("L", "R")}
+            return {k: strip(v, f"{prefix}/{k}" if prefix else k)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [strip(v, f"{prefix}/{i}" if prefix else str(i))
+                 for i, v in enumerate(node)]
+            return t if isinstance(node, list) else tuple(t)
+        return node
+
+    stripped = strip(params)
+    return (stripped, factors) if factors else (params, {})

@@ -1,0 +1,155 @@
+"""Model-level dense<->factored conversion + plan-bearing checkpoints.
+
+``factorize(dense_params, plan)`` rewrites every plan-covered linear into
+its planned layout (truncated SVD per spec — paper Alg. 1 t=0), including
+the paper's *project* mode ({"w","L","R"}: dense weight kept, factors
+carried) which the legacy ``init_linear_from_dense`` could not emit.
+``densify(params, plan)`` is the inverse (L@R for factored sites, factor
+drop for project sites), so a trained factored checkpoint exports to a
+dense one any framework can load.
+
+The plan itself serializes into the checkpoint manifest
+(``checkpoint.save_checkpoint(..., plan=...)``), making a checkpoint
+self-describing: ``load_checkpoint(dir)`` rebuilds (params, plan) with no
+config in hand — loadable for training, serving (ServeEngine
+.from_checkpoint), or dense export.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.bind import is_linear_params, linear_dims, linear_layout
+from repro.api.plan import LEAF_TO_SPEC, LinearSpec, SubspacePlan
+from repro.checkpoint.ckpt import (
+    latest_step,
+    load_manifest,
+    restore_untyped,
+)
+
+
+# ---------------------------------------------------------------------------
+# Truncated SVD over (possibly stacked) weights
+# ---------------------------------------------------------------------------
+
+def _svd_factors(w, k: int):
+    """W (..., O, I) -> (L (..., O, K), R (..., K, I)) by truncated SVD.
+    Batched over leading stack dims (scan repeats, expert banks)."""
+    u, s, vt = jnp.linalg.svd(jnp.asarray(w, jnp.float32),
+                              full_matrices=False)
+    L = u[..., :, :k] * s[..., None, :k]
+    R = vt[..., :k, :]
+    return L.astype(w.dtype), R.astype(w.dtype)
+
+
+def factorize_linear(w, spec: LinearSpec, bias=None) -> dict:
+    """One dense weight -> the param layout its spec dictates."""
+    p: dict = {}
+    if spec.mode == "factored":
+        p["L"], p["R"] = _svd_factors(w, spec.rank)
+    elif spec.mode == "project":
+        p["w"] = w
+        p["L"], p["R"] = _svd_factors(w, spec.rank)
+    else:
+        p["w"] = w
+    if bias is not None:
+        p["b"] = bias
+    return p
+
+
+def densify_linear(p: dict, spec: LinearSpec) -> dict:
+    """Inverse of :func:`factorize_linear` (rank-truncation is lossy for
+    factored sites, exact for project/dense)."""
+    out: dict = {}
+    if linear_layout(p) == "factored":
+        out["w"] = jnp.einsum("...ok,...ki->...oi", p["L"], p["R"]).astype(
+            p["L"].dtype)
+    else:
+        out["w"] = p["w"]
+    if p.get("b") is not None:
+        out["b"] = p["b"]
+    return out
+
+
+def _walk_linears(tree, plan: SubspacePlan, fn):
+    """Apply fn(spec, linear_dict) to every plan-covered linear dict in a
+    param tree; everything else (norms, convs, embeddings, heads) passes
+    through untouched."""
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for key, v in node.items():
+                if key in LEAF_TO_SPEC and is_linear_params(v):
+                    name, role = LEAF_TO_SPEC[key]
+                    o, i = linear_dims(v)
+                    out[key] = fn(plan.linear(name, i, o, role=role), v)
+                else:
+                    out[key] = walk(v)
+            return out
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        if isinstance(node, tuple):
+            return tuple(walk(v) for v in node)
+        return node
+
+    return walk(tree)
+
+
+def factorize(dense_params, plan: SubspacePlan):
+    """Dense param tree -> the plan's layouts (factored {L,R}, project
+    {w,L,R}, dense passthrough). Generalizes ``init_linear_from_dense`` to
+    whole models and to project mode."""
+    def one(spec, p):
+        if linear_layout(p) != "dense":
+            raise ValueError(f"site {spec.name} already factored; "
+                             "factorize expects a dense tree")
+        return factorize_linear(p["w"], spec, bias=p.get("b"))
+
+    return _walk_linears(dense_params, plan, one)
+
+
+def densify(params, plan: SubspacePlan):
+    """Any plan-layout param tree -> fully dense ({"w"} everywhere)."""
+    return _walk_linears(params, plan, lambda spec, p: densify_linear(p, spec))
+
+
+# ---------------------------------------------------------------------------
+# Plan-bearing checkpoints
+# ---------------------------------------------------------------------------
+
+def load_plan(ckpt_dir: str, step: int | None = None) -> SubspacePlan | None:
+    """The plan stored in a checkpoint's manifest, or None."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        return None
+    m = load_manifest(ckpt_dir, step)
+    return SubspacePlan.from_json(m["plan"]) if m.get("plan") else None
+
+
+def load_checkpoint(ckpt_dir: str, step: int | None = None):
+    """Template-free restore of a plan-bearing checkpoint.
+
+    Returns (params, plan, step). Works on params-only checkpoints and on
+    full train-state checkpoints (manifest label "train_state": params are
+    the state's first field). The plan in the manifest carries the full
+    ModelConfig, so nothing else is needed to serve, fine-tune, or
+    dense-export the restored weights."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    m = load_manifest(ckpt_dir, step)
+    tree = restore_untyped(ckpt_dir, step)
+    if m.get("label") == "train_state":
+        tree = tree[0]          # TrainState.params
+    plan = SubspacePlan.from_json(m["plan"]) if m.get("plan") else None
+    return tree, plan, step
+
+
+def export_dense(ckpt_dir: str, step: int | None = None):
+    """(dense_params, plan, step) from a plan-bearing checkpoint — the
+    dense-export path for downstream consumers."""
+    params, plan, step = load_checkpoint(ckpt_dir, step)
+    if plan is None:
+        raise ValueError(f"checkpoint at {ckpt_dir} carries no plan; "
+                         "cannot infer factored sites")
+    return densify(params, plan), plan, step

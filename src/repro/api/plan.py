@@ -1,0 +1,451 @@
+"""Declarative subspace plan: which subspace each linear lives in, decided
+ONCE per model.
+
+The paper's claim is that a model's essential information lives in a fixed
+per-layer subspace. Before this module the repro re-decided *which* subspace
+(mode, rank, ASI shape, kernel route) ad hoc at every call site by sniffing
+param dict keys. A :class:`SubspacePlan` is the single resolved answer:
+
+    plan = resolve(cfg)                       # static rank policy
+    plan = resolve(cfg, calibration=params)   # per-site eps-ranks (Alg. 1 t=0)
+
+and every consumer — ``api.bind`` (init/apply), ``api.convert``
+(dense<->factored), the checkpoint manifest, the serve engine, benchmarks —
+reads the plan instead of re-deriving policy. ``plan_of(cfg)`` memoizes the
+static resolution per (hashable, frozen) ``ModelConfig``; ``install(plan)``
+overrides it with an explicitly resolved plan (e.g. calibrated ranks) so
+deep model code picks the same plan up without threading a new argument
+through every scan body.
+
+A :class:`LinearSpec` names one linear *site* (e.g. ``mlp/up``): sites are
+shared across stacked/scanned layers — per-layer heterogeneity inside a
+scan would break XLA static shapes, so calibrated ranks take the max over a
+site's stack, exactly as ``core/project.py`` always did.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Literal, Mapping, Sequence
+
+from repro.config import (
+    AsiConfig,
+    LayerGroup,
+    ModelConfig,
+    MoeConfig,
+    SsmConfig,
+    WasiConfig,
+)
+from repro.core.rank_policy import asi_mode_ranks, static_rank
+from repro.core.svd import pick_rank
+
+Mode = Literal["dense", "factored", "project"]
+Kernel = Literal["einsum", "fused_lowrank"]
+
+#: linear-dict key in a param tree -> (spec name, role). The single place
+#: that knows how param-tree naming maps onto plan sites.
+LEAF_TO_SPEC: dict[str, tuple[str, str]] = {
+    "gate": ("mlp/gate", "mlp"),
+    "up": ("mlp/up", "mlp"),
+    "down": ("mlp/down", "mlp"),
+    "wq": ("attn/wq", "attn"),
+    "wk": ("attn/wk", "attn"),
+    "wv": ("attn/wv", "attn"),
+    "wo": ("attn/wo", "attn"),
+    "in_proj": ("ssm/in_proj", "ssm"),
+    "x_proj": ("ssm/x_proj", "ssm"),
+    "dt_proj": ("ssm/dt_proj", "ssm"),
+    "out_proj": ("ssm/out_proj", "ssm"),
+    "bcdt_proj": ("ssm/bcdt_proj", "ssm_small"),
+    "w_gate": ("moe/w_gate", "moe"),
+    "w_up": ("moe/w_up", "moe"),
+    "w_down": ("moe/w_down", "moe"),
+}
+
+
+def role_treated(wasi: WasiConfig, role: str) -> bool:
+    """Does WASI treat this linear? role in {mlp, attn, ssm, ssm_small,
+    moe, head}. (Formerly nn.linear.wasi_applies.)"""
+    if wasi.method == "none" or wasi.scope == "none":
+        return False
+    if role == "head":
+        return False  # embeddings / lm_head stay dense (DESIGN.md §5)
+    if wasi.scope == "mlp":
+        return role in ("mlp", "moe")
+    return True  # scope == "all"
+
+
+@dataclass(frozen=True)
+class LinearSpec:
+    """One linear site, fully resolved: where its weights live (mode/rank),
+    how its saved activations are compressed (ASI mode-ranks), and which
+    kernel route applies it."""
+
+    name: str                 # site id, e.g. "mlp/up"
+    role: str                 # mlp | attn | ssm | ssm_small | moe | head
+    in_dim: int
+    out_dim: int
+    mode: Mode = "dense"
+    rank: int = 0             # 0 <=> dense
+    bias: bool = False
+    # ASI Tucker mode-ranks for this site's input activation at the plan's
+    # (batch, seq) hint; None when activations stay dense or no hint given.
+    asi_ranks: tuple[int, ...] | None = None
+    kernel: Kernel = "einsum"
+    # Advisory: does the single-launch fused backward fit the VMEM budget at
+    # the standard 128-row tile (kernels/ops._bwd_fits_vmem)? None for dense.
+    bwd_fits_vmem: bool | None = None
+
+    @property
+    def factored_params(self) -> bool:
+        """Do this site's PARAMS carry (L, R) factors?"""
+        return self.mode == "factored"
+
+    @property
+    def weight_shape(self) -> tuple[int, ...]:
+        return (self.out_dim, self.in_dim)
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        if self.asi_ranks is not None:
+            d["asi_ranks"] = list(self.asi_ranks)
+        return d
+
+    @staticmethod
+    def from_json(d: Mapping[str, Any]) -> "LinearSpec":
+        d = dict(d)
+        if d.get("asi_ranks") is not None:
+            d["asi_ranks"] = tuple(d["asi_ranks"])
+        return LinearSpec(**d)
+
+
+def resolve_linear_spec(wasi: WasiConfig, name: str, role: str,
+                        in_dim: int, out_dim: int, *, bias: bool = False,
+                        act_shape: Sequence[int] | None = None,
+                        weight=None) -> LinearSpec:
+    """Resolve ONE site under ``wasi``. ``weight`` (a dense (…, O, I) array)
+    switches the rank policy from static ``rank_frac`` to the paper's
+    explained-variance ``epsilon`` (Alg. 1 t=0 truncated-SVD rank; max over
+    any leading stack dims)."""
+    treated = role_treated(wasi, role)
+    if treated and wasi.factored:
+        mode: Mode = "factored"
+    elif treated and wasi.project:
+        mode = "project"
+    else:
+        mode = "dense"
+    rank = 0
+    if mode != "dense":
+        if weight is not None:
+            rank = _epsilon_rank(weight, wasi)
+        else:
+            rank = static_rank(in_dim, out_dim, wasi.rank_frac,
+                               align=wasi.rank_align, min_rank=wasi.min_rank)
+    asi_ranks = None
+    if treated and wasi.compress_acts and act_shape is not None:
+        asi_ranks = _act_mode_ranks(tuple(act_shape), wasi)
+    kernel: Kernel = "fused_lowrank" if mode == "factored" else "einsum"
+    fits = None
+    if mode != "dense":
+        from repro.kernels.ops import _bwd_fits_vmem
+        fits = _bwd_fits_vmem(128, out_dim, in_dim, rank)
+    return LinearSpec(name=name, role=role, in_dim=in_dim, out_dim=out_dim,
+                      mode=mode, rank=rank, bias=bias, asi_ranks=asi_ranks,
+                      kernel=kernel, bwd_fits_vmem=fits)
+
+
+def _act_mode_ranks(act_shape: tuple[int, ...],
+                    wasi: WasiConfig) -> tuple[int, ...]:
+    """ASI Tucker mode-ranks for an input activation of ``act_shape``
+    ((B, N, I) or (B, H, W, I))."""
+    a = wasi.asi
+    if len(act_shape) == 3:
+        fracs = (a.batch_frac, a.token_frac, a.feature_frac)
+    else:
+        fracs = (a.batch_frac,) + (a.token_frac,) * (len(act_shape) - 2) \
+            + (a.feature_frac,)
+    return asi_mode_ranks(act_shape, fracs, skip_batch=a.skip_batch,
+                          align=a.align)
+
+
+def _epsilon_rank(weight, wasi: WasiConfig) -> int:
+    """pick_rank at wasi.epsilon; max over leading stack dims (scan/expert
+    banks must share one static rank)."""
+    import numpy as np
+
+    w = np.asarray(weight)
+    if w.ndim == 2:
+        return pick_rank(w, wasi.epsilon, align=wasi.rank_align)
+    flat = w.reshape((-1,) + w.shape[-2:])
+    return max(pick_rank(flat[j], wasi.epsilon, align=wasi.rank_align)
+               for j in range(flat.shape[0]))
+
+
+@dataclass(frozen=True)
+class SubspacePlan:
+    """The resolved-once subspace decision for a whole model: one
+    :class:`LinearSpec` per linear site, plus the configs they were resolved
+    from. Hashable and JSON-serializable — it rides inside checkpoint
+    manifests (api.convert) so a checkpoint is self-describing."""
+
+    model: ModelConfig
+    specs: tuple[LinearSpec, ...] = ()
+    batch: int | None = None   # activation-shape hint used for asi_ranks
+    seq: int | None = None
+    calibrated: bool = False   # ranks from epsilon on real weights?
+
+    @property
+    def wasi(self) -> WasiConfig:
+        return self.model.wasi
+
+    @functools.cached_property
+    def _by_name(self) -> dict[str, LinearSpec]:
+        return {s.name: s for s in self.specs}
+
+    def spec(self, name: str) -> LinearSpec:
+        return self._by_name[name]
+
+    def linear(self, name: str, in_dim: int | None = None,
+               out_dim: int | None = None, *, role: str | None = None,
+               bias: bool = False) -> LinearSpec:
+        """Spec lookup for a call site. Unknown names or dim overrides (a
+        layer instantiated at non-config dims) fall back to resolving a
+        fresh site under the SAME policy — still one resolver, never ad hoc
+        dict sniffing."""
+        s = self._by_name.get(name)
+        if s is not None and (in_dim is None or s.in_dim == in_dim) \
+                and (out_dim is None or s.out_dim == out_dim):
+            return s
+        if in_dim is None or out_dim is None:
+            raise KeyError(f"unknown linear site {name!r} and no dims given")
+        r = role or (s.role if s is not None
+                     else LEAF_TO_SPEC.get(name.split("/")[-1],
+                                           (name, name.split("/")[0]))[1])
+        return resolve_linear_spec(
+            self.wasi, name, r, in_dim, out_dim, bias=bias,
+            act_shape=(self.batch, self.seq, in_dim)
+            if self.batch and self.seq else None)
+
+    def by_role(self, role: str) -> tuple[LinearSpec, ...]:
+        return tuple(s for s in self.specs if s.role == role)
+
+    def summary(self) -> str:
+        """Human-readable one-line-per-site table."""
+        lines = [f"SubspacePlan[{self.model.name}] method={self.wasi.method} "
+                 f"update={self.wasi.update_mode} scope={self.wasi.scope}"
+                 + (" (eps-calibrated)" if self.calibrated else "")]
+        for s in self.specs:
+            extra = f" rank={s.rank}" if s.mode != "dense" else ""
+            if s.asi_ranks is not None:
+                extra += f" asi={list(s.asi_ranks)}"
+            if s.bwd_fits_vmem is not None:
+                extra += f" bwd={'fused' if s.bwd_fits_vmem else 'xla'}"
+            lines.append(f"  {s.name:16s} {s.role:9s} "
+                         f"({s.in_dim}->{s.out_dim}) {s.mode:8s}"
+                         f" {s.kernel}{extra}")
+        return "\n".join(lines)
+
+    # -- serialization ------------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {"version": 1,
+                "model": model_config_to_json(self.model),
+                "specs": [s.to_json() for s in self.specs],
+                "batch": self.batch, "seq": self.seq,
+                "calibrated": self.calibrated}
+
+    @staticmethod
+    def from_json(d: Mapping[str, Any]) -> "SubspacePlan":
+        return SubspacePlan(
+            model=model_config_from_json(d["model"]),
+            specs=tuple(LinearSpec.from_json(s) for s in d["specs"]),
+            batch=d.get("batch"), seq=d.get("seq"),
+            calibrated=bool(d.get("calibrated", False)))
+
+    def dumps(self) -> str:
+        return json.dumps(self.to_json(), sort_keys=True)
+
+    @staticmethod
+    def loads(s: str) -> "SubspacePlan":
+        return SubspacePlan.from_json(json.loads(s))
+
+
+# ---------------------------------------------------------------------------
+# Config (de)serialization — makes plan-bearing checkpoints self-describing.
+# ---------------------------------------------------------------------------
+
+def model_config_to_json(cfg: ModelConfig) -> dict:
+    return dataclasses.asdict(cfg)
+
+
+def model_config_from_json(d: Mapping[str, Any]) -> ModelConfig:
+    d = dict(d)
+    d["groups"] = tuple(LayerGroup(pattern=tuple(g["pattern"]),
+                                   repeat=int(g["repeat"]))
+                        for g in d.get("groups", ()))
+    d["moe"] = MoeConfig(**d.get("moe", {}))
+    d["ssm"] = SsmConfig(**d.get("ssm", {}))
+    w = dict(d.get("wasi", {}))
+    w["asi"] = AsiConfig(**w.get("asi", {}))
+    d["wasi"] = WasiConfig(**w)
+    return ModelConfig(**d)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model resolution
+# ---------------------------------------------------------------------------
+
+def _block_kinds(cfg: ModelConfig) -> set[str]:
+    return {k for g in cfg.groups for k in g.pattern}
+
+
+def _site_dims(cfg: ModelConfig) -> list[tuple[str, str, int, int, bool, int]]:
+    """Enumerate (name, role, in_dim, out_dim, bias, act_in_dim) linear
+    sites for a config, by family + block kinds. act_in_dim is the feature
+    dim of the site's input activation (== in_dim for every current site)."""
+    d, f = cfg.d_model, cfg.d_ff
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    sites: list[tuple[str, str, int, int, bool, int]] = []
+    kinds = _block_kinds(cfg)
+    has_attn = cfg.family in ("vit", "encdec") or bool(
+        kinds & {"dense", "local", "moe", "moe_swa", "mamba2_attn", "enc", "dec"})
+    has_mlp = cfg.family in ("vit", "encdec") or bool(
+        kinds & {"dense", "local", "mamba2_attn", "enc", "dec"})
+    if has_attn:
+        sites += [("attn/wq", "attn", d, h * dh, cfg.qkv_bias, d),
+                  ("attn/wk", "attn", d, kvh * dh, cfg.qkv_bias, d),
+                  ("attn/wv", "attn", d, kvh * dh, cfg.qkv_bias, d),
+                  ("attn/wo", "attn", h * dh, d, False, h * dh)]
+    if has_mlp:
+        if cfg.mlp_act == "swiglu":
+            sites.append(("mlp/gate", "mlp", d, f, False, d))
+        sites += [("mlp/up", "mlp", d, f, False, d),
+                  ("mlp/down", "mlp", f, d, False, f)]
+    ssm = cfg.ssm
+    di = ssm.expand * d
+    if "mamba1" in kinds:
+        n = ssm.d_state
+        dtr = ssm.dt_rank or max(d // 16, 1)
+        sites += [("ssm/in_proj", "ssm", d, 2 * di, False, d),
+                  ("ssm/x_proj", "ssm", di, dtr + 2 * n, False, di),
+                  ("ssm/dt_proj", "ssm", dtr, di, True, dtr),
+                  ("ssm/out_proj", "ssm", di, d, False, di)]
+    if kinds & {"mamba2", "mamba2_attn"}:
+        n = ssm.d_state
+        nh = di // ssm.head_dim
+        sites += [("ssm/in_proj", "ssm", d, 2 * di, False, d),
+                  ("ssm/bcdt_proj", "ssm_small", d, 2 * n + nh, False, d),
+                  ("ssm/out_proj", "ssm", di, d, False, di)]
+    if kinds & {"moe", "moe_swa"}:
+        fe = cfg.moe.expert_d_ff or f
+        sites += [("moe/w_gate", "moe", d, fe, False, d),
+                  ("moe/w_up", "moe", d, fe, False, d),
+                  ("moe/w_down", "moe", fe, d, False, fe)]
+    # dedupe (mamba1 + mamba2 hybrids share in_proj/out_proj dims)
+    seen, out = set(), []
+    for s in sites:
+        if s[0] not in seen:
+            seen.add(s[0])
+            out.append(s)
+    return out
+
+
+def collect_linear_weights(tree) -> dict[str, list]:
+    """Walk a (possibly stacked) DENSE param tree collecting each site's
+    weight leaves, keyed by spec name. Used for eps-rank calibration."""
+    from repro.api.bind import dense_weight  # lazy: bind imports plan
+
+    found: dict[str, list] = {}
+
+    def walk(node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                w = dense_weight(v) if k in LEAF_TO_SPEC else None
+                if w is not None:
+                    found.setdefault(LEAF_TO_SPEC[k][0], []).append(w)
+                else:
+                    walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(tree)
+    return found
+
+
+def resolve(cfg: ModelConfig, *, batch: int | None = None,
+            seq: int | None = None, calibration=None) -> SubspacePlan:
+    """Resolve the plan for ``cfg`` ONCE.
+
+    ``batch``/``seq`` give the training activation-shape hint so specs carry
+    concrete ASI mode-ranks (telemetry + serialization; bind recomputes for
+    other shapes). ``calibration`` is a dense param tree (or a
+    {site-name: weight} mapping): when given, factored/project ranks come
+    from the paper's explained-variance threshold on the actual weights
+    instead of the static ``rank_frac`` policy.
+    """
+    weights: Mapping[str, Any] = {}
+    if calibration is not None:
+        # {site-name: weight array} mapping vs a whole dense param tree
+        if isinstance(calibration, Mapping) and calibration and all(
+                hasattr(v, "shape") for v in calibration.values()):
+            weights = {k: [v] for k, v in calibration.items()}
+        else:
+            weights = collect_linear_weights(calibration)
+    specs = []
+    for name, role, i_dim, o_dim, bias, act_in in _site_dims(cfg):
+        w = None
+        if name in weights:
+            import numpy as np
+
+            ws = weights[name]
+            # stack-aware: _epsilon_rank maxes over all leading dims, so
+            # concatenate the flattened stacks
+            flat = [np.asarray(x).reshape((-1, o_dim, i_dim)) for x in ws
+                    if np.asarray(x).shape[-2:] == (o_dim, i_dim)]
+            if flat:
+                w = np.concatenate(flat, axis=0)
+        act = (batch, seq, act_in) if batch and seq else None
+        specs.append(resolve_linear_spec(cfg.wasi, name, role, i_dim, o_dim,
+                                         bias=bias, act_shape=act, weight=w))
+    return SubspacePlan(model=cfg, specs=tuple(specs), batch=batch, seq=seq,
+                        calibrated=calibration is not None)
+
+
+# ---------------------------------------------------------------------------
+# Per-config memoized lookup + explicit install
+# ---------------------------------------------------------------------------
+
+_INSTALLED: dict[ModelConfig, SubspacePlan] = {}
+
+
+@functools.lru_cache(maxsize=64)
+def _resolve_static(cfg: ModelConfig) -> SubspacePlan:
+    return resolve(cfg)
+
+
+def plan_of(cfg: ModelConfig) -> SubspacePlan:
+    """The plan every internal consumer reads: the installed plan for this
+    config if one was explicitly resolved (calibrated ranks, shape hints),
+    else the memoized static resolution. Resolution happens once per
+    config either way."""
+    p = _INSTALLED.get(cfg)
+    return p if p is not None else _resolve_static(cfg)
+
+
+def install(plan: SubspacePlan) -> SubspacePlan:
+    """Make ``plan`` the one ``plan_of(plan.model)`` returns. Use after an
+    explicit ``resolve(...)`` with calibration or shape hints."""
+    _INSTALLED[plan.model] = plan
+    return plan
+
+
+def installed(cfg: ModelConfig) -> SubspacePlan | None:
+    """The explicitly-installed plan for ``cfg``, if any (no fallback)."""
+    return _INSTALLED.get(cfg)
+
+
+def uninstall(cfg: ModelConfig) -> None:
+    _INSTALLED.pop(cfg, None)

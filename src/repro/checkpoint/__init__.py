@@ -1,6 +1,9 @@
 from repro.checkpoint.ckpt import (
     CheckpointManager,
     latest_step,
+    load_manifest,
     restore_checkpoint,
+    restore_untyped,
     save_checkpoint,
+    sweep_stale_tmp,
 )

@@ -2,11 +2,14 @@
 
 Layout:  <dir>/step_<N>/
              manifest.json        pytree structure + leaf metadata
+                                  (+ optional SubspacePlan + label)
              proc<P>_leaf<i>.npy  one file per leaf per process
 
 Fault-tolerance contract (DESIGN.md §4):
-* atomic publish: written into ``step_<N>.tmp`` then os.rename — a crash
-  mid-save never corrupts the latest checkpoint;
+* atomic publish: written into ``step_<N>.tmp<P>`` then os.rename — a crash
+  mid-save never corrupts the latest checkpoint; stale ``.tmp`` dirs left
+  by a crash are ignored by ``latest_step`` and swept on
+  ``CheckpointManager`` startup;
 * restart: ``latest_step`` + ``restore_checkpoint(template)`` rebuild the
   exact train state; the data pipeline is a pure function of step, so no
   reader state is persisted;
@@ -15,12 +18,17 @@ Fault-tolerance contract (DESIGN.md §4):
   training continues during the (slow) filesystem phase;
 * multi-host: each process writes only its addressable shards; restore
   reassembles global arrays from per-process files (single-process runs
-  degenerate to one file per leaf).
+  degenerate to one file per leaf);
+* self-describing: ``save_checkpoint(..., plan=...)`` serializes the
+  resolved SubspacePlan (api/plan.py) into the manifest, and the manifest
+  stores a structural tree spec, so ``restore_untyped`` + the plan rebuild
+  the params with NO template or config in hand (api/convert.py).
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 from typing import Any
@@ -28,15 +36,69 @@ from typing import Any
 import jax
 import numpy as np
 
+_STEP_RE = re.compile(r"^step_(\d+)$")
+_TMP_RE = re.compile(r"^step_(\d+)\.tmp\d*$")
+
 
 def _leaf_paths(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
 
 
+def _tree_spec(tree, counter) -> dict | None:
+    """JSON-able structural spec mirroring jax.tree_util flatten order
+    (dicts by sorted key, sequences in order, NamedTuples by field, None as
+    an empty subtree). Returns None for node types it can't describe —
+    the manifest then simply omits the spec and template-free restore is
+    unavailable for that checkpoint."""
+    if tree is None:
+        return {"kind": "none"}
+    if isinstance(tree, dict):
+        keys = sorted(tree)
+        children = [_tree_spec(tree[k], counter) for k in keys]
+        if any(c is None for c in children):
+            return None
+        return {"kind": "dict", "keys": keys, "children": children}
+    if isinstance(tree, tuple) and hasattr(tree, "_fields"):
+        children = [_tree_spec(v, counter) for v in tree]
+        if any(c is None for c in children):
+            return None
+        return {"kind": "tuple", "children": children}
+    if isinstance(tree, (list, tuple)):
+        children = [_tree_spec(v, counter) for v in tree]
+        if any(c is None for c in children):
+            return None
+        return {"kind": "list" if isinstance(tree, list) else "tuple",
+                "children": children}
+    if hasattr(tree, "shape") or np.isscalar(tree):
+        i = counter[0]
+        counter[0] += 1
+        return {"kind": "leaf", "index": i}
+    return None
+
+
+def _build_from_spec(spec: dict, leaves: list):
+    kind = spec["kind"]
+    if kind == "none":
+        return None
+    if kind == "dict":
+        return {k: _build_from_spec(c, leaves)
+                for k, c in zip(spec["keys"], spec["children"])}
+    if kind == "list":
+        return [_build_from_spec(c, leaves) for c in spec["children"]]
+    if kind == "tuple":
+        return tuple(_build_from_spec(c, leaves) for c in spec["children"])
+    return leaves[spec["index"]]
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree, *,
-                    process_index: int = 0) -> str:
-    """Synchronous sharded save. Returns the final directory path."""
+                    process_index: int = 0, plan=None,
+                    label: str | None = None) -> str:
+    """Synchronous sharded save. Returns the final directory path.
+
+    ``plan`` (a SubspacePlan, or anything with ``to_json()``) and ``label``
+    (e.g. "train_state" vs "params") ride in the manifest so the checkpoint
+    is loadable without a matching config in hand (api/convert.py)."""
     final = os.path.join(ckpt_dir, f"step_{step}")
     tmp = final + f".tmp{process_index}"
     os.makedirs(tmp, exist_ok=True)
@@ -46,27 +108,75 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, *,
         arr = np.asarray(jax.device_get(leaf))
         np.save(os.path.join(tmp, f"proc{process_index}_leaf{i}.npy"), arr)
         meta.append({"index": i, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    counter = [0]
+    spec = _tree_spec(tree, counter)
+    if spec is not None and counter[0] != len(leaves):
+        spec = None  # structural walk disagrees with jax flatten; drop it
+    manifest: dict[str, Any] = {
+        "step": step, "n_leaves": len(leaves), "leaves": meta,
+        "treedef": str(treedef), "tree": spec}
+    if label is not None:
+        manifest["label"] = label
+    if plan is not None:
+        manifest["plan"] = plan.to_json() if hasattr(plan, "to_json") else plan
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump({"step": step, "n_leaves": len(leaves), "leaves": meta,
-                   "treedef": str(treedef)}, f)
+        json.dump(manifest, f)
     if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+        # the step is already published (another process's shards, or a
+        # re-save after restart): MERGE our files in rather than clobbering
+        # the directory — an rmtree here would silently destroy the other
+        # processes' proc<P>_leaf files
+        for name in os.listdir(tmp):
+            os.replace(os.path.join(tmp, name), os.path.join(final, name))
+        shutil.rmtree(tmp, ignore_errors=True)
+    else:
+        os.rename(tmp, final)
     return final
+
+
+def _published_steps(ckpt_dir: str) -> list[int]:
+    """Steps with a PUBLISHED (renamed, manifest-bearing) directory. A
+    ``step_<N>.tmp<P>`` left by a crash is never counted — even if the
+    crash happened after its manifest was written."""
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
 
 
 def latest_step(ckpt_dir: str) -> int | None:
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = []
+    steps = _published_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def sweep_stale_tmp(ckpt_dir: str, process_index: int | None = None) -> list[str]:
+    """Remove ``step_<N>.tmp<P>`` dirs left by a crash mid-save. Returns
+    the removed paths.
+
+    ``process_index`` restricts the sweep to that process's own tmp dirs —
+    what ``CheckpointManager`` startup uses, since a process cannot have a
+    live writer at its own startup but a multi-host peer might be mid-save.
+    ``None`` sweeps every tmp dir (offline janitor use, when no writer of
+    any process can be live)."""
+    removed = []
+    if not os.path.isdir(ckpt_dir):
+        return removed
+    suffix = None if process_index is None else f".tmp{process_index}"
     for name in os.listdir(ckpt_dir):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            try:
-                if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
-                    steps.append(int(name.split("_")[1].split(".")[0]))
-            except ValueError:
-                continue
-    return max(steps) if steps else None
+        if _TMP_RE.match(name) and (suffix is None or name.endswith(suffix)):
+            path = os.path.join(ckpt_dir, name)
+            shutil.rmtree(path, ignore_errors=True)
+            removed.append(path)
+    return removed
+
+
+def load_manifest(ckpt_dir: str, step: int) -> dict:
+    with open(os.path.join(ckpt_dir, f"step_{step}", "manifest.json")) as f:
+        return json.load(f)
 
 
 def restore_checkpoint(ckpt_dir: str, step: int, template, *,
@@ -84,15 +194,38 @@ def restore_checkpoint(ckpt_dir: str, step: int, template, *,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-class CheckpointManager:
-    """Async save + retention policy + restart."""
+def restore_untyped(ckpt_dir: str, step: int, *, process_index: int = 0):
+    """Template-free restore from the manifest's structural tree spec:
+    nested dicts/lists/tuples of numpy arrays (NamedTuple classes degrade
+    to plain tuples). Raises if the checkpoint predates tree specs."""
+    m = load_manifest(ckpt_dir, step)
+    spec = m.get("tree")
+    if spec is None:
+        raise ValueError(
+            f"checkpoint {ckpt_dir}/step_{step} has no structural tree spec; "
+            "restore with restore_checkpoint(template) instead")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    leaves = [np.load(os.path.join(d, f"proc{process_index}_leaf{i}.npy"))
+              for i in range(m["n_leaves"])]
+    return _build_from_spec(spec, leaves)
 
-    def __init__(self, ckpt_dir: str, keep: int = 3, process_index: int = 0):
+
+class CheckpointManager:
+    """Async save + retention policy + restart + crash hygiene."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3, process_index: int = 0,
+                 plan=None, label: str | None = None):
         self.dir = ckpt_dir
         self.keep = keep
         self.process_index = process_index
+        self.plan = plan
+        self.label = label
         self._thread: threading.Thread | None = None
         os.makedirs(ckpt_dir, exist_ok=True)
+        # crash hygiene: a previous run died mid-save -> OUR process's tmp
+        # dirs are garbage (never published) and would otherwise accumulate
+        # forever; peers' tmp dirs are left alone (they may be mid-save)
+        sweep_stale_tmp(ckpt_dir, process_index)
 
     def wait(self):
         if self._thread is not None:
@@ -106,7 +239,8 @@ class CheckpointManager:
 
         def _write():
             save_checkpoint(self.dir, step, host_tree,
-                            process_index=self.process_index)
+                            process_index=self.process_index,
+                            plan=self.plan, label=self.label)
             self._gc()
 
         self._thread = threading.Thread(target=_write, daemon=True)
@@ -114,7 +248,9 @@ class CheckpointManager:
 
     def save(self, step: int, tree):
         self.wait()
-        save_checkpoint(self.dir, step, tree, process_index=self.process_index)
+        save_checkpoint(self.dir, step, tree,
+                        process_index=self.process_index,
+                        plan=self.plan, label=self.label)
         self._gc()
 
     def restore_latest(self, template):
@@ -126,9 +262,6 @@ class CheckpointManager:
                                         process_index=self.process_index)
 
     def _gc(self):
-        steps = sorted(
-            int(n.split("_")[1]) for n in os.listdir(self.dir)
-            if n.startswith("step_") and not n.endswith(".tmp")
-            and os.path.exists(os.path.join(self.dir, n, "manifest.json")))
+        steps = _published_steps(self.dir)
         for s in steps[:-self.keep] if self.keep > 0 else []:
             shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)

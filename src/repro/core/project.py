@@ -23,7 +23,6 @@ from repro.config import ModelConfig
 from repro.core.rank_policy import static_rank
 from repro.core.svd import pick_rank
 from repro.core.wsi import WSIState, wsi_init, wsi_step
-from repro.nn.linear import wasi_applies
 
 _ROLE_PATTERNS = (
     (r".*(embed|lm_head|head|router|patch|pos|cls)(/|$)", "head"),
@@ -59,17 +58,22 @@ def _wasi_weight_paths(params, cfg: ModelConfig) -> list[str]:
             continue
         if getattr(leaf, "ndim", 0) < 2:
             continue
-        if wasi_applies(cfg.wasi, role):
+        from repro.api.plan import role_treated
+        if role_treated(cfg.wasi, role):
             out.append(ps)
     return out
 
 
 def _batched(fn, w, *rest):
-    """Apply fn over leading stack dims of w (..., O, I)."""
+    """Apply fn over leading stack dims of w (..., O, I). ``rest`` pytrees
+    (e.g. a WSIState of (..., O, K)/(..., K, I) factors) have their leaves
+    flattened the same way — expert banks inside scanned groups carry TWO
+    leading dims (repeat, E), which a bare ``.reshape`` on the state object
+    could not handle."""
     if w.ndim == 2:
         return fn(w, *rest)
     flat = w.reshape((-1,) + w.shape[-2:])
-    rest_flat = [r.reshape((-1,) + r.shape[-2:]) if hasattr(r, "reshape") else r
+    rest_flat = [jax.tree.map(lambda x: x.reshape((-1,) + x.shape[-2:]), r)
                  for r in rest]
     out = jax.vmap(fn)(flat, *rest_flat)
     return jax.tree.map(
@@ -77,14 +81,23 @@ def _batched(fn, w, *rest):
 
 
 def init_project_states(params, cfg: ModelConfig,
-                        use_epsilon: bool = False) -> dict[str, WSIState]:
+                        use_epsilon: bool = False,
+                        warm: dict[str, WSIState] | None = None
+                        ) -> dict[str, WSIState]:
     """WSIState per wasi-scoped dense weight, keyed by path. Rank from
     rank_frac (static) or, if ``use_epsilon``, from explained variance on
-    the actual weights (paper Alg. 1 t=0; max over stacked layers)."""
+    the actual weights (paper Alg. 1 t=0; max over stacked layers).
+
+    ``warm`` carries factors extracted from a converted checkpoint
+    (api.bind.extract_project_factors) — those paths skip the SVD init and
+    resume the checkpoint's subspace instead."""
     states: dict[str, WSIState] = {}
     flat = dict((_path_str(p), l) for p, l in
                 jax.tree_util.tree_flatten_with_path(params)[0])
     for ps in _wasi_weight_paths(params, cfg):
+        if warm and ps in warm:
+            states[ps] = warm[ps]
+            continue
         w = flat[ps]
         o, i = w.shape[-2], w.shape[-1]
         if use_epsilon:
@@ -103,32 +116,12 @@ def init_project_states(params, cfg: ModelConfig,
 
 
 def project_forward_params(params, states: dict[str, WSIState]):
-    """Insert (L, R) next to each dense W so apply_linear takes the
-    factored-forward/dense-gradient path (wasi_matmul_project)."""
-    def visit(path, leaf):
-        return leaf
+    """Insert (L, R) next to each dense W so the bound apply takes the
+    factored-forward/dense-gradient path (wasi_matmul_project). The
+    structure walk itself lives in api.bind (the key-dispatch monopoly)."""
+    from repro.api.bind import inject_factors
 
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    # operate on the nested dict level: easier via unflatten-then-patch
-    params = jax.tree_util.tree_unflatten(treedef, [l for _, l in flat])
-
-    def patch(node, prefix=""):
-        if isinstance(node, dict):
-            if "w" in node and prefix + "/w" in states:
-                st = states[prefix + "/w"]
-                node = dict(node)
-                node["L"] = jax.lax.stop_gradient(st.L)
-                node["R"] = jax.lax.stop_gradient(st.R)
-                return node
-            return {k: patch(v, f"{prefix}/{k}" if prefix else k)
-                    for k, v in node.items()}
-        if isinstance(node, (list, tuple)):
-            t = [patch(v, f"{prefix}/{i}" if prefix else str(i))
-                 for i, v in enumerate(node)]
-            return type(node)(t) if not isinstance(node, tuple) else tuple(t)
-        return node
-
-    return patch(params)
+    return inject_factors(params, states)
 
 
 def update_project_states(params, states: dict[str, WSIState]) -> dict:

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.configs as configs
+from repro import api
 from repro.models.lm import init_lm, init_lm_cache, lm_decode_step, lm_prefill
 from repro.serve import ServeEngine
 
@@ -68,16 +69,28 @@ def main():
                          "requests exercises queueing + slot recycling")
     ap.add_argument("--wasi", default=None)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ckpt", default="",
+                    help="serve from a plan-bearing checkpoint dir (the "
+                         "manifest's SubspacePlan replaces --arch/--wasi)")
     args = ap.parse_args()
 
-    cfg = configs.get(args.arch) if args.full else configs.get_smoke(args.arch)
-    if args.wasi is not None:
-        cfg = cfg.replace(wasi=dataclasses.replace(cfg.wasi, method=args.wasi))
     key = jax.random.PRNGKey(0)
-    params = init_lm(key, cfg, jnp.dtype(cfg.dtype))
     slots = args.max_slots or min(args.batch, 4)
-    engine = ServeEngine(params, cfg, max_slots=slots,
-                         max_cache=args.prompt_len + args.tokens + 1)
+    max_cache = args.prompt_len + args.tokens + 1
+    if args.ckpt:
+        engine = ServeEngine.from_checkpoint(args.ckpt, max_slots=slots,
+                                             max_cache=max_cache)
+        cfg = engine.cfg
+    else:
+        cfg = configs.get(args.arch) if args.full \
+            else configs.get_smoke(args.arch)
+        if args.wasi is not None:
+            cfg = cfg.replace(
+                wasi=dataclasses.replace(cfg.wasi, method=args.wasi))
+        plan = api.install(api.resolve(cfg))
+        params = init_lm(key, cfg, jnp.dtype(cfg.dtype))
+        engine = ServeEngine(params, plan=plan, max_slots=slots,
+                             max_cache=max_cache)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
     t0 = time.time()

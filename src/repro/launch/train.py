@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.configs as configs
+from repro import api
 from repro.checkpoint import CheckpointManager
 from repro.config import TrainConfig
 from repro.data.synthetic import SyntheticAudio, SyntheticLM
@@ -30,6 +31,9 @@ def build(arch: str, *, smoke: bool, batch: int, seq: int, wasi: str | None,
     cfg = configs.get_smoke(arch) if smoke else configs.get(arch)
     if wasi is not None:
         cfg = cfg.replace(wasi=dataclasses.replace(cfg.wasi, method=wasi))
+    # resolve the subspace plan ONCE (with the training activation-shape
+    # hint) and install it — every linear below reads this plan
+    plan = api.install(api.resolve(cfg, batch=batch, seq=seq))
     key = jax.random.PRNGKey(tcfg.seed)
     dtype = jnp.dtype(cfg.dtype)
     if cfg.family == "encdec":
@@ -51,7 +55,7 @@ def build(arch: str, *, smoke: bool, batch: int, seq: int, wasi: str | None,
                            global_batch=batch, seed=tcfg.seed)
     state = make_train_state(key, params, cfg, tcfg, asi_states=asi)
     step = make_train_step(loss_fn, cfg, tcfg)
-    return cfg, state, step, data
+    return cfg, plan, state, step, data
 
 
 def main():
@@ -69,17 +73,31 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--memprof", action="store_true",
                     help="log measured memory columns (utils/memprof.py)")
+    ap.add_argument("--print-plan", action="store_true",
+                    help="print the resolved SubspacePlan and exit")
     args = ap.parse_args()
 
     tcfg = TrainConfig(optimizer=args.optimizer, lr=args.lr, steps=args.steps,
                        checkpoint_every=args.ckpt_every,
                        checkpoint_dir=args.ckpt_dir or "/tmp/repro_ckpt")
-    cfg, state, step, data = build(args.arch, smoke=not args.full,
-                                   batch=args.batch, seq=args.seq,
-                                   wasi=args.wasi, tcfg=tcfg)
+    if args.print_plan:
+        # plan resolution is pure config math — skip model/optimizer init
+        cfg = configs.get_smoke(args.arch) if not args.full \
+            else configs.get(args.arch)
+        if args.wasi is not None:
+            cfg = cfg.replace(
+                wasi=dataclasses.replace(cfg.wasi, method=args.wasi))
+        print(api.resolve(cfg, batch=args.batch, seq=args.seq).summary())
+        return
+    cfg, plan, state, step, data = build(args.arch, smoke=not args.full,
+                                         batch=args.batch, seq=args.seq,
+                                         wasi=args.wasi, tcfg=tcfg)
     print(f"[train] arch={cfg.name} wasi={cfg.wasi.method} "
           f"params={sum(x.size for x in jax.tree.leaves(state.params)):,}")
-    ckpt = CheckpointManager(tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints) \
+    # plan-bearing checkpoints: the manifest carries the resolved plan, so
+    # the checkpoint restores for serving / dense export with no config
+    ckpt = CheckpointManager(tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints,
+                             plan=plan, label="train_state") \
         if args.ckpt_dir else None
     state, hist = train_loop(state, step, lambda s: data.batch(s), tcfg,
                              ckpt=ckpt, memprof=args.memprof)

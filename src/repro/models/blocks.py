@@ -10,6 +10,11 @@ zamba2's shared attention block (kind "mamba2_attn") closes over shared
 params passed via ``shared`` — the weights are NOT stacked per layer (one
 copy for the whole net, per the architecture), but each occurrence keeps its
 own KV cache.
+
+Every projection inside a block binds through the SubspacePlan
+(``api.plan_of(cfg)`` in the nn layers): which subspace a linear lives in
+(dense / factored / project, rank, kernel route) is resolved ONCE per
+config — blocks never inspect param layouts (docs/api.md).
 """
 from __future__ import annotations
 

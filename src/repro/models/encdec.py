@@ -29,7 +29,12 @@ from repro.nn.norms import apply_norm, init_norm
 from repro.nn.rotary import sinusoidal_embedding
 
 
-def init_encdec(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+def init_encdec(key, cfg: ModelConfig, dtype=jnp.float32, *, plan=None) -> dict:
+    """``plan``: optional explicitly-resolved SubspacePlan (calibrated
+    ranks); installed so every linear init below reads it."""
+    if plan is not None:
+        from repro.api import install
+        install(plan)
     d, v = cfg.d_model, cfg.padded_vocab
     ks = jax.random.split(key, 6)
 

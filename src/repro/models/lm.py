@@ -41,7 +41,14 @@ def _needs_shared(cfg: ModelConfig) -> bool:
     return any("mamba2_attn" in g.pattern for g in cfg.groups)
 
 
-def init_lm(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+def init_lm(key, cfg: ModelConfig, dtype=jnp.float32, *, plan=None) -> dict:
+    """Init params in the layouts the SubspacePlan dictates. ``plan`` (an
+    explicitly resolved SubspacePlan, e.g. with calibrated eps-ranks) is
+    installed so every linear below reads it; default is the memoized
+    static resolution for ``cfg`` (api.plan_of)."""
+    if plan is not None:
+        from repro.api import install
+        install(plan)
     keys = jax.random.split(key, len(cfg.groups) + 4)
     d, v = cfg.d_model, cfg.padded_vocab
     params: dict[str, Any] = {

@@ -19,7 +19,12 @@ from repro.nn.attention import init_attention_state
 
 
 def init_vit(key, cfg: ModelConfig, n_classes: int, patch_dim: int = 768,
-             n_patches: int = 196, dtype=jnp.float32) -> dict:
+             n_patches: int = 196, dtype=jnp.float32, *, plan=None) -> dict:
+    """``plan``: optional explicitly-resolved SubspacePlan (calibrated
+    ranks); installed so every linear init below reads it."""
+    if plan is not None:
+        from repro.api import install
+        install(plan)
     d = cfg.d_model
     ks = jax.random.split(key, 5)
 

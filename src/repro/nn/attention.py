@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.distributed.sharding import MeshPolicy, shard
-from repro.nn.linear import apply_linear, asi_spec, init_linear
+from repro.api import bind, plan_of, role_treated
 from repro.nn.rotary import apply_rope
 
 NEG_INF = -1e30
@@ -43,13 +43,14 @@ class KVCache(NamedTuple):
 def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
     d, h, kvh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     kq, kk, kv, ko = jax.random.split(key, 4)
-    w = cfg.wasi
+    plan = plan_of(cfg)
+    qb = cfg.qkv_bias
     return {
-        "wq": init_linear(kq, d, h * dh, w, role="attn", bias=cfg.qkv_bias, dtype=dtype),
-        "wk": init_linear(kk, d, kvh * dh, w, role="attn", bias=cfg.qkv_bias, dtype=dtype),
-        "wv": init_linear(kv, d, kvh * dh, w, role="attn", bias=cfg.qkv_bias, dtype=dtype),
-        "wo": init_linear(ko, h * dh, d, w, role="attn", dtype=dtype,
-                          scale=(h * dh) ** -0.5 / max(cfg.total_pattern_layers, 1) ** 0.5),
+        "wq": bind.init_params(kq, plan.linear("attn/wq", d, h * dh), dtype=dtype, bias=qb),
+        "wk": bind.init_params(kk, plan.linear("attn/wk", d, kvh * dh), dtype=dtype, bias=qb),
+        "wv": bind.init_params(kv, plan.linear("attn/wv", d, kvh * dh), dtype=dtype, bias=qb),
+        "wo": bind.init_params(ko, plan.linear("attn/wo", h * dh, d), dtype=dtype,
+                               scale=(h * dh) ** -0.5 / max(cfg.total_pattern_layers, 1) ** 0.5),
     }
 
 
@@ -59,14 +60,13 @@ def init_attention_state(key, cfg: ModelConfig, batch: int, seq: int,
     d, h, dh = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
     ks = jax.random.split(key, 4)
     w = cfg.wasi
-    from repro.nn.linear import wasi_applies
-    if not (w.compress_acts and wasi_applies(w, "attn")):
+    if not (w.compress_acts and role_treated(w, "attn")):
         return {}
     return {
-        "wq": asi_spec(ks[0], (batch, seq, d), w, dtype),
-        "wk": asi_spec(ks[1], (batch, seq, d), w, dtype),
-        "wv": asi_spec(ks[2], (batch, seq, d), w, dtype),
-        "wo": asi_spec(ks[3], (batch, seq, h * dh), w, dtype),
+        "wq": bind.asi_state(ks[0], (batch, seq, d), w, dtype),
+        "wk": bind.asi_state(ks[1], (batch, seq, d), w, dtype),
+        "wv": bind.asi_state(ks[2], (batch, seq, d), w, dtype),
+        "wo": bind.asi_state(ks[3], (batch, seq, h * dh), w, dtype),
     }
 
 
@@ -341,8 +341,12 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
             return t
         return apply_rope(t, positions, cfg.rope_theta)
 
+    plan = plan_of(cfg)
+
     def proj(name, inp):
-        y, ns = apply_linear(p[name], inp, cfg.wasi, st.get(name))
+        spec = plan.linear(f"attn/{name}", inp.shape[-1],
+                           bind.linear_out_dim(p[name]))
+        y, ns = bind.apply(spec, p[name], inp, cfg.wasi, st.get(name))
         if ns is not None:
             new_st[name] = ns
         return y
@@ -393,8 +397,6 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
         o = decode_attention(q, new_cache, pos, window=window)
     o = o.reshape(b, sq, h * dh)
     o = shard(o, policy, "batch", "seq", "model")
-    out, ns = apply_linear(p["wo"], o, cfg.wasi, st.get("wo"))
-    if ns is not None:
-        new_st["wo"] = ns
+    out = proj("wo", o)
     out = shard(out, policy, "batch", "seq", None)
     return out, new_cache, new_st

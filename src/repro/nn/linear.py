@@ -1,151 +1,100 @@
-"""Linear layer that is dense, WASI-factored, or ASI-compressed by config.
+"""DEPRECATED shim over the SubspacePlan API (repro.api) — one release.
 
-Every projection in the framework goes through this module, so flipping
-``WasiConfig.method`` swaps the entire model between vanilla / WSI / ASI /
-WASI training with identical call sites. Params are plain dicts:
+Every entry point here now delegates to the plan/bind/convert redesign:
 
-    dense:    {"w": (O, I) [, "b": (O,)]}
-    factored: {"L": (O, K), "R": (K, I) [, "b": (O,)]}
+    init_linear / apply_linear  ->  api.bind.init_params / api.bind.apply
+                                    (typed LinearSpec dispatch, no dict
+                                    key sniffing at call sites)
+    init_linear_from_dense      ->  api.convert.factorize_linear
+                                    (now ALSO emits project-mode
+                                    {"w","L","R"} params)
+    asi_spec                    ->  api.bind.asi_state
+    wasi_applies / linear_rank  ->  api.plan.role_treated / LinearSpec.rank
 
-ASI warm-start state (when activation compression is on) lives in a parallel
-pytree threaded through apply; ``asi_spec`` builds it from activation shapes.
+The old signatures keep working for out-of-tree users this release; each
+process gets ONE DeprecationWarning on first use. In-tree code imports
+``repro.api`` directly. See docs/api.md for the migration table.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import AsiConfig, WasiConfig
-from repro.core.asi import ASIState, asi_init, asi_project, asi_step
-from repro.core.lowrank_linear import (
-    asi_matmul,
-    wasi_matmul,
-    wasi_matmul_project,
-)
-from repro.core.rank_policy import asi_mode_ranks, static_rank
+from repro.api import bind
+from repro.api.plan import resolve_linear_spec, role_treated
+from repro.config import AsiConfig, WasiConfig  # noqa: F401 (re-export compat)
+from repro.core.asi import ASIState
+
+_warned = False
+
+
+def _deprecated(replacement: str) -> None:
+    global _warned
+    if not _warned:
+        warnings.warn(
+            "repro.nn.linear is deprecated; use the SubspacePlan API "
+            f"({replacement} — see docs/api.md). This shim is kept for one "
+            "release.", DeprecationWarning, stacklevel=3)
+        _warned = True
 
 
 def linear_rank(in_dim: int, out_dim: int, cfg: WasiConfig) -> int:
+    _deprecated("repro.api.resolve_linear_spec(...).rank")
+    from repro.core.rank_policy import static_rank
     return static_rank(in_dim, out_dim, cfg.rank_frac,
                        align=cfg.rank_align, min_rank=cfg.min_rank)
 
 
 def wasi_applies(cfg: WasiConfig, role: str) -> bool:
     """Does WASI treat this linear? role in {mlp, attn, ssm, moe, head}."""
-    if cfg.method == "none" or cfg.scope == "none":
-        return False
-    if role == "head":
-        return False  # embeddings / lm_head stay dense (DESIGN.md §5)
-    if cfg.scope == "mlp":
-        return role in ("mlp", "moe")
-    return True  # scope == "all"
+    _deprecated("repro.api.role_treated")
+    return role_treated(cfg, role)
 
 
 def init_linear(key, in_dim: int, out_dim: int, cfg: WasiConfig, *,
                 role: str = "mlp", bias: bool = False, dtype=jnp.float32,
                 scale: float | None = None) -> dict:
-    std = scale if scale is not None else in_dim ** -0.5
-    factored = cfg.factored and wasi_applies(cfg, role)
-    kw, kb = jax.random.split(key)
-    p: dict = {}
-    if factored:
-        k = linear_rank(in_dim, out_dim, cfg)
-        kl, kr = jax.random.split(kw)
-        split = (std / k ** 0.5) ** 0.5
-        p["L"] = (jax.random.normal(kl, (out_dim, k), jnp.float32) * split).astype(dtype)
-        p["R"] = (jax.random.normal(kr, (k, in_dim), jnp.float32) * split).astype(dtype)
-    else:
-        p["w"] = (jax.random.normal(kw, (out_dim, in_dim), jnp.float32) * std).astype(dtype)
-    if bias:
-        p["b"] = jnp.zeros((out_dim,), dtype)
-    return p
+    _deprecated("repro.api.bind.init_params")
+    spec = resolve_linear_spec(cfg, f"{role}/adhoc", role, in_dim, out_dim,
+                               bias=bias)
+    return bind.init_params(key, spec, dtype=dtype, scale=scale, bias=bias)
 
 
 def init_linear_from_dense(w: jax.Array, cfg: WasiConfig, *, role: str = "mlp",
                            bias=None) -> dict:
     """Paper-faithful init: factor an existing dense W by truncated SVD at
-    eps (Alg. 1 t=0). Used when converting pretrained checkpoints."""
-    from repro.core.svd import pick_rank, truncated_svd
-
-    p: dict = {}
-    if cfg.factored and wasi_applies(cfg, role):
-        k = pick_rank(w, cfg.epsilon, align=cfg.rank_align)
-        f = truncated_svd(w, k)
-        p["L"], p["R"] = f.L, f.R
-    else:
-        p["w"] = w
-    if bias is not None:
-        p["b"] = bias
-    return p
+    eps (Alg. 1 t=0). Used when converting pretrained checkpoints. Now
+    emits project-mode {"w","L","R"} params too (previously converted
+    checkpoints could not train in the paper's project mode)."""
+    _deprecated("repro.api.convert.factorize")
+    from repro.api.convert import factorize_linear
+    spec = resolve_linear_spec(cfg, f"{role}/adhoc", role,
+                               int(w.shape[-1]), int(w.shape[-2]),
+                               weight=w)
+    return factorize_linear(w, spec, bias=bias)
 
 
 def asi_spec(key, act_shape: Sequence[int], cfg: WasiConfig,
              dtype=jnp.float32) -> ASIState | None:
     """Warm-start ASI state for a linear whose input activation has
     ``act_shape`` (B, N, I) or (B, H, W, I). None if compression is off."""
-    if not cfg.compress_acts:
-        return None
-    a = cfg.asi
-    if len(act_shape) == 3:
-        fracs = (a.batch_frac, a.token_frac, a.feature_frac)
-    else:
-        fracs = (a.batch_frac,) + (a.token_frac,) * (len(act_shape) - 2) + (a.feature_frac,)
-    ranks = asi_mode_ranks(act_shape, fracs, skip_batch=a.skip_batch, align=a.align)
-    return asi_init(key, act_shape, ranks, dtype)
+    _deprecated("repro.api.bind.asi_state")
+    return bind.asi_state(key, act_shape, cfg, dtype)
 
 
 def apply_linear(p: dict, x: jax.Array, cfg: WasiConfig,
                  state: ASIState | None = None):
     """Apply. Returns (y, new_state) — new_state is None when no ASI.
-
-    What each branch saves for backward (the sketch-saving contract;
-    measured by utils/memprof.py, reference in docs/training.md):
-
-      {"L","R"} + ASI   -> Tucker x~ and the rank-K sketch h~ = x~ R^T
-                           (wasi_matmul; never the dense activation)
-      {"L","R"} no ASI  -> x plus the dense rank-K sketch h = x R^T,
-                           written by the fused forward kernel; backward is
-                           one Pallas launch on TPU (kernels/ops.py)
-      {"w","L","R"}     -> Tucker x~ (+ L, R); gradient lands on full W
-      {"w"} + ASI       -> Tucker x~ (asi_matmul)
-      {"w"} plain       -> dense x via plain autodiff (vanilla baseline)
-    """
-    new_state = None
-
-    def compress(x_):
-        if cfg.asi.frozen:
-            return asi_project(jax.lax.stop_gradient(x_), state), state
-        return asi_step(jax.lax.stop_gradient(x_), state)
-
-    if "L" in p and "w" in p:  # project mode: factored fwd, dense-W gradient
-        if state is not None:
-            xt, new_state = compress(x)
-            y = wasi_matmul_project(x, p["w"], p["L"], p["R"], xt)
-        else:
-            from repro.core.lowrank_linear import wsi_matmul_project_exact
-            y = wsi_matmul_project_exact(x, p["w"], p["L"], p["R"])
-    elif "L" in p:  # factored params (scale branch)
-        if state is not None:
-            xt, new_state = compress(x)
-            y = wasi_matmul(x, p["L"], p["R"], xt)
-        else:
-            # no-ASI factored path (serving, and `wsi` factored training):
-            # fused Pallas kernel on TPU, XLA einsum pair elsewhere —
-            # ops.lowrank_matmul dispatches per backend
-            from repro.kernels.ops import lowrank_matmul
-            y = lowrank_matmul(x, p["R"], p["L"])
-    else:
-        if state is not None:
-            xt, new_state = compress(x)
-            y = asi_matmul(x, p["w"], xt)
-        else:
-            y = jnp.einsum("...i,oi->...o", x, p["w"])
-    if "b" in p:
-        y = y + p["b"]
-    return y, new_state
+    Dispatch now happens on a LinearSpec recovered from the param layout
+    (api.bind.infer_spec), the one sanctioned place that looks at keys."""
+    _deprecated("repro.api.bind.apply")
+    spec = bind.infer_spec(p, cfg)
+    return bind.apply(spec, p, x, cfg, state)
 
 
 def linear_out_dim(p: dict) -> int:
-    return p["L"].shape[0] if "L" in p else p["w"].shape[0]
+    _deprecated("repro.api.bind.linear_out_dim")
+    return bind.linear_out_dim(p)

@@ -14,8 +14,9 @@ Decode keeps O(1) recurrent state per layer:
   Mamba-1 state (B, d_inner, d_state); Mamba-2 state (B, H, dh, d_state);
   both carry a (B, d_conv-1, d_conv_ch) rolling conv buffer.
 
-Projections (in/out/x/dt) route through nn.linear, so WASI factoring applies
-(the paper's technique on an attention-free architecture — falcon-mamba).
+Projections (in/out/x/dt) bind through the SubspacePlan (repro.api), so
+WASI factoring applies (the paper's technique on an attention-free
+architecture — falcon-mamba).
 """
 from __future__ import annotations
 
@@ -27,7 +28,7 @@ import jax.numpy as jnp
 from repro.config import ModelConfig
 from repro.distributed.sharding import MeshPolicy, shard
 from repro.nn.attention import is_vector_pos
-from repro.nn.linear import apply_linear, asi_spec, init_linear, wasi_applies
+from repro.api import bind, plan_of, role_treated
 
 
 class MambaState(NamedTuple):
@@ -83,13 +84,16 @@ def init_mamba1(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
     n = ssm.d_state
     dtr = ssm.dt_rank or max(d // 16, 1)
     ks = jax.random.split(key, 6)
-    w = cfg.wasi
+    plan = plan_of(cfg)
     return {
-        "in_proj": init_linear(ks[0], d, 2 * di, w, role="ssm", dtype=dtype),
-        "x_proj": init_linear(ks[1], di, dtr + 2 * n, w, role="ssm", dtype=dtype),
-        "dt_proj": init_linear(ks[2], dtr, di, w, role="ssm", bias=True, dtype=dtype),
-        "out_proj": init_linear(ks[3], di, d, w, role="ssm", dtype=dtype,
-                                scale=di ** -0.5),
+        "in_proj": bind.init_params(ks[0], plan.linear("ssm/in_proj", d, 2 * di),
+                                    dtype=dtype),
+        "x_proj": bind.init_params(ks[1], plan.linear("ssm/x_proj", di, dtr + 2 * n),
+                                   dtype=dtype),
+        "dt_proj": bind.init_params(ks[2], plan.linear("ssm/dt_proj", dtr, di),
+                                    dtype=dtype, bias=True),
+        "out_proj": bind.init_params(ks[3], plan.linear("ssm/out_proj", di, d),
+                                     dtype=dtype, scale=di ** -0.5),
         "conv_w": (jax.random.normal(ks[4], (ssm.d_conv, di), jnp.float32)
                    * ssm.d_conv ** -0.5).astype(dtype),
         "conv_b": jnp.zeros((di,), dtype),
@@ -102,15 +106,15 @@ def init_mamba1(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
 def init_mamba1_state(key, cfg: ModelConfig, batch: int, seq: int,
                       dtype=jnp.float32) -> dict:
     w = cfg.wasi
-    if not (w.compress_acts and wasi_applies(w, "ssm")):
+    if not (w.compress_acts and role_treated(w, "ssm")):
         return {}
     d = cfg.d_model
     di = cfg.ssm.expand * d
     ks = jax.random.split(key, 3)
     return {
-        "in_proj": asi_spec(ks[0], (batch, seq, d), w, dtype),
-        "x_proj": asi_spec(ks[1], (batch, seq, di), w, dtype),
-        "out_proj": asi_spec(ks[2], (batch, seq, di), w, dtype),
+        "in_proj": bind.asi_state(ks[0], (batch, seq, d), w, dtype),
+        "x_proj": bind.asi_state(ks[1], (batch, seq, di), w, dtype),
+        "out_proj": bind.asi_state(ks[2], (batch, seq, di), w, dtype),
     }
 
 
@@ -181,8 +185,12 @@ def apply_mamba1(p: dict, x: jax.Array, cfg: ModelConfig, *,
     new_st = dict(st)
     prefill = state is not None and x.shape[1] > 1
 
+    plan = plan_of(cfg)
+
     def lin(name, inp):
-        y, ns = apply_linear(p[name], inp, cfg.wasi, st.get(name))
+        spec = plan.linear(f"ssm/{name}", inp.shape[-1],
+                           bind.linear_out_dim(p[name]))
+        y, ns = bind.apply(spec, p[name], inp, cfg.wasi, st.get(name))
         if ns is not None:
             new_st[name] = ns
         return y
@@ -253,7 +261,7 @@ def init_mamba2(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
     n = ssm.d_state
     nh = di // ssm.head_dim
     ks = jax.random.split(key, 5)
-    w = cfg.wasi
+    plan = plan_of(cfg)
     # Sharding-aligned projection split (DESIGN.md §4): a fused [u|z|B|C|dt]
     # projection puts split boundaries inside model-axis shards (involuntary
     # reshard of the full (B,S,14k+) tensor per layer — measured 150 GiB on
@@ -261,11 +269,12 @@ def init_mamba2(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
     # 2^k-way sharding); the tiny B/C/dt head is a separate REPLICATED
     # projection, and the depthwise convs are split the same way.
     return {
-        "in_proj": init_linear(ks[0], d, 2 * di, w, role="ssm", dtype=dtype),
-        "bcdt_proj": init_linear(ks[1], d, 2 * n + nh, w, role="ssm_small",
-                                 dtype=dtype),
-        "out_proj": init_linear(ks[2], di, d, w, role="ssm", dtype=dtype,
-                                scale=di ** -0.5),
+        "in_proj": bind.init_params(ks[0], plan.linear("ssm/in_proj", d, 2 * di),
+                                    dtype=dtype),
+        "bcdt_proj": bind.init_params(ks[1], plan.linear("ssm/bcdt_proj", d, 2 * n + nh),
+                                      dtype=dtype),
+        "out_proj": bind.init_params(ks[2], plan.linear("ssm/out_proj", di, d),
+                                     dtype=dtype, scale=di ** -0.5),
         "conv_w": (jax.random.normal(ks[3], (ssm.d_conv, di), jnp.float32)
                    * ssm.d_conv ** -0.5).astype(dtype),
         "conv_b": jnp.zeros((di,), dtype),
@@ -282,15 +291,15 @@ def init_mamba2(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
 def init_mamba2_state(key, cfg: ModelConfig, batch: int, seq: int,
                       dtype=jnp.float32) -> dict:
     w = cfg.wasi
-    if not (w.compress_acts and wasi_applies(w, "ssm")):
+    if not (w.compress_acts and role_treated(w, "ssm")):
         return {}
     d = cfg.d_model
     di = cfg.ssm.expand * d
     ks = jax.random.split(key, 3)
     return {
-        "in_proj": asi_spec(ks[0], (batch, seq, d), w, dtype),
-        "bcdt_proj": asi_spec(ks[2], (batch, seq, d), w, dtype),
-        "out_proj": asi_spec(ks[1], (batch, seq, di), w, dtype),
+        "in_proj": bind.asi_state(ks[0], (batch, seq, d), w, dtype),
+        "bcdt_proj": bind.asi_state(ks[2], (batch, seq, d), w, dtype),
+        "out_proj": bind.asi_state(ks[1], (batch, seq, di), w, dtype),
     }
 
 
@@ -378,8 +387,12 @@ def apply_mamba2(p: dict, x: jax.Array, cfg: ModelConfig, *,
     new_st = dict(st)
     prefill = state is not None and x.shape[1] > 1
 
+    plan = plan_of(cfg)
+
     def lin(name, inp):
-        y, ns = apply_linear(p[name], inp, cfg.wasi, st.get(name))
+        spec = plan.linear(f"ssm/{name}", inp.shape[-1],
+                           bind.linear_out_dim(p[name]))
+        y, ns = bind.apply(spec, p[name], inp, cfg.wasi, st.get(name))
         if ns is not None:
             new_st[name] = ns
         return y

@@ -1,7 +1,9 @@
 """MLP blocks: GELU (ViT/Whisper-style) and SwiGLU (LLaMA-style).
 
-All projections route through nn.linear so WASI factoring / ASI compression
-apply uniformly. The WASI sharding trick (DESIGN.md §4): up/gate L sharded on
+All projections route through the SubspacePlan (repro.api): each linear
+site ("mlp/gate", "mlp/up", "mlp/down") is a resolved LinearSpec, so WASI
+factoring / ASI compression apply uniformly and no call site inspects param
+dict keys. The WASI sharding trick (DESIGN.md §4): up/gate L sharded on
 d_ff (column-parallel), down R sharded on d_ff (row-parallel) — the residual
 all-reduce payload after `down` is d_model-sized in vanilla but the factored
 pair turns the contraction into a K-sized partial first.
@@ -11,28 +13,31 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.api import bind, plan_of, role_treated
 from repro.config import ModelConfig
 from repro.distributed.sharding import MeshPolicy, shard
-from repro.nn.linear import apply_linear, asi_spec, init_linear, wasi_applies
 
 
 def init_mlp(key, cfg: ModelConfig, d_in: int | None = None,
              d_ff: int | None = None, dtype=jnp.float32) -> dict:
     d = d_in or cfg.d_model
     f = d_ff or cfg.d_ff
-    w = cfg.wasi
+    plan = plan_of(cfg)
     if cfg.mlp_act == "swiglu":
         k1, k2, k3 = jax.random.split(key, 3)
         return {
-            "gate": init_linear(k1, d, f, w, role="mlp", dtype=dtype),
-            "up": init_linear(k2, d, f, w, role="mlp", dtype=dtype),
-            "down": init_linear(k3, f, d, w, role="mlp", dtype=dtype,
-                                scale=f ** -0.5),
+            "gate": bind.init_params(k1, plan.linear("mlp/gate", d, f),
+                                     dtype=dtype),
+            "up": bind.init_params(k2, plan.linear("mlp/up", d, f),
+                                   dtype=dtype),
+            "down": bind.init_params(k3, plan.linear("mlp/down", f, d),
+                                     dtype=dtype, scale=f ** -0.5),
         }
     k1, k2 = jax.random.split(key)
     return {
-        "up": init_linear(k1, d, f, w, role="mlp", dtype=dtype),
-        "down": init_linear(k2, f, d, w, role="mlp", dtype=dtype, scale=f ** -0.5),
+        "up": bind.init_params(k1, plan.linear("mlp/up", d, f), dtype=dtype),
+        "down": bind.init_params(k2, plan.linear("mlp/down", f, d),
+                                 dtype=dtype, scale=f ** -0.5),
     }
 
 
@@ -40,15 +45,15 @@ def init_mlp_state(key, cfg: ModelConfig, batch: int, seq: int,
                    d_in: int | None = None, d_ff: int | None = None,
                    dtype=jnp.float32) -> dict:
     w = cfg.wasi
-    if not (w.compress_acts and wasi_applies(w, "mlp")):
+    if not (w.compress_acts and role_treated(w, "mlp")):
         return {}
     d = d_in or cfg.d_model
     f = d_ff or cfg.d_ff
     ks = jax.random.split(key, 3)
-    st = {"up": asi_spec(ks[0], (batch, seq, d), w, dtype),
-          "down": asi_spec(ks[1], (batch, seq, f), w, dtype)}
+    st = {"up": bind.asi_state(ks[0], (batch, seq, d), w, dtype),
+          "down": bind.asi_state(ks[1], (batch, seq, f), w, dtype)}
     if cfg.mlp_act == "swiglu":
-        st["gate"] = asi_spec(ks[2], (batch, seq, d), w, dtype)
+        st["gate"] = bind.asi_state(ks[2], (batch, seq, d), w, dtype)
     return st
 
 
@@ -58,9 +63,12 @@ def apply_mlp(p: dict, x: jax.Array, cfg: ModelConfig,
     """Returns (y, new_states)."""
     st = states or {}
     new_st = dict(st)
+    plan = plan_of(cfg)
 
     def lin(name, inp):
-        y, ns = apply_linear(p[name], inp, cfg.wasi, st.get(name))
+        spec = plan.linear(f"mlp/{name}", inp.shape[-1],
+                           bind.linear_out_dim(p[name]))
+        y, ns = bind.apply(spec, p[name], inp, cfg.wasi, st.get(name))
         if ns is not None:
             new_st[name] = ns
         return y

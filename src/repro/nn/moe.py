@@ -22,14 +22,15 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.distributed.sharding import MeshPolicy, shard
-from repro.nn.linear import linear_rank, wasi_applies
+from repro.api import bind
+from repro.api.plan import LinearSpec, plan_of
 
 
-def _init_bank(key, n: int, in_dim: int, out_dim: int, cfg, *, factored: bool,
-               dtype, scale=None) -> dict:
+def _init_bank(key, n: int, spec: LinearSpec, *, dtype, scale=None) -> dict:
+    in_dim, out_dim = spec.in_dim, spec.out_dim
     std = scale if scale is not None else in_dim ** -0.5
-    if factored:
-        k = linear_rank(in_dim, out_dim, cfg.wasi)
+    if spec.mode == "factored":
+        k = spec.rank
         kl, kr = jax.random.split(key)
         split = (std / k ** 0.5) ** 0.5
         return {
@@ -39,46 +40,62 @@ def _init_bank(key, n: int, in_dim: int, out_dim: int, cfg, *, factored: bool,
     return {"w": (jax.random.normal(key, (n, out_dim, in_dim), jnp.float32) * std).astype(dtype)}
 
 
-def _bank_matmul(p: dict, x: jax.Array) -> jax.Array:
-    """x (E, C, I) through per-expert weights -> (E, C, O)."""
-    if "L" in p:
+def _bank_matmul(spec: LinearSpec, p: dict, x: jax.Array) -> jax.Array:
+    """x (E, C, I) through per-expert weights -> (E, C, O), dispatched on
+    the site's planned mode (factor banks keep exact autodiff gradients;
+    DESIGN.md §5). In project mode the per-step WSI injection leaves
+    (L, R) next to each bank's dense w: run the paper's factored forward
+    with the exact dense-W gradient, vmapped over the expert axis."""
+    if spec.mode == "factored":
         h = jnp.einsum("eci,eki->eck", x, p["R"])
         return jnp.einsum("eck,eok->eco", h, p["L"])
+    if spec.mode == "project" and bind.linear_layout(p) == "project":
+        from repro.core.lowrank_linear import wsi_matmul_project_exact
+        return jax.vmap(wsi_matmul_project_exact)(x, p["w"], p["L"], p["R"])
     return jnp.einsum("eci,eoi->eco", x, p["w"])
+
+
+def _bank_specs(cfg: ModelConfig) -> dict[str, LinearSpec]:
+    plan = plan_of(cfg)
+    d = cfg.d_model
+    f = cfg.moe.expert_d_ff or cfg.d_ff
+    return {"w_gate": plan.linear("moe/w_gate", d, f),
+            "w_up": plan.linear("moe/w_up", d, f),
+            "w_down": plan.linear("moe/w_down", f, d)}
 
 
 def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
     m = cfg.moe
     d = cfg.d_model
     f = m.expert_d_ff or cfg.d_ff
-    factored = cfg.wasi.factored and wasi_applies(cfg.wasi, "moe")
+    specs = _bank_specs(cfg)
     kr, kg, ku, kd, ks = jax.random.split(key, 5)
     p = {
         "router": {"w": (jax.random.normal(kr, (m.n_experts, d), jnp.float32)
                           * d ** -0.5).astype(jnp.float32)},
         "experts": {
-            "w_gate": _init_bank(kg, m.n_experts, d, f, cfg, factored=factored, dtype=dtype),
-            "w_up": _init_bank(ku, m.n_experts, d, f, cfg, factored=factored, dtype=dtype),
-            "w_down": _init_bank(kd, m.n_experts, f, d, cfg, factored=factored,
+            "w_gate": _init_bank(kg, m.n_experts, specs["w_gate"], dtype=dtype),
+            "w_up": _init_bank(ku, m.n_experts, specs["w_up"], dtype=dtype),
+            "w_down": _init_bank(kd, m.n_experts, specs["w_down"],
                                  dtype=dtype, scale=f ** -0.5),
         },
     }
     if m.n_shared > 0:
         kg2, ku2, kd2 = jax.random.split(ks, 3)
         p["shared"] = {
-            "w_gate": _init_bank(kg2, m.n_shared, d, f, cfg, factored=factored, dtype=dtype),
-            "w_up": _init_bank(ku2, m.n_shared, d, f, cfg, factored=factored, dtype=dtype),
-            "w_down": _init_bank(kd2, m.n_shared, f, d, cfg, factored=factored,
+            "w_gate": _init_bank(kg2, m.n_shared, specs["w_gate"], dtype=dtype),
+            "w_up": _init_bank(ku2, m.n_shared, specs["w_up"], dtype=dtype),
+            "w_down": _init_bank(kd2, m.n_shared, specs["w_down"],
                                  dtype=dtype, scale=f ** -0.5),
         }
     return p
 
 
-def _expert_ffn(bank: dict, x: jax.Array) -> jax.Array:
-    g = _bank_matmul(bank["w_gate"], x)
-    u = _bank_matmul(bank["w_up"], x)
+def _expert_ffn(specs: dict, bank: dict, x: jax.Array) -> jax.Array:
+    g = _bank_matmul(specs["w_gate"], bank["w_gate"], x)
+    u = _bank_matmul(specs["w_up"], bank["w_up"], x)
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
-    return _bank_matmul(bank["w_down"], h)
+    return _bank_matmul(specs["w_down"], bank["w_down"], h)
 
 
 def moe_capacity(group_tokens: int, cfg: ModelConfig) -> int:
@@ -132,7 +149,8 @@ def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig,
     disp = shard(disp, policy, "batch", None, None, None)
     disp = shard(disp, policy, "batch", e_axis, None, None)
     # fold groups into the expert batch: (E, B*C, d) expert-major layout
-    out = _expert_ffn(p["experts"],
+    specs = _bank_specs(cfg)
+    out = _expert_ffn(specs, p["experts"],
                       disp.transpose(1, 0, 2, 3).reshape(m.n_experts, b * cap, d))
     out = out.reshape(m.n_experts, b, cap, d).transpose(1, 0, 2, 3)
     out = shard(out, policy, "batch", e_axis, None, None)
@@ -149,7 +167,7 @@ def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig,
 
     if m.n_shared > 0:
         xs = jnp.broadcast_to(x.reshape(1, b * s, d), (m.n_shared, b * s, d))
-        y = y + _expert_ffn(p["shared"], xs).sum(axis=0).reshape(b, s, d)
+        y = y + _expert_ffn(specs, p["shared"], xs).sum(axis=0).reshape(b, s, d)
 
     # load-balancing aux loss (Switch-style)
     me = probs.mean(axis=(0, 1))                                 # (E,)

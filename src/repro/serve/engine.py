@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.plan import SubspacePlan, install, installed, plan_of
 from repro.config import ModelConfig
 from repro.models.lm import init_lm_cache, lm_decode_step, lm_prefill
 
@@ -77,9 +78,33 @@ class Request:
 class ServeEngine:
     """Greedy-decoding continuous-batching engine over a fixed slot pool."""
 
-    def __init__(self, params, cfg: ModelConfig, *, max_slots: int = 4,
+    def __init__(self, params, cfg: ModelConfig | None = None, *,
+                 plan: SubspacePlan | None = None, max_slots: int = 4,
                  max_cache: int = 512,
                  buckets: Sequence[int] = DEFAULT_BUCKETS):
+        if cfg is None:
+            if plan is None:
+                raise ValueError("ServeEngine needs a ModelConfig or a "
+                                 "SubspacePlan (which carries one)")
+            cfg = plan.model
+        # the engine serves under ONE resolved plan: every linear in the
+        # jitted prefill/decode must read the same subspace decision the
+        # params were built (or converted) with. Install it only if the
+        # slot is free — silently overriding another live plan for an
+        # equal config would retrace someone else's model at wrong ranks.
+        if plan is None:
+            self.plan = plan_of(cfg)
+        else:
+            current = installed(cfg)
+            if current is None:
+                self.plan = install(plan)
+            elif current == plan:
+                self.plan = current
+            else:
+                raise ValueError(
+                    "a different SubspacePlan is already installed for this "
+                    "ModelConfig; api.uninstall(cfg) it first, or build the "
+                    "engine with that plan")
         self.params = params
         self.cfg = cfg
         self.max_slots = max_slots
@@ -116,6 +141,21 @@ class ServeEngine:
         donate = () if jax.default_backend() == "cpu" else (2,)
         self._decode = jax.jit(_decode, donate_argnums=donate)
         self._prefill = jax.jit(_prefill, donate_argnums=donate)
+
+    @classmethod
+    def from_checkpoint(cls, ckpt_dir: str, step: int | None = None,
+                        **engine_kw) -> "ServeEngine":
+        """Build an engine from a plan-bearing checkpoint — no config in
+        hand. The manifest's SubspacePlan carries the ModelConfig and the
+        per-site subspace layout the stored params use (api/convert.py)."""
+        from repro.api.convert import load_checkpoint
+
+        params, plan, _ = load_checkpoint(ckpt_dir, step)
+        if plan is None:
+            raise ValueError(
+                f"checkpoint at {ckpt_dir} carries no SubspacePlan; build "
+                "the engine with ServeEngine(params, cfg) instead")
+        return cls(params, plan=plan, **engine_kw)
 
     # -- submission ---------------------------------------------------------
 

@@ -22,13 +22,14 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.api.bind import extract_project_factors, map_factored
 from repro.config import ModelConfig, TrainConfig
 from repro.core.project import (
     init_project_states,
     project_forward_params,
     update_project_states,
 )
-from repro.core.wsi import WSIState, wsi_refresh_factored
+from repro.core.wsi import wsi_refresh_factored
 from repro.distributed.grad_compress import compress_gradients, init_compression
 from repro.distributed.sharding import MeshPolicy
 from repro.optim import (
@@ -48,30 +49,16 @@ class TrainState(NamedTuple):
     step: jax.Array
 
 
-def _map_factored(params, fn):
-    """Apply fn(WSIState) -> WSIState to every {L, R} factor pair."""
-    def walk(node):
-        if isinstance(node, dict):
-            if "L" in node and "R" in node and "w" not in node:
-                st = fn(WSIState(L=node["L"], R=node["R"]))
-                out = dict(node)
-                out["L"], out["R"] = st.L, st.R
-                return out
-            return {k: walk(v) for k, v in node.items()}
-        if isinstance(node, list):
-            return [walk(v) for v in node]
-        if isinstance(node, tuple) and not hasattr(node, "_fields"):
-            return tuple(walk(v) for v in node)
-        return node
-
-    return walk(params)
-
-
 def make_train_state(key, params, cfg: ModelConfig, tcfg: TrainConfig, *,
                      asi_states=None, use_epsilon_ranks: bool = False) -> TrainState:
     wsi = None
     if cfg.wasi.project:
-        wsi = init_project_states(params, cfg, use_epsilon=use_epsilon_ranks)
+        # converted checkpoints (api.convert.factorize, project mode) carry
+        # {"w","L","R"}: strip the factors into warm WSI states so the
+        # param tree stays dense and training resumes the stored subspace
+        params, warm = extract_project_factors(params)
+        wsi = init_project_states(params, cfg, use_epsilon=use_epsilon_ranks,
+                                  warm=warm)
     psgd = None
     if tcfg.powersgd_rank > 0:
         psgd = init_compression(key, params, tcfg.powersgd_rank)
@@ -151,7 +138,7 @@ def make_train_step(loss_fn, cfg: ModelConfig, tcfg: TrainConfig, *,
             do = (state.step + 1) % cfg.wasi.refresh_every == 0
             new_params = jax.lax.cond(
                 do,
-                lambda p: _map_factored(p, wsi_refresh_factored),
+                lambda p: map_factored(p, wsi_refresh_factored),
                 lambda p: p,
                 new_params)
 

@@ -161,8 +161,7 @@ def role_residual_bytes(cfg, batch: int, seq: int,
     factored-no-ASI path (kernels/ops.py saves x and the M×K sketch), and
     ``dense`` otherwise.
     """
-    from repro.core.rank_policy import asi_mode_ranks
-    from repro.nn.linear import linear_rank, wasi_applies
+    from repro.api.plan import resolve_linear_spec
 
     w = cfg.wasi
     d, f = cfg.d_model, cfg.d_ff
@@ -177,19 +176,16 @@ def role_residual_bytes(cfg, batch: int, seq: int,
     for name, role, i_dim, o_dim in roles:
         act = (batch, seq, i_dim)
         dense = dense_residual_bytes(act, itemsize)
-        treated = wasi_applies(w, role)
-        if treated and w.compress_acts:
-            a = w.asi
-            fracs = (a.batch_frac, a.token_frac, a.feature_frac)
-            ranks = asi_mode_ranks(act, fracs, skip_batch=a.skip_batch,
-                                   align=a.align)
+        spec = resolve_linear_spec(w, f"memprof/{name}", role, i_dim, o_dim,
+                                   act_shape=act)
+        if spec.asi_ranks is not None:
+            ranks = spec.asi_ranks
             bytes_ = tucker_residual_bytes(act, ranks, itemsize)
-            if w.factored:  # + the h~ sketch's (K, r_feat) last factor
-                bytes_ += linear_rank(i_dim, o_dim, w) * ranks[-1] * itemsize
+            if spec.mode == "factored":  # + h~ sketch's (K, r_feat) factor
+                bytes_ += spec.rank * ranks[-1] * itemsize
             kind = "tucker"
-        elif treated and w.factored:  # wsi: exact sketch-saving backward
-            k = linear_rank(i_dim, o_dim, w)
-            bytes_ = dense + batch * seq * k * 4  # x (model dtype) + h (f32)
+        elif spec.mode == "factored":  # wsi: exact sketch-saving backward
+            bytes_ = dense + batch * seq * spec.rank * 4  # x + h (f32)
             kind = "x+sketch"
         else:
             bytes_ = dense

@@ -1,0 +1,163 @@
+"""Conversion + plan-bearing checkpoints: densify(factorize(p)) at eps
+tolerance, project-mode conversion trains, checkpoint -> serve engine with
+no config in hand."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro import api
+from repro.api import convert
+from repro.api.plan import collect_linear_weights
+from repro.checkpoint import CheckpointManager, restore_untyped, save_checkpoint
+from repro.config import TrainConfig
+from repro.models.lm import init_lm, init_lm_states, lm_loss
+from repro.serve import ServeEngine
+from repro.train.step import make_train_state, make_train_step
+
+
+def _dense_cfg():
+    cfg = configs.get_smoke("qwen2-0.5b")
+    return cfg.replace(wasi=dataclasses.replace(cfg.wasi, method="none"))
+
+
+def _dense_params(seed=1):
+    return init_lm(jax.random.PRNGKey(seed), _dense_cfg())
+
+
+def _with_wasi(cfg, **kw):
+    return cfg.replace(wasi=dataclasses.replace(cfg.wasi, **kw))
+
+
+def test_factorize_densify_within_eps_tolerance():
+    """densify(factorize(p, plan), plan) ~= p: for every factored site the
+    per-slice relative Frobenius error is bounded by sqrt(1 - eps) — the
+    explained-variance guarantee of the calibrated rank choice."""
+    dp = _dense_params()
+    cfg = _with_wasi(_dense_cfg(), method="wsi", epsilon=0.8, rank_align=8)
+    plan = api.resolve(cfg, calibration=dp)
+    assert plan.calibrated
+    back = convert.densify(convert.factorize(dp, plan), plan)
+    bound = math.sqrt(1 - cfg.wasi.epsilon) + 1e-4
+    orig, rec = collect_linear_weights(dp), collect_linear_weights(back)
+    assert set(orig) == set(rec) and orig
+    for name in orig:
+        w0 = np.asarray(orig[name][0], np.float32).reshape(
+            (-1,) + np.asarray(orig[name][0]).shape[-2:])
+        w1 = np.asarray(rec[name][0], np.float32).reshape(w0.shape)
+        for j in range(w0.shape[0]):
+            rel = np.linalg.norm(w0[j] - w1[j]) / np.linalg.norm(w0[j])
+            assert rel <= bound, (name, j, rel)
+
+
+def test_densify_is_exact_for_project_and_dense():
+    dp = _dense_params()
+    proj = _with_wasi(_dense_cfg(), method="wasi", update_mode="project",
+                      rank_align=8)
+    plan = api.resolve(proj)
+    fp = convert.factorize(dp, plan)
+    node = fp["groups"][0][0]["mlp"]["up"]
+    assert {"w", "L", "R"} <= set(node)    # project carries BOTH
+    back = convert.densify(fp, plan)
+    for a, b in zip(jax.tree.leaves(dp), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_factorize_rejects_already_factored():
+    cfg = _with_wasi(_dense_cfg(), method="wsi", rank_align=8)
+    plan = api.resolve(cfg)
+    fp = convert.factorize(_dense_params(), plan)
+    with pytest.raises(ValueError):
+        convert.factorize(fp, plan)
+
+
+def test_project_conversion_trains_with_warm_subspace():
+    """The paper's project mode on a converted pretrained checkpoint: the
+    carried (L, R) must strip into warm WSI states and the step must run."""
+    dp = _dense_params()
+    cfg = _with_wasi(_dense_cfg(), method="wasi", update_mode="project",
+                     rank_align=8)
+    plan = api.resolve(cfg)
+    fp = convert.factorize(dp, plan)
+    key = jax.random.PRNGKey(0)
+    tcfg = TrainConfig(steps=1, checkpoint_every=0)
+    st = make_train_state(key, fp, cfg, tcfg,
+                          asi_states=init_lm_states(key, cfg, 2, 8))
+    # params went back to dense; the converted factors seed the WSI states
+    assert "L" not in st.params["groups"][0][0]["mlp"]["up"]
+    path = next(p for p in st.wsi if p.endswith("mlp/up/w"))
+    want_l = np.asarray(fp["groups"][0][0]["mlp"]["up"]["L"])
+    np.testing.assert_array_equal(np.asarray(st.wsi[path].L), want_l)
+    step = jax.jit(make_train_step(lm_loss, cfg, tcfg))
+    b = {"tokens": jnp.zeros((2, 8), jnp.int32),
+         "labels": jnp.ones((2, 8), jnp.int32)}
+    st, m = step(st, b)
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_legacy_shim_emits_project_params():
+    import repro.nn.linear as legacy
+
+    legacy._warned = True
+    cfg = _with_wasi(_dense_cfg(), method="wasi", update_mode="project",
+                     rank_align=8).wasi
+    w = jax.random.normal(jax.random.PRNGKey(0), (24, 16))
+    p = legacy.init_linear_from_dense(w, cfg, role="mlp",
+                                      bias=jnp.zeros((24,)))
+    assert {"w", "L", "R", "b"} == set(p)
+    assert p["L"].shape[0] == 24 and p["R"].shape[1] == 16
+
+
+# ---------------------------------------------------------------------------
+# plan-bearing checkpoints
+# ---------------------------------------------------------------------------
+
+def test_untyped_restore_matches_template_restore(tmp_path):
+    params = _dense_params()
+    save_checkpoint(str(tmp_path), 3, params, plan=api.resolve(_dense_cfg()))
+    back = restore_untyped(str(tmp_path), 3)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    plan = convert.load_plan(str(tmp_path))
+    assert plan is not None and plan.model == _dense_cfg()
+
+
+def test_checkpoint_to_serve_engine_identical_logits(tmp_path):
+    """A plan-bearing checkpoint saved from the train template restores into
+    the serve engine (no config in hand) and generates identically."""
+    cfg = _with_wasi(_dense_cfg(), method="wsi", rank_align=8)
+    plan = api.install(api.resolve(cfg, batch=2, seq=8))
+    key = jax.random.PRNGKey(0)
+    params = init_lm(key, cfg)
+    tcfg = TrainConfig(steps=1, checkpoint_every=0)
+    state = make_train_state(key, params, cfg, tcfg)
+    mgr = CheckpointManager(str(tmp_path), plan=plan, label="train_state")
+    mgr.save(5, state)
+
+    prompts = [[3, 1, 4, 1, 5], [9, 2, 6]]
+    def drive(engine):
+        reqs = [engine.submit(p, max_new=4) for p in prompts]
+        engine.run()
+        return [r.tokens for r in reqs]
+
+    direct = drive(ServeEngine(state.params, cfg, max_slots=2, max_cache=16))
+    restored = ServeEngine.from_checkpoint(str(tmp_path), max_slots=2,
+                                           max_cache=16)
+    assert restored.cfg == cfg             # config round-tripped via plan
+    assert drive(restored) == direct
+
+
+def test_export_dense_from_checkpoint(tmp_path):
+    cfg = _with_wasi(_dense_cfg(), method="wsi", rank_align=8)
+    plan = api.resolve(cfg)
+    fp = convert.factorize(_dense_params(), plan)
+    save_checkpoint(str(tmp_path), 1, fp, plan=plan, label="params")
+    dense, got_plan, step = convert.export_dense(str(tmp_path))
+    assert step == 1 and got_plan.model == cfg
+    node = dense["groups"][0][0]["mlp"]["up"]
+    assert set(node) == {"w"}
+    assert node["w"].shape[-2:] == (cfg.d_ff, cfg.d_model)

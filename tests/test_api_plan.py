@@ -1,0 +1,240 @@
+"""SubspacePlan resolve/bind: spec resolution, plan lookup, typed apply
+dispatch, legacy shim compatibility + deprecation."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro import api
+from repro.api import bind
+from repro.api.plan import SubspacePlan, plan_of, resolve_linear_spec
+from repro.config import AsiConfig, WasiConfig
+
+
+def _wasi(**kw):
+    kw.setdefault("method", "wasi")
+    kw.setdefault("rank_align", 8)
+    return WasiConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# resolve
+# ---------------------------------------------------------------------------
+
+def test_modes_follow_method_and_scope():
+    cfg = configs.get_smoke("qwen2-0.5b")
+    for method, update, want in [("none", "factored", "dense"),
+                                 ("asi", "factored", "dense"),
+                                 ("wasi", "factored", "factored"),
+                                 ("wsi", "factored", "factored"),
+                                 ("wasi", "project", "project")]:
+        c = cfg.replace(wasi=dataclasses.replace(
+            cfg.wasi, method=method, update_mode=update))
+        plan = api.resolve(c)
+        assert plan.spec("mlp/up").mode == want, (method, update)
+
+
+def test_scope_mlp_keeps_attn_dense():
+    cfg = configs.get_smoke("qwen2-0.5b")
+    c = cfg.replace(wasi=dataclasses.replace(cfg.wasi, scope="mlp"))
+    plan = api.resolve(c)
+    assert plan.spec("attn/wq").mode == "dense"
+    assert plan.spec("mlp/up").mode == "factored"
+
+
+def test_sites_cover_block_kinds():
+    lm = api.resolve(configs.get_smoke("qwen2-0.5b"))
+    assert {"attn/wq", "mlp/up"} <= {s.name for s in lm.specs}
+    mamba = api.resolve(configs.get_smoke("falcon-mamba-7b"))
+    assert {"ssm/in_proj", "ssm/out_proj"} <= {s.name for s in mamba.specs}
+    moe = api.resolve(configs.get_smoke("mixtral-8x7b"))
+    assert {"moe/w_gate", "moe/w_down"} <= {s.name for s in moe.specs}
+    vit = api.resolve(configs.get_smoke("vit-base"))
+    assert {"attn/wq", "mlp/up"} <= {s.name for s in vit.specs}
+    assert "mlp/gate" not in {s.name for s in vit.specs}  # gelu MLP
+
+
+def test_asi_ranks_only_with_shape_hint():
+    cfg = configs.get_smoke("qwen2-0.5b")
+    assert api.resolve(cfg).spec("mlp/up").asi_ranks is None
+    plan = api.resolve(cfg, batch=2, seq=16)
+    ranks = plan.spec("mlp/up").asi_ranks
+    assert ranks is not None and len(ranks) == 3
+    assert ranks[0] == 2  # skip_batch: identity over the batch mode
+
+
+def test_calibrated_ranks_track_spectrum():
+    """A near-low-rank weight must calibrate to a much smaller rank than a
+    full-spectrum one under the same eps."""
+    w = _wasi(method="wsi", epsilon=0.9)
+    key = jax.random.PRNGKey(0)
+    lowrank_w = (jax.random.normal(key, (64, 8)) @
+                 jax.random.normal(key, (8, 64)))
+    flat_w = jax.random.normal(key, (64, 64))
+    s_low = resolve_linear_spec(w, "mlp/up", "mlp", 64, 64, weight=lowrank_w)
+    s_flat = resolve_linear_spec(w, "mlp/up", "mlp", 64, 64, weight=flat_w)
+    assert s_low.rank <= 8
+    assert s_flat.rank > 2 * s_low.rank
+
+
+def test_plan_json_roundtrip():
+    cfg = configs.get_smoke("zamba2-7b")   # hybrid: ssm + shared attn + mlp
+    plan = api.resolve(cfg, batch=2, seq=8)
+    back = SubspacePlan.loads(plan.dumps())
+    assert back.model == plan.model        # ModelConfig fully reconstructed
+    assert back.specs == plan.specs
+    assert back.batch == 2 and back.seq == 8
+
+
+def test_plan_of_memoizes_and_install_overrides():
+    cfg = configs.get_smoke("qwen2-0.5b")
+    assert plan_of(cfg) is plan_of(cfg)
+    custom = api.resolve(cfg, batch=4, seq=32)
+    api.install(custom)
+    try:
+        assert plan_of(cfg) is custom
+    finally:
+        api.uninstall(cfg)
+    assert plan_of(cfg) is not custom
+
+
+def test_linear_lookup_falls_back_on_dim_override():
+    plan = api.resolve(configs.get_smoke("qwen2-0.5b"))
+    base = plan.linear("mlp/up")
+    odd = plan.linear("mlp/up", 48, 96)    # non-config dims: fresh resolve
+    assert odd.in_dim == 48 and odd.out_dim == 96
+    assert odd.mode == base.mode           # same policy either way
+
+
+def test_vmem_check_recorded():
+    w = _wasi(method="wsi")
+    small = resolve_linear_spec(w, "mlp/up", "mlp", 128, 128)
+    huge = resolve_linear_spec(w, "mlp/up", "mlp", 16384, 16384)
+    assert small.bwd_fits_vmem is True
+    assert huge.bwd_fits_vmem is False
+    dense = resolve_linear_spec(WasiConfig(), "mlp/up", "mlp", 128, 128)
+    assert dense.bwd_fits_vmem is None
+
+
+# ---------------------------------------------------------------------------
+# bind
+# ---------------------------------------------------------------------------
+
+def test_bind_apply_dense_matches_einsum():
+    w = WasiConfig(method="none")
+    spec = resolve_linear_spec(w, "mlp/up", "mlp", 16, 24)
+    key = jax.random.PRNGKey(0)
+    p = bind.init_params(key, spec, bias=True)
+    x = jax.random.normal(key, (2, 5, 16))
+    y, ns = bind.apply(spec, p, x, w)
+    assert ns is None
+    ref = jnp.einsum("...i,oi->...o", x, p["w"]) + p["b"]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-6)
+
+
+def test_bind_apply_factored_matches_factor_product():
+    w = _wasi(method="wsi")
+    spec = resolve_linear_spec(w, "mlp/up", "mlp", 16, 24)
+    key = jax.random.PRNGKey(1)
+    p = bind.init_params(key, spec)
+    assert set(p) == {"L", "R"} and p["L"].shape == (24, spec.rank)
+    x = jax.random.normal(key, (2, 5, 16))
+    y, _ = bind.apply(spec, p, x, w)
+    ref = jnp.einsum("...k,ok->...o",
+                     jnp.einsum("...i,ki->...k", x, p["R"]), p["L"])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bind_project_without_factors_falls_back_dense():
+    w = _wasi(method="wasi", update_mode="project",
+              asi=AsiConfig())
+    spec = resolve_linear_spec(w, "mlp/up", "mlp", 16, 24)
+    assert spec.mode == "project"
+    key = jax.random.PRNGKey(2)
+    p = bind.init_params(key, spec)
+    assert set(p) == {"w"}                 # project inits dense
+    x = jax.random.normal(key, (2, 3, 16))
+    y, _ = bind.apply(spec, p, x, w, None)
+    ref = jnp.einsum("...i,oi->...o", x, p["w"])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-6)
+
+
+def test_extract_project_factors_roundtrip():
+    tree = {"mlp": {"up": {"w": jnp.ones((8, 4)), "L": jnp.ones((8, 2)),
+                           "R": jnp.ones((2, 4))}},
+            "norm": {"scale": jnp.ones((4,))}}
+    stripped, factors = bind.extract_project_factors(tree)
+    assert set(stripped["mlp"]["up"]) == {"w"}
+    assert list(factors) == ["mlp/up/w"]
+    assert factors["mlp/up/w"].L.shape == (8, 2)
+    # trees without factors pass through untouched
+    same, none = bind.extract_project_factors(stripped)
+    assert none == {} and same is stripped
+
+
+# ---------------------------------------------------------------------------
+# legacy shim: old signatures keep working, one DeprecationWarning
+# ---------------------------------------------------------------------------
+
+def test_shim_apply_linear_compatible_and_warns_once():
+    import repro.nn.linear as legacy
+
+    legacy._warned = False
+    w = _wasi(method="wsi")
+    key = jax.random.PRNGKey(3)
+    with pytest.warns(DeprecationWarning):
+        p = legacy.init_linear(key, 16, 24, w, role="mlp")
+    x = jax.random.normal(key, (2, 4, 16))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        # the warning fired once already; subsequent calls stay silent
+        y_old, _ = legacy.apply_linear(p, x, w)
+    spec = resolve_linear_spec(w, "mlp/up", "mlp", 16, 24)
+    y_new, _ = bind.apply(spec, p, x, w)
+    np.testing.assert_allclose(np.asarray(y_old), np.asarray(y_new))
+    assert legacy.linear_out_dim(p) == 24
+    assert legacy.wasi_applies(w, "mlp") and not legacy.wasi_applies(w, "head")
+
+
+def test_shim_init_linear_rng_matches_bind():
+    """Seeded init must be identical through the shim and the new API."""
+    import repro.nn.linear as legacy
+
+    legacy._warned = True   # silence
+    w = _wasi(method="wsi")
+    key = jax.random.PRNGKey(7)
+    old = legacy.init_linear(key, 32, 16, w, role="mlp", bias=True)
+    spec = resolve_linear_spec(w, "mlp/adhoc", "mlp", 32, 16, bias=True)
+    new = bind.init_params(key, spec, bias=True)
+    for k in old:
+        np.testing.assert_array_equal(np.asarray(old[k]), np.asarray(new[k]))
+
+
+def test_engine_rejects_conflicting_installed_plan():
+    """ServeEngine must not silently override a live installed plan for an
+    equal config with a different one (global dispatch state)."""
+    import dataclasses
+
+    from repro.models.lm import init_lm
+    from repro.serve import ServeEngine
+
+    cfg = configs.get_smoke("qwen2-0.5b").replace(
+        wasi=dataclasses.replace(configs.get_smoke("qwen2-0.5b").wasi,
+                                 method="wsi"))
+    live = api.install(api.resolve(cfg, batch=2, seq=8))
+    other = api.resolve(cfg)               # no shape hints: differs
+    assert other != live
+    try:
+        params = init_lm(jax.random.PRNGKey(0), cfg)
+        with pytest.raises(ValueError):
+            ServeEngine(params, plan=other, max_slots=1, max_cache=8)
+        # the matching plan (and plain cfg construction) still work
+        ServeEngine(params, plan=live, max_slots=1, max_cache=8)
+        ServeEngine(params, cfg, max_slots=1, max_cache=8)
+    finally:
+        api.uninstall(cfg)

@@ -11,6 +11,7 @@ from repro.checkpoint import (
     latest_step,
     restore_checkpoint,
     save_checkpoint,
+    sweep_stale_tmp,
 )
 
 
@@ -32,6 +33,40 @@ def test_latest_step_ignores_tmp(tmp_path):
     save_checkpoint(str(tmp_path), 3, _tree())
     os.makedirs(tmp_path / "step_9.tmp0", exist_ok=True)
     assert latest_step(str(tmp_path)) == 3
+
+
+def test_latest_step_ignores_tmp_with_manifest(tmp_path):
+    """A crash AFTER the manifest write but BEFORE the atomic rename leaves
+    a manifest-bearing .tmp dir — it is unpublished and must not count."""
+    save_checkpoint(str(tmp_path), 3, _tree())
+    crashed = tmp_path / "step_9.tmp0"
+    os.makedirs(crashed, exist_ok=True)
+    (crashed / "manifest.json").write_text('{"step": 9}')
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_manager_sweeps_own_stale_tmp_on_startup(tmp_path):
+    """Startup sweeps THIS process's crashed tmp dirs; a multi-host peer's
+    tmp dir (possibly a live in-flight save) is left alone."""
+    save_checkpoint(str(tmp_path), 2, _tree())
+    for name in ("step_5.tmp0", "step_7.tmp0", "step_7.tmp1"):
+        os.makedirs(tmp_path / name, exist_ok=True)
+        (tmp_path / name / "manifest.json").write_text("{}")
+    mgr = CheckpointManager(str(tmp_path), keep=2, process_index=0)
+    left = sorted(os.listdir(tmp_path))
+    assert left == ["step_2", "step_7.tmp1"]   # own tmp swept, peer's kept
+    step, back = mgr.restore_latest(jax.tree.map(jnp.zeros_like, _tree()))
+    assert step == 2 and back is not None
+
+
+def test_sweep_stale_tmp_standalone(tmp_path):
+    os.makedirs(tmp_path / "step_4.tmp0")
+    os.makedirs(tmp_path / "step_4.tmp1")
+    os.makedirs(tmp_path / "step_4")
+    removed = sweep_stale_tmp(str(tmp_path))   # janitor mode: all processes
+    assert sorted(os.path.basename(r) for r in removed) == \
+        ["step_4.tmp0", "step_4.tmp1"]
+    assert os.path.isdir(tmp_path / "step_4")   # published dirs untouched
 
 
 def test_shape_mismatch_raises(tmp_path):
@@ -64,3 +99,23 @@ def test_restore_empty_dir(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     step, back = mgr.restore_latest({"a": jnp.zeros(2)})
     assert step is None and back is None
+
+
+def test_multiprocess_saves_merge_not_clobber(tmp_path):
+    """Two processes publishing the same step must both end up restorable —
+    the second publish merges its shards instead of rmtree'ing the first
+    process's files away."""
+    t0, t1 = _tree(0), _tree(1)
+    save_checkpoint(str(tmp_path), 1, t0, process_index=0)
+    save_checkpoint(str(tmp_path), 1, t1, process_index=1)
+    names = sorted(os.listdir(tmp_path / "step_1"))
+    assert any(n.startswith("proc0_") for n in names)
+    assert any(n.startswith("proc1_") for n in names)
+    back0 = restore_checkpoint(str(tmp_path), 1,
+                               jax.tree.map(jnp.zeros_like, t0),
+                               process_index=0)
+    back1 = restore_checkpoint(str(tmp_path), 1,
+                               jax.tree.map(jnp.zeros_like, t1),
+                               process_index=1)
+    np.testing.assert_array_equal(np.asarray(back0["a"]), np.asarray(t0["a"]))
+    np.testing.assert_array_equal(np.asarray(back1["a"]), np.asarray(t1["a"]))

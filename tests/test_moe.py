@@ -81,3 +81,59 @@ def test_shared_experts_always_on():
     p_no_shared["shared"] = jax.tree.map(jnp.zeros_like, p["shared"])
     y_without, _ = apply_moe(p_no_shared, x, cfg)
     assert float(jnp.abs(y_with - y_without).max()) > 1e-6
+
+
+def test_project_mode_bank_runs_factored_forward_with_dense_grad():
+    """Project-mode WSI injection leaves (L, R) next to each expert bank's
+    dense w: the forward must be the factored product (paper Eq. 9) and the
+    gradient must land on W, not on the injected factors."""
+    from repro.api.plan import resolve_linear_spec
+    from repro.config import WasiConfig
+    from repro.nn.moe import _bank_matmul
+
+    w_cfg = WasiConfig(method="wsi", update_mode="project", rank_align=8)
+    spec = resolve_linear_spec(w_cfg, "moe/w_up", "moe", 16, 24)
+    assert spec.mode == "project"
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    e, c, k = 3, 5, 8
+    p = {"w": jax.random.normal(k1, (e, 24, 16)),
+         "L": jax.random.normal(k2, (e, 24, k)),
+         "R": jax.random.normal(k3, (e, k, 16))}
+    x = jax.random.normal(k4, (e, c, 16))
+    y = _bank_matmul(spec, p, x)
+    ref = jnp.einsum("eck,eok->eco",
+                     jnp.einsum("eci,eki->eck", x, p["R"]), p["L"])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    grads = jax.grad(lambda p_: _bank_matmul(spec, p_, x).sum())(p)
+    assert float(jnp.abs(grads["w"]).max()) > 0
+    assert float(jnp.abs(grads["L"]).max()) == 0  # factors: derived state
+    assert float(jnp.abs(grads["R"]).max()) == 0
+
+
+def test_project_mode_moe_trains_end_to_end():
+    """Full project-mode train step on an MoE arch: WSI states exist for
+    the expert banks (stacked (repeat, E) leading dims) and the update
+    step runs. Regression: _batched previously could not flatten WSIState
+    factors over two leading stack dims."""
+    import dataclasses
+
+    from repro.config import TrainConfig
+    from repro.models.lm import init_lm, lm_loss
+    from repro.train.step import make_train_state, make_train_step
+
+    cfg = _cfg().replace(wasi=dataclasses.replace(
+        _cfg().wasi, method="wsi", update_mode="project", rank_align=8))
+    params = init_lm(KEY, cfg)
+    tcfg = TrainConfig(steps=1, checkpoint_every=0)
+    st = make_train_state(KEY, params, cfg, tcfg)
+    assert any("experts" in k for k in st.wsi)
+    step = jax.jit(make_train_step(lm_loss, cfg, tcfg))
+    b = {"tokens": jnp.zeros((2, 8), jnp.int32),
+         "labels": jnp.ones((2, 8), jnp.int32)}
+    st2, m = step(st, b)
+    assert np.isfinite(float(m["loss"]))
+    moved = any(not np.array_equal(np.asarray(a), np.asarray(c))
+                for a, c in zip(jax.tree.leaves(st.params),
+                                jax.tree.leaves(st2.params)))
+    assert moved                           # gradient landed on dense W
