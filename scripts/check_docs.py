@@ -1,0 +1,154 @@
+#!/usr/bin/env python
+"""Docs checks for CI: markdown link integrity + EXECUTABLE snippets.
+
+Two passes over the repo's markdown (supersedes check_md_links.py):
+
+1. **Links** — every relative link/image target in README + root *.md +
+   docs/**/*.md must exist on disk (anchors stripped; external
+   http(s)/mailto links skipped — CI must not depend on network; absolute
+   paths flagged, they break on clones).
+
+2. **Snippets** — every fenced ```python block in docs/**/*.md is extracted
+   and EXECUTED. Blocks within one page are concatenated in order and run
+   as one script in a fresh subprocess (so a page reads like a session:
+   imports at the top, later blocks build on earlier ones), with
+   PYTHONPATH=src:. and CWD=repo root — exactly the environment the docs
+   tell readers to use. A page whose snippets exit non-zero fails CI, so
+   documented code cannot rot.
+
+   Opt-outs are deliberate and visible: a fence tagged ``python no-run``
+   is extracted but not executed (use sparingly — e.g. TPU-only code this
+   CPU host cannot run). Plain ``python`` always runs. Keep snippets
+   smoke-sized: the whole docs job budget is minutes, not hours.
+
+Exit code 1 on any broken link or failing snippet.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import subprocess
+import sys
+import tempfile
+import os
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+FENCE_RE = re.compile(r"^```(\S+(?:[ \t]+\S+)*)?[ \t]*$")
+ROOT = Path(__file__).resolve().parent.parent
+SNIPPET_TIMEOUT_S = 600
+
+
+# ---------------------------------------------------------------------------
+# Pass 1: links
+# ---------------------------------------------------------------------------
+
+def md_files() -> list[Path]:
+    files = [p for p in ROOT.glob("*.md")]
+    files += sorted((ROOT / "docs").glob("**/*.md"))
+    return files
+
+
+def check_links(path: Path) -> list[str]:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        if target.startswith("/"):
+            errors.append(f"{path.relative_to(ROOT)}: absolute link {target}")
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (path.parent / rel).exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link {target}")
+    return errors
+
+
+# ---------------------------------------------------------------------------
+# Pass 2: snippets
+# ---------------------------------------------------------------------------
+
+def extract_snippets(path: Path) -> list[tuple[int, str, bool]]:
+    """[(start_line, source, runnable)] for every ```python fence."""
+    out = []
+    lines = path.read_text(encoding="utf-8").splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE_RE.match(lines[i])
+        if m and m.group(1):
+            info = m.group(1).split()
+            if info[0] == "python":
+                runnable = "no-run" not in info[1:]
+                body, start = [], i + 1
+                i += 1
+                while i < len(lines) and not lines[i].startswith("```"):
+                    body.append(lines[i])
+                    i += 1
+                out.append((start + 1, "\n".join(body), runnable))
+        i += 1
+    return out
+
+
+def run_page_snippets(path: Path) -> list[str]:
+    """Concatenate a page's runnable ```python blocks and execute them as
+    one script in a subprocess. Returns error strings (empty = pass)."""
+    snippets = extract_snippets(path)
+    runnable = [(ln, src) for ln, src, run in snippets if run]
+    if not runnable:
+        return []
+    parts = [f"# --- {path.name}:{ln} ---\n{src}" for ln, src in runnable]
+    script = "\n\n".join(parts) + "\n"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"src:.:{env.get('PYTHONPATH', '')}".rstrip(":")
+    with tempfile.NamedTemporaryFile("w", suffix=f"_{path.stem}.py",
+                                     delete=False) as f:
+        f.write(script)
+        tmp = f.name
+    try:
+        proc = subprocess.run([sys.executable, tmp], cwd=ROOT, env=env,
+                              capture_output=True, text=True,
+                              timeout=SNIPPET_TIMEOUT_S)
+    except subprocess.TimeoutExpired:
+        return [f"{path.relative_to(ROOT)}: snippets timed out "
+                f"(> {SNIPPET_TIMEOUT_S}s) — keep docs code smoke-sized"]
+    finally:
+        os.unlink(tmp)
+    if proc.returncode != 0:
+        tail = "\n".join(proc.stderr.strip().splitlines()[-12:])
+        return [f"{path.relative_to(ROOT)}: snippets failed "
+                f"(exit {proc.returncode}):\n{tail}"]
+    return []
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--links-only", action="store_true")
+    ap.add_argument("--snippets-only", action="store_true")
+    args = ap.parse_args()
+
+    errors: list[str] = []
+    if not args.snippets_only:
+        files = md_files()
+        for f in files:
+            errors += check_links(f)
+        print(f"[docs] link check: {len(files)} files, "
+              f"{len(errors)} broken link(s)")
+    if not args.links_only:
+        pages = sorted((ROOT / "docs").glob("**/*.md"))
+        for page in pages:
+            n = len([1 for _, _, run in extract_snippets(page) if run])
+            errs = run_page_snippets(page)
+            errors += errs
+            status = "FAIL" if errs else "ok"
+            print(f"[docs] snippets: {page.relative_to(ROOT)} "
+                  f"({n} block(s)) {status}")
+    for e in errors:
+        print(f"[docs] {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

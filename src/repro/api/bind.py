@@ -109,7 +109,28 @@ def apply(spec: LinearSpec, p: dict, x: jax.Array, wasi: WasiConfig,
             return asi_project(jax.lax.stop_gradient(x_), state), state
         return asi_step(jax.lax.stop_gradient(x_), state)
 
-    if spec.mode == "project" and "L" in p:
+    if is_quantized(p):
+        # int8 deployment path (plan.quantized + convert.quantize): weights
+        # are {L,sL,R,sR} / {w,sW}; scales fold into the matmul, and the
+        # fused int8 kernel keeps factors VMEM-resident on TPU
+        if spec.quant is None:
+            raise ValueError(
+                f"site {spec.name}: params are quantized but the spec is "
+                "not — serve under plan.quantized(...) (docs/deployment.md)")
+        if state is not None:
+            raise ValueError(
+                f"site {spec.name}: quantized params are serve-only; ASI "
+                "states cannot thread through an int8 site")
+        from repro.kernels.ops import dense_matmul_q8, lowrank_matmul_q8
+        if "L" in p:
+            y = lowrank_matmul_q8(x, p["R"], p["sR"], p["L"], p["sL"])
+        else:
+            y = dense_matmul_q8(x, p["w"], p["sW"])
+    elif spec.quant is not None:
+        raise ValueError(
+            f"site {spec.name}: plan stamps quant={spec.quant!r} but the "
+            "params are not packed — run convert.quantize(params, plan)")
+    elif spec.mode == "project" and "L" in p:
         # factored forward, dense-W gradient (paper Eq. 9-11); factors come
         # from the per-step WSI injection or a converted checkpoint
         if state is not None:
@@ -161,6 +182,12 @@ def is_linear_params(v) -> bool:
     return isinstance(v, dict) and ("w" in v or "L" in v)
 
 
+def is_quantized(p: dict) -> bool:
+    """Is this linear dict in an int8-packed layout (quant/quantize.py:
+    scales ride next to the int8 payload as sL/sR/sW)?"""
+    return "sL" in p or "sW" in p
+
+
 def dense_weight(v):
     """The dense (…, O, I) weight of a dense-layout linear dict, else
     None (used by plan calibration, which only reads dense trees)."""
@@ -194,19 +221,56 @@ def infer_spec(p: dict, wasi: WasiConfig, *, role: str = "mlp",
                       out_dim=int(out_dim), mode=mode, rank=int(rank),
                       bias="b" in p,
                       kernel="fused_lowrank" if mode == "factored"
-                      else "einsum")
+                      else "einsum",
+                      quant="int8" if is_quantized(p) else None)
 
 
 # ---------------------------------------------------------------------------
 # Structure-walking helpers (the key-dispatch monopoly)
 # ---------------------------------------------------------------------------
 
+def iter_linear_dicts(tree, prefix: str = ""):
+    """Yield (path, linear_dict) for every linear param dict in a tree —
+    the sanctioned walk for consumers that only need per-site accounting
+    (utils/memprof.py), never dispatch."""
+    if isinstance(tree, dict):
+        if is_linear_params(tree):
+            yield prefix, tree
+            return
+        for k, v in tree.items():
+            yield from iter_linear_dicts(v, f"{prefix}/{k}" if prefix else k)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from iter_linear_dicts(v, f"{prefix}/{i}" if prefix else str(i))
+
+
+def linear_param_bytes(p: dict) -> dict:
+    """Storage of one linear dict, split by payload kind:
+    {"weights": .., "scales": .., "bias": ..} bytes. Quantized layouts show
+    their packing win in the weights/scales split."""
+    import numpy as np
+
+    def nbytes(a) -> int:
+        return int(np.prod(a.shape)) * np.dtype(a.dtype).itemsize
+
+    out = {"weights": 0, "scales": 0, "bias": 0}
+    for k, v in p.items():
+        if k in ("w", "L", "R"):
+            out["weights"] += nbytes(v)
+        elif k in ("sW", "sL", "sR"):
+            out["scales"] += nbytes(v)
+        elif k == "b":
+            out["bias"] += nbytes(v)
+    return out
+
+
 def map_factored(params, fn):
     """Apply fn(WSIState) -> WSIState to every {L, R} factor pair in a
     param tree (factored-mode WSI refresh)."""
     def walk(node):
         if isinstance(node, dict):
-            if "L" in node and "R" in node and "w" not in node:
+            if "L" in node and "R" in node and "w" not in node \
+                    and "sL" not in node:  # int8 factors are serve-frozen
                 st = fn(WSIState(L=node["L"], R=node["R"]))
                 out = dict(node)
                 out["L"], out["R"] = st.L, st.R

@@ -6,7 +6,10 @@ the paper's *project* mode ({"w","L","R"}: dense weight kept, factors
 carried) which the legacy ``init_linear_from_dense`` could not emit.
 ``densify(params, plan)`` is the inverse (L@R for factored sites, factor
 drop for project sites), so a trained factored checkpoint exports to a
-dense one any framework can load.
+dense one any framework can load. ``quantize(params, plan)`` packs the
+quant-stamped sites of a deployment plan (``plan.quantized("int8")``) to
+int8 + per-channel scales — the last conversion before edge serving
+(docs/deployment.md).
 
 The plan itself serializes into the checkpoint manifest
 (``checkpoint.save_checkpoint(..., plan=...)``), making a checkpoint
@@ -19,7 +22,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.api.bind import is_linear_params, linear_dims, linear_layout
+from repro.api.bind import (
+    is_linear_params,
+    is_quantized,
+    linear_dims,
+    linear_layout,
+)
 from repro.api.plan import LEAF_TO_SPEC, LinearSpec, SubspacePlan
 from repro.checkpoint.ckpt import (
     latest_step,
@@ -59,7 +67,11 @@ def factorize_linear(w, spec: LinearSpec, bias=None) -> dict:
 
 def densify_linear(p: dict, spec: LinearSpec) -> dict:
     """Inverse of :func:`factorize_linear` (rank-truncation is lossy for
-    factored sites, exact for project/dense)."""
+    factored sites, exact for project/dense; int8 sites dequantize first,
+    lossy by the quantization error)."""
+    if is_quantized(p):
+        from repro.quant.quantize import dequantize_linear
+        p = dequantize_linear(p, spec)
     out: dict = {}
     if linear_layout(p) == "factored":
         out["w"] = jnp.einsum("...ok,...ki->...oi", p["L"], p["R"]).astype(
@@ -100,9 +112,9 @@ def factorize(dense_params, plan: SubspacePlan):
     {w,L,R}, dense passthrough). Generalizes ``init_linear_from_dense`` to
     whole models and to project mode."""
     def one(spec, p):
-        if linear_layout(p) != "dense":
-            raise ValueError(f"site {spec.name} already factored; "
-                             "factorize expects a dense tree")
+        if linear_layout(p) != "dense" or is_quantized(p):
+            raise ValueError(f"site {spec.name} already factored or "
+                             "quantized; factorize expects a dense f32 tree")
         return factorize_linear(p["w"], spec, bias=p.get("b"))
 
     return _walk_linears(dense_params, plan, one)
@@ -111,6 +123,31 @@ def factorize(dense_params, plan: SubspacePlan):
 def densify(params, plan: SubspacePlan):
     """Any plan-layout param tree -> fully dense ({"w"} everywhere)."""
     return _walk_linears(params, plan, lambda spec, p: densify_linear(p, spec))
+
+
+def quantize(params, plan: SubspacePlan):
+    """Pack every quant-stamped site to int8 + per-channel f32 scales.
+
+    ``plan`` must be the deployment view (``plan.quantized("int8")``) —
+    sites whose spec carries no ``quant`` pass through untouched, so the
+    same walk serves mixed-precision plans. Layouts after packing
+    (quant/quantize.py): factored {L,sL,R,sR}, dense {w,sW}; biases stay
+    f32. Save the result with ``plan=plan`` and the checkpoint is a
+    self-describing int8 deployment artifact
+    (``ServeEngine.from_checkpoint`` needs nothing else in hand)."""
+    from repro.quant.quantize import quantize_linear
+
+    return _walk_linears(params, plan,
+                         lambda spec, p: quantize_linear(p, spec))
+
+
+def dequantize(params, plan: SubspacePlan):
+    """Inverse of :func:`quantize` (lossy by the quantization error):
+    int8 sites back to their f32 layouts, everything else untouched."""
+    from repro.quant.quantize import dequantize_linear
+
+    return _walk_linears(params, plan,
+                         lambda spec, p: dequantize_linear(p, spec))
 
 
 # ---------------------------------------------------------------------------

@@ -97,6 +97,11 @@ class LinearSpec:
     # Advisory: does the single-launch fused backward fit the VMEM budget at
     # the standard 128-row tile (kernels/ops._bwd_fits_vmem)? None for dense.
     bwd_fits_vmem: bool | None = None
+    # Deployment packing of this site's weights: None (f32 master) or
+    # "int8" (per-channel absmax, quant/quantize.py). Stamped by
+    # SubspacePlan.quantized(), never by policy resolution — quantization
+    # is a deployment decision, not a training one.
+    quant: str | None = None
 
     @property
     def factored_params(self) -> bool:
@@ -231,6 +236,23 @@ class SubspacePlan:
     def by_role(self, role: str) -> tuple[LinearSpec, ...]:
         return tuple(s for s in self.specs if s.role == role)
 
+    def quantized(self, fmt: str = "int8") -> "SubspacePlan":
+        """The deployment view of this plan: every packable site (factored
+        {L,R} pairs and dense 2D weights) stamped ``quant=fmt``. Project
+        sites keep their training layout — they carry the dense W by
+        definition; ``convert.factorize`` them first to deploy quantized.
+        Pair with ``convert.quantize(params, plan)``; the stamped plan
+        rides in checkpoint manifests so ``ServeEngine.from_checkpoint``
+        serves int8 with no config in hand (docs/deployment.md)."""
+        specs = tuple(dataclasses.replace(s, quant=fmt)
+                      if s.mode in ("factored", "dense") else s
+                      for s in self.specs)
+        return dataclasses.replace(self, specs=specs)
+
+    @property
+    def is_quantized(self) -> bool:
+        return any(s.quant is not None for s in self.specs)
+
     def summary(self) -> str:
         """Human-readable one-line-per-site table."""
         lines = [f"SubspacePlan[{self.model.name}] method={self.wasi.method} "
@@ -242,6 +264,8 @@ class SubspacePlan:
                 extra += f" asi={list(s.asi_ranks)}"
             if s.bwd_fits_vmem is not None:
                 extra += f" bwd={'fused' if s.bwd_fits_vmem else 'xla'}"
+            if s.quant is not None:
+                extra += f" quant={s.quant}"
             lines.append(f"  {s.name:16s} {s.role:9s} "
                          f"({s.in_dim}->{s.out_dim}) {s.mode:8s}"
                          f" {s.kernel}{extra}")

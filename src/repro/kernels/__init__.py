@@ -12,6 +12,9 @@ Kernels:
                      linear (training and serving) routes through it.
                      Training adds a sketch-saving single-launch backward
                      (dx, dL, dR with dh = dy L VMEM-resident)
+  quant            — FUSED int8 variant for deployment: int8 L/R factors
+                     stay VMEM-resident, per-channel scales fold into the
+                     f32 accumulator, no dequantized weight materialized
   gram             — tall-skinny Y^T Y reduction (CholeskyQR stage of WSI/ASI)
   qr               — FUSED CholeskyQR: Gram -> in-kernel Cholesky/triangular
                      inverse -> apply, plus the Q^T Y mix matrix, one launch
@@ -26,11 +29,14 @@ See docs/kernels.md for grid/BlockSpec conventions and the interpret-mode
 from repro.kernels.ops import (
     cholesky_qr_mix,
     choleskyqr_fused,
+    dense_matmul_q8,
     flash_attention,
     gram,
     lowrank_bwd_fused,
     lowrank_matmul,
     lowrank_matmul_fused,
+    lowrank_matmul_q8,
+    lowrank_matmul_q8_fused,
     lowrank_matmul_unfused,
     matmul,
 )

@@ -17,6 +17,7 @@ from repro.kernels.gram import gram_tiled
 from repro.kernels.lowrank import lowrank_bwd_tiled, lowrank_fused_tiled
 from repro.kernels.matmul_tiled import matmul_tiled
 from repro.kernels.qr import choleskyqr_tiled
+from repro.kernels.quant import lowrank_q8_tiled
 
 INTERPRET = jax.default_backend() != "tpu"
 
@@ -127,6 +128,48 @@ def lowrank_matmul_unfused(x, r_factor, l_factor, *, bm: int = 128,
     h = matmul_tiled(x2, r_factor.T, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)
     y = matmul_tiled(h, l_factor.T, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)
     return y.reshape(lead + (l_factor.shape[0],))
+
+
+@jax.jit
+def lowrank_matmul_q8_fused(x, r_q, r_s, l_q, l_s):
+    """The fused int8 Pallas kernel, unconditionally (tests/benchmarks).
+    x (..., I); Rq int8 (K, I) + sR f32 (K,); Lq int8 (O, K) + sL f32 (O,)
+    -> (..., O). One launch; int8 factors stay VMEM-resident, scales fold
+    into the f32 accumulator, no dequantized weight is materialized."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = lowrank_q8_tiled(x2, r_q.T, r_s, l_q.T, l_s, interpret=INTERPRET)
+    return y.reshape(lead + (l_q.shape[0],))
+
+
+@jax.jit
+def lowrank_matmul_q8(x, r_q, r_s, l_q, l_s):
+    """Quantized factored linear: y = ((x Rq^T) * sR) Lq^T * sL — the
+    public entry every int8-deployed factored linear routes through
+    (api/bind.py dispatches here when the plan stamps ``quant="int8"``).
+
+    On TPU this is the fused int8 kernel. Off-TPU the scale-folded einsum
+    pair runs instead (same math, same f32 accumulation) — the per-channel
+    scales multiply the rank-K intermediate and the output, so no
+    dequantized O×I weight ever exists on either path."""
+    if INTERPRET:
+        xf = x.astype(jnp.float32)
+        h = jnp.einsum("...i,ki->...k", xf, r_q.astype(jnp.float32)) * r_s
+        y = jnp.einsum("...k,ok->...o", h, l_q.astype(jnp.float32)) * l_s
+        return y.astype(x.dtype)
+    return lowrank_matmul_q8_fused(x, r_q, r_s, l_q, l_s)
+
+
+@jax.jit
+def dense_matmul_q8(x, w_q, w_s):
+    """Quantized DENSE linear: y = (x Wq^T) * sW. Kept as a scaled einsum
+    on every backend — XLA fuses the int8->f32 convert into the matmul, so
+    the dequantized weight lives only in registers/VMEM, never HBM; a
+    dedicated kernel would buy nothing the lowrank one doesn't already
+    demonstrate (dense sites are the untreated minority of a WASI plan)."""
+    xf = x.astype(jnp.float32)
+    y = jnp.einsum("...i,oi->...o", xf, w_q.astype(jnp.float32)) * w_s
+    return y.astype(x.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bm",))

@@ -1,0 +1,100 @@
+"""Fused INT8 low-rank matmul: y = (x R^T) L^T with int8 factors, one launch.
+
+Deployment variant of ``lowrank.py``. The factors arrive packed —
+R int8 (K, I) with per-row scales sR (K,), L int8 (O, K) with per-row
+scales sL (O,) (symmetric per-channel absmax, quant/quantize.py) — and the
+kernel NEVER materializes a dequantized weight:
+
+    grid (M/bm, O/bn), O innermost. At j == 0 the row block's projection
+    is computed straight off the int8 tile, h = (x @ Rq^T) * sR, into an
+    f32 VMEM scratch (the int8->f32 convert happens on the VMEM-resident
+    tile, feeding the MXU directly); every j then expands
+    y_ij = (h @ Lq^T_j) * sL_j from the same scratch.
+
+Why this is the right shape for edge serving: the factored pair already
+cut weight FLOPs to the rank-K subspace, so a decode-step linear is
+bandwidth-bound on factor bytes — int8 packing cuts that HBM traffic 4x,
+and folding the scales into the f32 accumulator (one VPU multiply per
+output tile) keeps the dequantization entirely on-chip. The per-channel
+scale vectors ride as (1, C) f32 rows, blocked with their factor's output
+axis.
+
+Padding is inert: I/K/O pad to lane multiples (128) and M to bm with
+zeros; padded int8 columns/rows are zero and padded scale entries are
+zero, so they contribute nothing to either contraction and the padded
+output columns are sliced off. Accuracy: both contractions accumulate in
+f32 (`preferred_element_type`), so the only error is the quantization
+itself — the off-TPU fallback (kernels/ops.py) computes the identical
+scale-folded einsum pair and tests pin the two together.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lowrank_q8_kernel(x_ref, rt_ref, rs_ref, lt_ref, ls_ref, o_ref, h_ref):
+    # first O block of this row block: project off the int8 tile once,
+    # folding R's per-channel scales into the f32 scratch
+    @pl.when(pl.program_id(1) == 0)
+    def _project():
+        h_ref[...] = jnp.dot(x_ref[...].astype(jnp.float32),
+                             rt_ref[...].astype(jnp.float32),
+                             preferred_element_type=jnp.float32) * rs_ref[...]
+
+    # every O block: expand from the VMEM-resident intermediate, rescaling
+    # the f32 accumulator by L's per-channel scales for this column block
+    o_ref[...] = (jnp.dot(h_ref[...], lt_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+                  * ls_ref[...]).astype(o_ref.dtype)
+
+
+def lowrank_q8_tiled(x: jax.Array, rt: jax.Array, rs: jax.Array,
+                     lt: jax.Array, ls: jax.Array, *, bm: int = 128,
+                     bn: int = 128, out_dtype=None, interpret: bool = True):
+    """y (M, O) = ((x (M, I) @ rt (I, K)) * rs (K,)) @ lt (K, O) * ls (O,).
+
+    ``rt``/``lt`` are int8 transposed factors, ``rs``/``ls`` their f32
+    per-channel scales. Pads ragged shapes (M to bm, O to bn, I/K to lane
+    multiples of 128, scales zero-padded) and slices the output back.
+    """
+    m, i = x.shape
+    i2, k = rt.shape
+    k2, n = lt.shape
+    assert i == i2 and k == k2 and rs.shape == (k,) and ls.shape == (n,), (
+        x.shape, rt.shape, rs.shape, lt.shape, ls.shape)
+    out_dtype = out_dtype or x.dtype
+    bm, bn = min(bm, m), min(bn, n)
+
+    pm, pn = (-m) % bm, (-n) % bn
+    pi, pk = (-i) % 128, (-k) % 128
+    if pm or pi:
+        x = jnp.pad(x, ((0, pm), (0, pi)))
+    if pi or pk:
+        rt = jnp.pad(rt, ((0, pi), (0, pk)))
+    if pk or pn:
+        lt = jnp.pad(lt, ((0, pk), (0, pn)))
+    rs2 = jnp.pad(rs.astype(jnp.float32), (0, pk)).reshape(1, -1)
+    ls2 = jnp.pad(ls.astype(jnp.float32), (0, pn)).reshape(1, -1)
+    M, I = x.shape
+    K = rt.shape[1]
+    N = lt.shape[1]
+
+    out = pl.pallas_call(
+        _lowrank_q8_kernel,
+        grid=(M // bm, N // bn),
+        in_specs=[
+            pl.BlockSpec((bm, I), lambda i_, j: (i_, 0)),
+            pl.BlockSpec((I, K), lambda i_, j: (0, 0)),
+            pl.BlockSpec((1, K), lambda i_, j: (0, 0)),
+            pl.BlockSpec((K, bn), lambda i_, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i_, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i_, j: (i_, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, K), jnp.float32)],
+        interpret=interpret,
+    )(x, rt, rs2, lt, ls2)
+    return out[:m, :n]

@@ -72,14 +72,24 @@ def main():
     ap.add_argument("--ckpt", default="",
                     help="serve from a plan-bearing checkpoint dir (the "
                          "manifest's SubspacePlan replaces --arch/--wasi)")
+    ap.add_argument("--quant", default="", choices=["", "int8"],
+                    help="deploy-quantize the weights before serving "
+                         "(per-channel absmax int8 factors; a checkpoint "
+                         "that is already quant-stamped needs no flag)")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
     slots = args.max_slots or min(args.batch, 4)
     max_cache = args.prompt_len + args.tokens + 1
     if args.ckpt:
-        engine = ServeEngine.from_checkpoint(args.ckpt, max_slots=slots,
-                                             max_cache=max_cache)
+        params, plan, _ = api.convert.load_checkpoint(args.ckpt)
+        if plan is None:
+            raise SystemExit(f"checkpoint at {args.ckpt} carries no plan")
+        if args.quant and not plan.is_quantized:
+            plan = plan.quantized(args.quant)
+            params = api.convert.quantize(params, plan)
+        engine = ServeEngine(params, plan=plan, max_slots=slots,
+                             max_cache=max_cache)
         cfg = engine.cfg
     else:
         cfg = configs.get(args.arch) if args.full \
@@ -89,6 +99,10 @@ def main():
                 wasi=dataclasses.replace(cfg.wasi, method=args.wasi))
         plan = api.install(api.resolve(cfg))
         params = init_lm(key, cfg, jnp.dtype(cfg.dtype))
+        if args.quant:
+            api.uninstall(cfg)          # the engine installs the quant view
+            plan = plan.quantized(args.quant)
+            params = api.convert.quantize(params, plan)
         engine = ServeEngine(params, plan=plan, max_slots=slots,
                              max_cache=max_cache)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
@@ -99,8 +113,10 @@ def main():
     engine.run()
     dt = time.time() - t0
     s = engine.summary()
-    print(f"[serve] arch={cfg.name} wasi={cfg.wasi.method} slots={slots} "
-          f"requests={args.batch} wall={dt:.2f}s")
+    qtag = " quant=int8" if engine.quantized else ""
+    print(f"[serve] arch={cfg.name} wasi={cfg.wasi.method}{qtag} "
+          f"slots={slots} requests={args.batch} wall={dt:.2f}s "
+          f"weights={s['weight_mib']:.2f}MiB")
     print(f"[serve] prefill {s['prefill_tokens']} tok "
           f"({s['prefill_tok_s']:.1f} tok/s, one forward per admission "
           f"group) | decode {s['decode_tokens']} tok "

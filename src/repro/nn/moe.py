@@ -46,6 +46,19 @@ def _bank_matmul(spec: LinearSpec, p: dict, x: jax.Array) -> jax.Array:
     DESIGN.md §5). In project mode the per-step WSI injection leaves
     (L, R) next to each bank's dense w: run the paper's factored forward
     with the exact dense-W gradient, vmapped over the expert axis."""
+    if bind.is_quantized(p):
+        # int8 deployment banks (convert.quantize): per-expert per-channel
+        # scales fold into the f32 accumulators, same as the 2D q8 routes
+        xf = x.astype(jnp.float32)
+        if "L" in p:
+            h = jnp.einsum("eci,eki->eck", xf,
+                           p["R"].astype(jnp.float32)) * p["sR"][:, None, :]
+            y = jnp.einsum("eck,eok->eco", h,
+                           p["L"].astype(jnp.float32)) * p["sL"][:, None, :]
+        else:  # dense banks pack to {w, sW} (untreated moe role)
+            y = jnp.einsum("eci,eoi->eco", xf,
+                           p["w"].astype(jnp.float32)) * p["sW"][:, None, :]
+        return y.astype(x.dtype)
     if spec.mode == "factored":
         h = jnp.einsum("eci,eki->eck", x, p["R"])
         return jnp.einsum("eck,eok->eco", h, p["L"])

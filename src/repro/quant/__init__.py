@@ -1,0 +1,34 @@
+"""Int8 deployment quantization of subspace factors.
+
+The serve half of the paper's edge claim: the factored forward already
+shrinks weight *compute* to the rank-K subspace; packing the L/R factors
+(and any remaining dense 2D weights) to int8 with per-channel f32 scales
+compounds the subspace compression exactly where on-device inference needs
+it — weight bytes and HBM traffic drop ~4x on top of the K(O+I)/(O*I)
+factor win, with no dequantized O×I tensor ever materialized
+(kernels/quant.py keeps the int8 factors resident in VMEM).
+
+Entry points: ``SubspacePlan.quantized("int8")`` stamps the plan,
+``api.convert.quantize(params, plan)`` packs the params, and
+``ServeEngine.from_checkpoint`` serves a quant-stamped checkpoint with no
+config in hand. See docs/deployment.md for the lifecycle.
+"""
+from repro.quant.quantize import (
+    QMAX,
+    dequantize_linear,
+    dequantize_tensor,
+    error_report,
+    format_error_report,
+    quantize_linear,
+    quantize_tensor,
+)
+
+__all__ = [
+    "QMAX",
+    "dequantize_linear",
+    "dequantize_tensor",
+    "error_report",
+    "format_error_report",
+    "quantize_linear",
+    "quantize_tensor",
+]

@@ -1,0 +1,148 @@
+"""Symmetric per-channel absmax int8 quantization of linear-site weights.
+
+Scheme: for a weight whose LAST axis is the contraction axis — L (…, O, K),
+R (…, K, I), dense w (…, O, I) — each output channel (the second-to-last
+axis row) gets one f32 scale ``s = absmax / 127`` and the row is packed to
+``q = clip(round(w / s), -127, 127)`` int8. Symmetric (no zero point)
+because the matmul then needs only a per-channel rescale of the f32
+accumulator; per-channel because one saturated row must not crush the
+resolution of every other row. Leading stack dims (scan repeats, expert
+banks) quantize independently for free: the reduction is over the last
+axis only.
+
+Quantized param layouts (scales ride NEXT TO the int8 payload so a
+quantized tree checkpoints/restores like any other pytree):
+
+    factored: {"L": int8 (…, O, K), "sL": f32 (…, O),
+               "R": int8 (…, K, I), "sR": f32 (…, K) [, "b" f32]}
+    dense:    {"w": int8 (…, O, I), "sW": f32 (…, O) [, "b" f32]}
+
+Biases stay f32 (O-sized — noise next to the weight payload). Project-mode
+sites keep their training layout: they carry the dense W by definition, so
+deployment should ``convert.factorize`` them first.
+
+This module does the math; which sites quantize is the plan's decision
+(``SubspacePlan.quantized``), the tree walk is ``api.convert.quantize``,
+and dispatch-by-layout stays ``api.bind``'s monopoly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+QMAX = 127.0
+
+#: weight leaf key -> its scale key (the quantized-layout contract)
+SCALE_KEY = {"L": "sL", "R": "sR", "w": "sW"}
+
+
+def quantize_tensor(w) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """w (…, C, D) -> (q int8 (…, C, D), scale f32 (…, C)): symmetric
+    per-channel absmax over the last (contraction) axis. All-zero channels
+    get scale 1 so dequantization stays exact (0 * 1 = 0)."""
+    w = jnp.asarray(w)
+    absmax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-1)
+    scale = jnp.where(absmax > 0, absmax / QMAX, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale[..., None]),
+                 -QMAX, QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_tensor(q, scale) -> jnp.ndarray:
+    """Reference inverse: f32 (…, C, D) = q * scale[…, None]. The serve
+    path never calls this on a whole weight — kernels/quant.py folds the
+    scales into the accumulator instead."""
+    return q.astype(jnp.float32) * jnp.asarray(scale)[..., None]
+
+
+def quantize_linear(p: dict, spec) -> dict:
+    """One linear param dict -> its quantized layout per ``spec.quant``.
+    Passthrough when the spec carries no quant format or the layout cannot
+    pack (project mode); raises on an already-quantized dict."""
+    from repro.api.bind import is_quantized, linear_layout
+
+    if is_quantized(p):
+        raise ValueError(f"site {spec.name} is already quantized")
+    if spec.quant is None or linear_layout(p) == "project":
+        return p
+    if spec.quant != "int8":
+        raise ValueError(f"unknown quant format {spec.quant!r}")
+    out: dict = {}
+    for key, v in p.items():
+        if key in SCALE_KEY:
+            out[key], out[SCALE_KEY[key]] = quantize_tensor(v)
+        else:
+            out[key] = v
+    return out
+
+
+def dequantize_linear(p: dict, spec=None) -> dict:
+    """Inverse of :func:`quantize_linear`: back to the f32 layout (lossy —
+    the round-trip error is what :func:`error_report` measures)."""
+    from repro.api.bind import is_quantized
+
+    if not is_quantized(p):
+        return p
+    out = {}
+    for key, v in p.items():
+        if key in SCALE_KEY and SCALE_KEY[key] in p:
+            out[key] = dequantize_tensor(v, p[SCALE_KEY[key]])
+        elif key not in SCALE_KEY.values():
+            out[key] = v
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Error reporting (the docs/deployment.md tradeoff table)
+# ---------------------------------------------------------------------------
+
+def _tensor_report(name: str, tensor_key: str, w) -> dict:
+    q, s = quantize_tensor(w)
+    back = np.asarray(dequantize_tensor(q, s))
+    w = np.asarray(w, np.float32)
+    denom = float(np.linalg.norm(w))
+    rel = float(np.linalg.norm(w - back)) / max(denom, 1e-30)
+    return {"site": name, "tensor": tensor_key,
+            "rel_err": rel,
+            "max_abs_err": float(np.max(np.abs(w - back))),
+            "f32_bytes": int(w.size) * 4,
+            "q8_bytes": int(w.size) + int(np.asarray(s).size) * 4}
+
+
+def error_report(params, plan) -> list[dict]:
+    """Per-site, per-tensor quantization error of ``params`` under the
+    quant-stamped ``plan``: one record per weight leaf that would pack —
+    {site, tensor, rel_err (Frobenius), max_abs_err, f32_bytes, q8_bytes}.
+    ``params`` stay untouched (the report quantizes copies)."""
+    from repro.api.bind import is_quantized, linear_layout
+    from repro.api.convert import _walk_linears
+
+    records: list[dict] = []
+
+    def one(spec, p):
+        if spec.quant is not None and not is_quantized(p) \
+                and linear_layout(p) != "project":
+            for key in SCALE_KEY:
+                if key in p:
+                    records.append(_tensor_report(spec.name, key, p[key]))
+        return p
+
+    _walk_linears(params, plan, one)
+    return records
+
+
+def format_error_report(records: list[dict]) -> str:
+    """Markdown table over :func:`error_report` records plus a totals row."""
+    lines = ["| site | tensor | rel err | max abs err | f32 bytes | q8 bytes |",
+             "|---|---|---|---|---|---|"]
+    for r in records:
+        lines.append(f"| {r['site']} | {r['tensor']} | {r['rel_err']:.2e} "
+                     f"| {r['max_abs_err']:.2e} | {r['f32_bytes']} "
+                     f"| {r['q8_bytes']} |")
+    f32 = sum(r["f32_bytes"] for r in records)
+    q8 = sum(r["q8_bytes"] for r in records)
+    if records:
+        worst = max(r["rel_err"] for r in records)
+        lines.append(f"| **total** | | worst {worst:.2e} | "
+                     f"| {f32} | {q8} ({f32 / max(q8, 1):.2f}x smaller) |")
+    return "\n".join(lines)

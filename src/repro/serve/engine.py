@@ -109,6 +109,12 @@ class ServeEngine:
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_cache = max_cache
+        # weight-storage accounting: an int8 deployment (plan.quantized +
+        # convert.quantize) serves through the same engine; summary() then
+        # reports the packed linear-weight bytes next to throughput
+        self.quantized = self.plan.is_quantized
+        from repro.utils.memprof import model_weight_bytes
+        self.weight_report = model_weight_bytes(params)
         self.buckets = tuple(sorted(buckets))
         self.caches = init_lm_cache(cfg, max_slots, max_cache,
                                     dtype=jnp.dtype(cfg.dtype))
@@ -147,7 +153,9 @@ class ServeEngine:
                         **engine_kw) -> "ServeEngine":
         """Build an engine from a plan-bearing checkpoint — no config in
         hand. The manifest's SubspacePlan carries the ModelConfig and the
-        per-site subspace layout the stored params use (api/convert.py)."""
+        per-site subspace layout the stored params use (api/convert.py) —
+        including quant stamps, so an int8 checkpoint saved via
+        ``convert.quantize`` serves quantized with zero extra flags."""
         from repro.api.convert import load_checkpoint
 
         params, plan, _ = load_checkpoint(ckpt_dir, step)
@@ -273,4 +281,7 @@ class ServeEngine:
         s["prefill_tok_s"] = s["prefill_tokens"] / max(s["prefill_s"], 1e-9)
         s["decode_tok_s"] = s["decode_tokens"] / max(s["decode_s"], 1e-9)
         s["requests_s"] = s["completed"] / max(s["wall_s"], 1e-9)
+        s["weight_bytes"] = self.weight_report["total_bytes"]
+        s["weight_mib"] = self.weight_report["total_bytes"] / 2**20
+        s["quantized"] = self.quantized
         return s

@@ -130,6 +130,35 @@ def measured_residual_bytes(fn: Callable, *args, has_aux: bool = False,
     return ResidualReport(total_bytes=total, n_arrays=count)
 
 
+def model_weight_bytes(params) -> dict:
+    """Linear-site weight storage of a param tree, split so a quantized
+    deployment shows its packing win next to the f32 master:
+
+    {"weights_bytes", "scales_bytes", "bias_bytes", "total_bytes",
+     "n_linears"} — weights are the w/L/R payloads (int8 after
+    ``convert.quantize``), scales the per-channel f32 vectors that ride
+    with them, bias always f32. The walk covers every linear-LAYOUT dict
+    ({"w"}/{"L","R"}-keyed), which includes w-keyed leaves the plan does
+    not treat (tied embeddings, an untied lm_head) — those stay f32 and
+    dilute the aggregate packing ratio; norms/convs/router tables are
+    excluded. This is the accounting ``benchmarks/tab2_latency.py``
+    reports as ``weight_mib`` and docs/deployment.md sizes devices by.
+    The tree walk is ``api.bind``'s (the key monopoly)."""
+    from repro.api.bind import iter_linear_dicts, linear_param_bytes
+
+    out = {"weights_bytes": 0, "scales_bytes": 0, "bias_bytes": 0,
+           "n_linears": 0}
+    for _, p in iter_linear_dicts(params):
+        b = linear_param_bytes(p)
+        out["weights_bytes"] += b["weights"]
+        out["scales_bytes"] += b["scales"]
+        out["bias_bytes"] += b["bias"]
+        out["n_linears"] += 1
+    out["total_bytes"] = (out["weights_bytes"] + out["scales_bytes"]
+                          + out["bias_bytes"])
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Per-role residual accounting (analytic, from the config's own policies).
 # ---------------------------------------------------------------------------

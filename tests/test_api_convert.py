@@ -99,19 +99,6 @@ def test_project_conversion_trains_with_warm_subspace():
     assert np.isfinite(float(m["loss"]))
 
 
-def test_legacy_shim_emits_project_params():
-    import repro.nn.linear as legacy
-
-    legacy._warned = True
-    cfg = _with_wasi(_dense_cfg(), method="wasi", update_mode="project",
-                     rank_align=8).wasi
-    w = jax.random.normal(jax.random.PRNGKey(0), (24, 16))
-    p = legacy.init_linear_from_dense(w, cfg, role="mlp",
-                                      bias=jnp.zeros((24,)))
-    assert {"w", "L", "R", "b"} == set(p)
-    assert p["L"].shape[0] == 24 and p["R"].shape[1] == 16
-
-
 # ---------------------------------------------------------------------------
 # plan-bearing checkpoints
 # ---------------------------------------------------------------------------

@@ -1,7 +1,6 @@
 """SubspacePlan resolve/bind: spec resolution, plan lookup, typed apply
-dispatch, legacy shim compatibility + deprecation."""
+dispatch."""
 import dataclasses
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -175,44 +174,6 @@ def test_extract_project_factors_roundtrip():
     # trees without factors pass through untouched
     same, none = bind.extract_project_factors(stripped)
     assert none == {} and same is stripped
-
-
-# ---------------------------------------------------------------------------
-# legacy shim: old signatures keep working, one DeprecationWarning
-# ---------------------------------------------------------------------------
-
-def test_shim_apply_linear_compatible_and_warns_once():
-    import repro.nn.linear as legacy
-
-    legacy._warned = False
-    w = _wasi(method="wsi")
-    key = jax.random.PRNGKey(3)
-    with pytest.warns(DeprecationWarning):
-        p = legacy.init_linear(key, 16, 24, w, role="mlp")
-    x = jax.random.normal(key, (2, 4, 16))
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        # the warning fired once already; subsequent calls stay silent
-        y_old, _ = legacy.apply_linear(p, x, w)
-    spec = resolve_linear_spec(w, "mlp/up", "mlp", 16, 24)
-    y_new, _ = bind.apply(spec, p, x, w)
-    np.testing.assert_allclose(np.asarray(y_old), np.asarray(y_new))
-    assert legacy.linear_out_dim(p) == 24
-    assert legacy.wasi_applies(w, "mlp") and not legacy.wasi_applies(w, "head")
-
-
-def test_shim_init_linear_rng_matches_bind():
-    """Seeded init must be identical through the shim and the new API."""
-    import repro.nn.linear as legacy
-
-    legacy._warned = True   # silence
-    w = _wasi(method="wsi")
-    key = jax.random.PRNGKey(7)
-    old = legacy.init_linear(key, 32, 16, w, role="mlp", bias=True)
-    spec = resolve_linear_spec(w, "mlp/adhoc", "mlp", 32, 16, bias=True)
-    new = bind.init_params(key, spec, bias=True)
-    for k in old:
-        np.testing.assert_array_equal(np.asarray(old[k]), np.asarray(new[k]))
 
 
 def test_engine_rejects_conflicting_installed_plan():

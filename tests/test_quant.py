@@ -1,0 +1,300 @@
+"""Int8 deployment quantization: round-trip error bounds, the fused q8
+kernel vs the dequant-einsum oracle, plan stamping + JSON round trip,
+model-tree conversion, bind dispatch, and the end-to-end acceptance —
+a quantized ServeEngine.from_checkpoint generating token-for-token
+identically to f32 on a greedy smoke decode."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro import api
+from repro.api import bind, convert
+from repro.api.plan import resolve_linear_spec
+from repro.config import WasiConfig
+from repro.kernels import lowrank_matmul_q8, lowrank_matmul_q8_fused
+from repro.quant import (
+    dequantize_linear,
+    dequantize_tensor,
+    error_report,
+    quantize_linear,
+    quantize_tensor,
+)
+from repro.utils.memprof import model_weight_bytes
+
+
+def _wasi(**kw):
+    kw.setdefault("method", "wsi")
+    kw.setdefault("rank_align", 8)
+    return WasiConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# tensor round trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(24, 16), (3, 24, 16), (2, 2, 8, 40)])
+def test_quantize_tensor_roundtrip_bounded(shape):
+    """Per-channel absmax: elementwise error <= scale/2 = absmax/254 per
+    channel, exactly the int8 resolution bound — for every stacked dim."""
+    w = jax.random.normal(jax.random.PRNGKey(0), shape)
+    q, s = quantize_tensor(w)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+    assert q.shape == shape and s.shape == shape[:-1]
+    back = np.asarray(dequantize_tensor(q, s))
+    w = np.asarray(w)
+    bound = np.max(np.abs(w), axis=-1, keepdims=True) / 254.0 + 1e-7
+    assert np.all(np.abs(w - back) <= bound)
+    rel = np.linalg.norm(w - back) / np.linalg.norm(w)
+    assert rel < 0.01
+
+
+def test_quantize_tensor_zero_channel_exact():
+    w = jnp.zeros((4, 8)).at[1].set(jnp.arange(8.0))
+    q, s = quantize_tensor(w)
+    np.testing.assert_array_equal(np.asarray(q[0]), 0)
+    assert float(s[0]) == 1.0  # guard scale: dequant of zeros stays exact
+    back = dequantize_tensor(q, s)
+    np.testing.assert_allclose(np.asarray(back[0]), 0.0)
+
+
+def test_quantize_linear_layouts_and_double_quant_raises():
+    key = jax.random.PRNGKey(1)
+    spec = resolve_linear_spec(_wasi(), "mlp/up", "mlp", 16, 24, bias=True)
+    p = bind.init_params(key, spec, bias=True)
+    qspec = dataclasses.replace(spec, quant="int8")
+    qp = quantize_linear(p, qspec)
+    assert set(qp) == {"L", "sL", "R", "sR", "b"}
+    assert qp["L"].dtype == jnp.int8 and qp["sR"].shape == (spec.rank,)
+    assert qp["b"] is p["b"]                     # bias stays f32, untouched
+    assert bind.is_quantized(qp) and not bind.is_quantized(p)
+    with pytest.raises(ValueError):
+        quantize_linear(qp, qspec)
+    back = dequantize_linear(qp, qspec)
+    assert set(back) == {"L", "R", "b"}
+    rel = (np.linalg.norm(np.asarray(back["L"]) - np.asarray(p["L"]))
+           / np.linalg.norm(np.asarray(p["L"])))
+    assert rel < 0.01
+    # passthroughs: no quant stamp, or project layout
+    assert quantize_linear(p, spec) is p
+    proj = {"w": jnp.ones((8, 4)), "L": jnp.ones((8, 2)), "R": jnp.ones((2, 4))}
+    assert quantize_linear(proj, dataclasses.replace(
+        qspec, mode="project")) is proj
+
+
+# ---------------------------------------------------------------------------
+# kernel vs dequant-einsum oracle
+# ---------------------------------------------------------------------------
+
+def _q8_oracle(x, rq, rs, lq, ls):
+    rf = np.asarray(dequantize_tensor(rq, rs), np.float32)
+    lf = np.asarray(dequantize_tensor(lq, ls), np.float32)
+    h = np.asarray(x, np.float32) @ rf.T
+    return h @ lf.T
+
+
+@pytest.mark.parametrize("m,i,k,o", [(4, 16, 4, 24), (7, 33, 5, 17),
+                                     (130, 257, 40, 129), (128, 128, 32, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_q8_kernel_matches_oracle(m, i, k, o, dtype):
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (m, i)).astype(dtype)
+    lq, ls = quantize_tensor(jax.random.normal(jax.random.PRNGKey(3), (o, k)))
+    rq, rs = quantize_tensor(jax.random.normal(jax.random.PRNGKey(4), (k, i)))
+    ref = _q8_oracle(x, rq, rs, lq, ls)
+    tol = 2e-5 * i if dtype == jnp.float32 else 0.1
+    got = np.asarray(lowrank_matmul_q8_fused(x, rq, rs, lq, ls), np.float32)
+    np.testing.assert_allclose(got, ref, atol=tol, rtol=1e-2)
+    # the dispatching entry (einsum fallback off-TPU) agrees too, and
+    # handles leading batch dims
+    got2 = np.asarray(lowrank_matmul_q8(x.reshape(1, m, i), rq, rs, lq, ls),
+                      np.float32)
+    np.testing.assert_allclose(got2.reshape(m, o), ref, atol=tol, rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# plan stamping + serialization
+# ---------------------------------------------------------------------------
+
+def test_plan_quantized_stamps_and_roundtrips():
+    cfg = configs.get_smoke("qwen2-0.5b")
+    plan = api.resolve(cfg)
+    assert not plan.is_quantized
+    qplan = plan.quantized("int8")
+    assert qplan.is_quantized and qplan != plan
+    for s in qplan.specs:
+        want = "int8" if s.mode in ("factored", "dense") else None
+        assert s.quant == want, s.name
+    back = type(qplan).loads(qplan.dumps())
+    assert back == qplan                       # quant survives JSON
+    assert "quant=int8" in qplan.summary()
+    # project sites stay f32: they carry the dense W by definition
+    proj = cfg.replace(wasi=dataclasses.replace(cfg.wasi,
+                                                update_mode="project"))
+    qproj = api.resolve(proj).quantized("int8")
+    assert all(s.quant is None for s in qproj.specs if s.mode == "project")
+
+
+# ---------------------------------------------------------------------------
+# model-tree conversion + accounting
+# ---------------------------------------------------------------------------
+
+def _factored_lm(seed=0):
+    from repro.models.lm import init_lm
+
+    cfg = configs.get_smoke("qwen2-0.5b")
+    api.uninstall(cfg)
+    plan = api.install(api.resolve(cfg))
+    params = init_lm(jax.random.PRNGKey(seed), cfg)
+    return cfg, plan, params
+
+
+def test_convert_quantize_model_tree():
+    cfg, plan, params = _factored_lm()
+    try:
+        qplan = plan.quantized("int8")
+        qp = convert.quantize(params, qplan)
+        site = qp["groups"][0][0]["mlp"]["up"]
+        assert site["L"].dtype == jnp.int8
+        assert site["sL"].shape == site["L"].shape[:-1]
+        # untreated leaves (tied embedding) pass through untouched
+        assert qp["embed"]["w"].dtype == params["embed"]["w"].dtype
+        # packed bytes strictly below f32, scales accounted separately
+        wb32, wb8 = model_weight_bytes(params), model_weight_bytes(qp)
+        assert wb8["weights_bytes"] < wb32["weights_bytes"]
+        assert wb8["total_bytes"] < wb32["total_bytes"]
+        assert wb8["scales_bytes"] > 0 == wb32["scales_bytes"]
+        # densify dequantizes: matches the f32 densify within quant error
+        d32 = convert.densify(params, plan)
+        d8 = convert.densify(qp, qplan)
+        w32 = np.asarray(d32["groups"][0][0]["mlp"]["up"]["w"], np.float32)
+        w8 = np.asarray(d8["groups"][0][0]["mlp"]["up"]["w"], np.float32)
+        assert np.linalg.norm(w32 - w8) / np.linalg.norm(w32) < 0.02
+        # dequantize is the explicit inverse, and factorize refuses packed
+        back = convert.dequantize(qp, qplan)
+        assert not bind.is_quantized(back["groups"][0][0]["mlp"]["up"])
+        with pytest.raises(ValueError):
+            convert.factorize(qp, qplan)
+        # error report covers every packed tensor with bounded error
+        recs = error_report(params, qplan)
+        assert recs and all(r["rel_err"] < 0.02 for r in recs)
+        assert all(r["q8_bytes"] < r["f32_bytes"] for r in recs)
+    finally:
+        api.uninstall(cfg)
+
+
+def test_bind_apply_q8_dispatch():
+    w = _wasi()
+    spec = resolve_linear_spec(w, "mlp/up", "mlp", 16, 24)
+    qspec = dataclasses.replace(spec, quant="int8")
+    key = jax.random.PRNGKey(5)
+    p = bind.init_params(key, spec)
+    qp = quantize_linear(p, qspec)
+    x = jax.random.normal(key, (2, 5, 16))
+    y, ns = bind.apply(qspec, qp, x, w)
+    assert ns is None
+    ref = _q8_oracle(x.reshape(-1, 16), qp["R"], qp["sR"], qp["L"], qp["sL"])
+    np.testing.assert_allclose(np.asarray(y).reshape(-1, 24), ref,
+                               atol=1e-4, rtol=1e-3)
+    # close to the f32 forward (quantization error only)
+    y32, _ = bind.apply(spec, p, x, w)
+    assert float(jnp.max(jnp.abs(y - y32))) < 0.05
+    # quantized sites are serve-only / mismatches are loud
+    with pytest.raises(ValueError):
+        bind.apply(qspec, qp, x, w, state=object())
+    with pytest.raises(ValueError):
+        bind.apply(qspec, p, x, w)     # stamped spec, unpacked params
+    with pytest.raises(ValueError):
+        bind.apply(spec, qp, x, w)     # packed params, unstamped spec
+    # infer_spec recovers the quant stamp from the layout
+    assert bind.infer_spec(qp, w).quant == "int8"
+    assert bind.infer_spec(p, w).quant is None
+
+
+def test_moe_bank_q8_matches_dequant():
+    from repro.nn.moe import _bank_matmul
+
+    w = _wasi()
+    spec = resolve_linear_spec(w, "moe/w_up", "moe", 16, 24)
+    qspec = dataclasses.replace(spec, quant="int8")
+    key = jax.random.PRNGKey(6)
+    bank = {"L": jax.random.normal(key, (3, 24, spec.rank)),
+            "R": jax.random.normal(key, (3, spec.rank, 16))}
+    qbank = quantize_linear(bank, qspec)
+    x = jax.random.normal(key, (3, 4, 16))
+    got = np.asarray(_bank_matmul(qspec, qbank, x))
+    for e in range(3):
+        ref = _q8_oracle(x[e], qbank["R"][e], qbank["sR"][e],
+                         qbank["L"][e], qbank["sL"][e])
+        np.testing.assert_allclose(got[e], ref, atol=1e-4, rtol=1e-3)
+    # DENSE banks (untreated moe role) pack to {w, sW} and must route too
+    dspec = dataclasses.replace(resolve_linear_spec(
+        WasiConfig(method="none"), "moe/w_up", "moe", 16, 24), quant="int8")
+    dbank = quantize_linear({"w": jax.random.normal(key, (3, 24, 16))}, dspec)
+    assert set(dbank) == {"w", "sW"}
+    dgot = np.asarray(_bank_matmul(dspec, dbank, x))
+    for e in range(3):
+        wf = np.asarray(dequantize_tensor(dbank["w"][e], dbank["sW"][e]))
+        np.testing.assert_allclose(dgot[e], np.asarray(x[e]) @ wf.T,
+                                   atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: quantized checkpoint serves token-for-token identical
+# ---------------------------------------------------------------------------
+
+def test_quantized_serve_from_checkpoint_matches_f32(tmp_path):
+    """The acceptance path (docs/deployment.md): briefly-trained factored
+    LM -> plan-stamped int8 checkpoint -> ServeEngine.from_checkpoint with
+    nothing else in hand -> greedy generations match f32 token-for-token
+    and linear-weight bytes drop strictly. (Trained, not random-init:
+    random init has top-2 logit gaps below the quantization noise, so
+    token matching there measures tie-breaking, not fidelity.)"""
+    from repro.checkpoint import save_checkpoint
+    from repro.config import TrainConfig
+    from repro.data.synthetic import SyntheticLM
+    from repro.models.lm import init_lm, init_lm_states, lm_loss
+    from repro.serve import ServeEngine
+    from repro.train.step import make_train_state, make_train_step
+
+    cfg = configs.get_smoke("qwen2-0.5b")
+    api.uninstall(cfg)
+    B, S = 8, 16
+    plan = api.install(api.resolve(cfg, batch=B, seq=S))
+    key = jax.random.PRNGKey(0)
+    tcfg = TrainConfig(optimizer="sgd", lr=0.3, momentum=0.9,
+                       checkpoint_every=0)
+    state = make_train_state(key, init_lm(key, cfg), cfg, tcfg,
+                             asi_states=init_lm_states(key, cfg, B, S))
+    step = jax.jit(make_train_step(lm_loss, cfg, tcfg))
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=S,
+                       global_batch=B, seed=1)
+    try:
+        for i in range(30):
+            state, _ = step(state, data.batch(i))
+
+        prompts = [[3, 1, 4, 1, 5], [9, 2, 6]]
+
+        def drive(engine):
+            reqs = [engine.submit(p, max_new=8) for p in prompts]
+            engine.run()
+            return [r.tokens for r in reqs]
+
+        f32 = ServeEngine(state.params, plan=plan, max_slots=2, max_cache=16)
+        toks32 = drive(f32)
+        api.uninstall(cfg)
+
+        qplan = plan.quantized("int8")
+        qparams = convert.quantize(state.params, qplan)
+        save_checkpoint(str(tmp_path), 30, qparams, plan=qplan,
+                        label="params")
+        q8 = ServeEngine.from_checkpoint(str(tmp_path), max_slots=2,
+                                         max_cache=16)
+        assert q8.quantized and q8.plan == qplan    # stamp round-tripped
+        assert drive(q8) == toks32                  # token-for-token
+        assert q8.summary()["weight_bytes"] < f32.summary()["weight_bytes"]
+    finally:
+        api.uninstall(cfg)
