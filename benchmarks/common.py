@@ -22,11 +22,13 @@ import time
 
 import jax
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 UNITS = {
     "us_per_call": "microseconds (wall, median)",
     "*_us": "microseconds",
+    "p50_*": "50th percentile over requests",
+    "p95_*": "95th percentile over requests",
     "*_mib": "mebibytes (2**20 bytes)",
     "*_bytes": "bytes",
     "*_flops": "floating-point operations",

@@ -4,14 +4,20 @@ Raspberry Pi — same relative comparison, different absolute scale).
 
 Serving columns (beyond-paper): prefill throughput of the token-parallel
 path vs the seed's scanned (token-by-token) prefill, steady-state decode
-throughput, engine requests/sec, and the fused vs two-launch lowrank
-kernel.
+throughput, engine requests/sec, per-request latency percentiles (TTFT =
+submit -> first streamed token, TPOT = steady-state inter-token time,
+p50/p95 from GenerationHandle timestamps — schema_version 3,
+docs/benchmarks.md), and the fused vs two-launch lowrank kernel.
 
 Quantized-deployment columns (docs/deployment.md): the same engine serving
-int8-packed factors next to the f32 rows — weight bytes, decode tok/s, and
-a token-for-token greedy-match check against the f32 generations. Off-TPU
-the q8 path is the scale-folded einsum fallback, so tok/s deltas are
-dispatch noise; the weight-bytes ratio and the greedy match are the signal.
+int8-packed factors next to the f32 rows — weight bytes, decode tok/s, a
+token-for-token greedy-match check against the f32 generations, and a
+FIXED-SEED sampled-decode match (temperature/top-k through the device-side
+sampler; the fixed seed makes the q8-vs-f32 comparison deterministic —
+random-init greedy gaps sit below int8 noise, and an unseeded sampled run
+would not even be comparable to itself). Off-TPU the q8 path is the
+scale-folded einsum fallback, so tok/s deltas are dispatch noise; the
+weight-bytes ratio and the match columns are the signal.
 """
 from __future__ import annotations
 
@@ -114,14 +120,15 @@ def serve_rows() -> list[str]:
         engine.submit(list(map(int, prompt[i])), max_new=2)
     engine.run()
     engine.reset_stats()
-    for i in range(SERVE_B):
-        engine.submit(list(map(int, prompt[i])), max_new=SERVE_NEW)
+    handles = [engine.submit(list(map(int, prompt[i])), max_new=SERVE_NEW)
+               for i in range(SERVE_B)]
     engine.run()
     s = engine.summary()
     rows.append(f"tab2/serve_decode,{s['wall_s'] * 1e6:.1f},"
                 f"{s['decode_tok_s']:.0f}_tok_s")
     rows.append(f"tab2/serve_requests,{s['wall_s'] * 1e6:.1f},"
                 f"{s['requests_s']:.2f}_req_s")
+    rows += latency_rows(handles)
 
     # fused vs two-launch lowrank kernel (serve-shape linear). Off-TPU both
     # run in Pallas interpret mode, where the ratio measures dispatch
@@ -137,6 +144,28 @@ def serve_rows() -> list[str]:
     us_u = time_call(lowrank_matmul_unfused, x, R, L)
     rows.append(f"tab2/lowrank_fused{suffix},{us_f:.1f},per_call_us")
     rows.append(f"tab2/lowrank_unfused{suffix},{us_u:.1f},per_call_us")
+    return rows
+
+
+def latency_rows(handles, tag: str = "") -> list[str]:
+    """Per-request latency percentiles from GenerationHandle timestamps:
+    TTFT (submit -> first streamed token, includes queueing + prefill) and
+    TPOT (mean inter-token time after the first). ``us_per_call`` carries
+    the p50 so the rows sort with the other timings."""
+    import numpy as np
+
+    ttft = np.array([h.ttft_s for h in handles
+                     if h.ttft_s is not None]) * 1e6
+    tpot = np.array([h.tpot_s for h in handles
+                     if h.tpot_s is not None]) * 1e6
+    rows = []
+    for name, v in (("ttft", ttft), ("tpot", tpot)):
+        if not len(v):
+            continue
+        p50, p95 = np.percentile(v, 50), np.percentile(v, 95)
+        rows.append(f"tab2/serve_{name}{tag},{p50:.1f},"
+                    f"p50_us={p50:.1f};p95_us={p95:.1f};"
+                    f"n_requests={len(v)}")
     return rows
 
 
@@ -173,6 +202,12 @@ def quant_rows() -> list[str]:
     prompt = jax.random.randint(key, (SERVE_B, SERVE_P), 0, cfg.vocab_size)
     max_cache = SERVE_P + SERVE_NEW + 1
 
+    # the sampled row's contract: a FIXED seed, so both deployments draw
+    # from the same uniform sequence and the q8-vs-f32 comparison is
+    # deterministic (an unseeded run would differ from itself)
+    from repro.serve import SamplingParams
+    sampled = SamplingParams(temperature=0.8, top_k=8, seed=7)
+
     def serve(params_, plan_):
         engine = ServeEngine(params_, plan=plan_, max_slots=SERVE_B,
                              max_cache=max_cache)
@@ -183,14 +218,24 @@ def quant_rows() -> list[str]:
         reqs = [engine.submit(list(map(int, prompt[i])), max_new=SERVE_NEW)
                 for i in range(SERVE_B)]
         engine.run()
-        return engine.summary(), [r.tokens for r in reqs]
+        summary = engine.summary()
+        sreqs = [engine.submit(list(map(int, prompt[i])), max_new=SERVE_NEW,
+                               sampling=sampled)
+                 for i in range(SERVE_B)]
+        engine.run()
+        # sampled rows compare GENERATED tokens only — prompts match by
+        # construction and would inflate the token-match fraction
+        return summary, [r.tokens for r in reqs], [r.generated for r in sreqs]
 
-    s32, toks32 = serve(params, plan)
+    s32, toks32, samp32 = serve(params, plan)
     api.uninstall(cfg)
     qplan = api.install(plan.quantized("int8"))
-    s8, toks8 = serve(convert.quantize(params, qplan), qplan)
+    s8, toks8, samp8 = serve(convert.quantize(params, qplan), qplan)
     api.uninstall(cfg)
     match = int(toks8 == toks32)
+    n_tok = sum(len(t) for t in samp32)
+    tok_match = sum(int(a == b) for s, t in zip(samp32, samp8)
+                    for a, b in zip(s, t)) / max(n_tok, 1)
     rows.append(f"tab2/serve_decode_f32,{s32['decode_s'] * 1e6:.1f},"
                 f"tok_s={s32['decode_tok_s']:.0f};"
                 f"weight_bytes={s32['weight_bytes']};"
@@ -200,6 +245,10 @@ def quant_rows() -> list[str]:
                 f"weight_bytes={s8['weight_bytes']};"
                 f"weight_mib={s8['weight_mib']:.4f};"
                 f"greedy_match={match}")
+    rows.append(f"tab2/serve_sampled_q8_vs_f32,,"
+                f"sampled_match={int(samp8 == samp32)};"
+                f"sampled_tok_match={tok_match:.4f};"
+                f"temperature=0.8;top_k=8;seed=7")
 
     # per-call: the fused int8 kernel at the same serve shape serve_rows
     # times the f32 kernel at — compare against tab2/lowrank_fused above.

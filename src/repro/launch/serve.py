@@ -1,14 +1,19 @@
-"""Serving launcher: thin CLI over the continuous-batching engine.
+"""Serving launcher: thin CLI over the streaming continuous-batching engine.
 
 ``python -m repro.launch.serve --arch qwen2-0.5b --tokens 32 --batch 4``
+``python -m repro.launch.serve --ckpt /tmp/ckpt --stream --temperature 0.8
+  --top-k 8 --seed 1 --sched priority``
 
 Prefill is token-parallel — ONE forward over the whole prompt writes every
 layer's decode caches (models/lm.py::lm_prefill); decode is a jit'd
-single-token step over all serve slots at per-slot positions. WASI
+single-token step over all serve slots at per-slot positions, with
+per-request temperature/top-k/top-p sampling fused into the step so only
+sampled int32 tokens ever leave the device (serve/sampling.py). WASI
 inference benefit: every linear runs in the rank-K subspace through the
 fused lowrank kernel (paper C_inference / S_inference — measured by
-benchmarks/tab2_latency.py). The engine itself (admission queue, bucketing,
-slot recycling) lives in repro/serve/engine.py.
+benchmarks/tab2_latency.py). The engine itself (pluggable scheduler,
+bucketed prefill, slot recycling, streaming handles) lives in
+repro/serve/; the request lifecycle is documented in docs/serving.md.
 """
 from __future__ import annotations
 
@@ -23,7 +28,7 @@ import jax.numpy as jnp
 import repro.configs as configs
 from repro import api
 from repro.models.lm import init_lm, init_lm_cache, lm_decode_step, lm_prefill
-from repro.serve import ServeEngine
+from repro.serve import SCHEDULERS, EventKind, SamplingParams, ServeEngine
 
 
 @functools.lru_cache(maxsize=8)
@@ -41,7 +46,11 @@ def _jitted_steps(cfg):
 def generate(params, cfg, prompt, max_cache: int, n_new: int, *, greedy=True,
              key=None):
     """prompt (B, P) -> (B, P + n_new). Lockstep batch: one token-parallel
-    prefill (no per-token Python loop), then a jit'd decode step."""
+    prefill (no per-token Python loop), then a jit'd decode step.
+
+    This is the PRE-REDESIGN greedy path (host argmax over returned
+    logits), kept as the bitwise oracle the streaming engine's
+    temperature-0 rows are tested against."""
     b, p = prompt.shape
     caches = init_lm_cache(cfg, b, max_cache, dtype=jnp.dtype(cfg.dtype))
     prefill, step = _jitted_steps(cfg)
@@ -55,6 +64,36 @@ def generate(params, cfg, prompt, max_cache: int, n_new: int, *, greedy=True,
         if j < n_new - 1:  # the last token needs no further forward
             logits, caches = step(params, nxt, caches, p + j)
     return jnp.concatenate(out, axis=1)
+
+
+def _stream(engine, handles) -> None:
+    """Drive the engine to completion, printing tokens as they arrive
+    (one line per engine tick batch) and a TTFT/TPOT line per request."""
+    cursors = [0] * len(handles)
+    while engine.busy:
+        engine.step()
+        for i, h in enumerate(handles):
+            events = h.events
+            for ev in events[cursors[i]:]:
+                if ev.kind is EventKind.TOKEN:
+                    print(f"[stream] rid={ev.rid} token={ev.token}",
+                          flush=True)
+                else:
+                    print(f"[stream] rid={ev.rid} {ev.kind.value}"
+                          + (f" ({ev.reason})" if ev.reason else ""))
+            cursors[i] = len(events)
+    bad = []
+    for h in handles:
+        ttft = h.ttft_s
+        tpot = h.tpot_s
+        print(f"[stream] rid={h.rid} status={h.status.value} "
+              f"new={len(h.generated)} "
+              f"ttft_ms={ttft * 1e3 if ttft else float('nan'):.2f} "
+              f"tpot_ms={tpot * 1e3 if tpot else float('nan'):.3f}")
+        if h.finished and not (ttft and ttft > 0):
+            bad.append(h.rid)
+    if bad:
+        raise SystemExit(f"finished requests with no TTFT: {bad}")
 
 
 def main():
@@ -76,6 +115,21 @@ def main():
                     help="deploy-quantize the weights before serving "
                          "(per-channel absmax int8 factors; a checkpoint "
                          "that is already quant-stamped needs no flag)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy (token-for-token the legacy engine); "
+                         "> 0 samples device-side in the fused decode step")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest logits (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = off)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="sampling seed (default: stable per-request rid)")
+    ap.add_argument("--sched", default="fcfs", choices=sorted(SCHEDULERS),
+                    help="admission policy (serve/scheduler.py)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are generated plus "
+                         "per-request TTFT/TPOT, instead of the batch "
+                         "summary only")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -89,7 +143,7 @@ def main():
             plan = plan.quantized(args.quant)
             params = api.convert.quantize(params, plan)
         engine = ServeEngine(params, plan=plan, max_slots=slots,
-                             max_cache=max_cache)
+                             max_cache=max_cache, scheduler=args.sched)
         cfg = engine.cfg
     else:
         cfg = configs.get(args.arch) if args.full \
@@ -104,25 +158,33 @@ def main():
             plan = plan.quantized(args.quant)
             params = api.convert.quantize(params, plan)
         engine = ServeEngine(params, plan=plan, max_slots=slots,
-                             max_cache=max_cache)
+                             max_cache=max_cache, scheduler=args.sched)
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p, seed=args.seed)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
     t0 = time.time()
-    reqs = [engine.submit(list(map(int, prompts[i])), max_new=args.tokens)
-            for i in range(args.batch)]
-    engine.run()
+    handles = [engine.submit(list(map(int, prompts[i])), max_new=args.tokens,
+                             sampling=sp)
+               for i in range(args.batch)]
+    if args.stream:
+        _stream(engine, handles)
+    else:
+        engine.run()
     dt = time.time() - t0
     s = engine.summary()
     qtag = " quant=int8" if engine.quantized else ""
-    print(f"[serve] arch={cfg.name} wasi={cfg.wasi.method}{qtag} "
-          f"slots={slots} requests={args.batch} wall={dt:.2f}s "
-          f"weights={s['weight_mib']:.2f}MiB")
+    stag = "" if sp.is_greedy else (f" T={sp.temperature}"
+                                    f" top_k={sp.top_k} top_p={sp.top_p}")
+    print(f"[serve] arch={cfg.name} wasi={cfg.wasi.method}{qtag}{stag} "
+          f"sched={s['scheduler']} slots={slots} requests={args.batch} "
+          f"wall={dt:.2f}s weights={s['weight_mib']:.2f}MiB")
     print(f"[serve] prefill {s['prefill_tokens']} tok "
           f"({s['prefill_tok_s']:.1f} tok/s, one forward per admission "
           f"group) | decode {s['decode_tokens']} tok "
           f"({s['decode_tok_s']:.1f} tok/s) | "
           f"{s['requests_s']:.2f} req/s")
-    print("[serve] sample:", reqs[0].tokens)
+    print("[serve] sample:", handles[0].tokens)
 
 
 if __name__ == "__main__":

@@ -1,8 +1,39 @@
 """Request-level serving subsystem (continuous batching over WASI models).
 
 The engine owns the decode caches and the slot <-> request mapping; model
-code stays purely functional (models/lm.py). See docs/architecture.md for
-the request lifecycle diagram.
+code stays purely functional (models/lm.py). Sampling runs device-side
+inside the jitted decode (sampling.py), the request lifecycle streams
+typed events through GenerationHandle (session.py), and admission policy
+is a pluggable Scheduler (scheduler.py). See docs/serving.md for the
+request lifecycle and docs/architecture.md for the slot/caches design.
 """
 
-from repro.serve.engine import Request, ServeEngine, bucket_for
+from repro.serve.engine import DEFAULT_BUCKETS, ServeEngine, bucket_for
+from repro.serve.sampling import SamplingParams, sample_tokens
+from repro.serve.scheduler import (
+    FCFS,
+    SCHEDULERS,
+    PriorityDeadline,
+    Scheduler,
+    ShortestPromptFirst,
+    make_scheduler,
+)
+from repro.serve.session import Event, EventKind, GenerationHandle, Request
+
+__all__ = [
+    "DEFAULT_BUCKETS",
+    "Event",
+    "EventKind",
+    "FCFS",
+    "GenerationHandle",
+    "PriorityDeadline",
+    "Request",
+    "SCHEDULERS",
+    "SamplingParams",
+    "Scheduler",
+    "ServeEngine",
+    "ShortestPromptFirst",
+    "bucket_for",
+    "make_scheduler",
+    "sample_tokens",
+]

@@ -1,26 +1,37 @@
-"""Continuous-batching serve engine: admission queue, per-slot KV caches,
-prompt-length bucketing, slot recycling on EOS.
+"""Continuous-batching serve engine: streaming request lifecycle over a
+fixed slot pool, with device-side sampling and pluggable scheduling.
 
 Design (the TrainDeeploy lesson: kernel and serving loop co-designed):
 
 * The engine owns ONE set of batched decode caches (`init_lm_cache` with
   batch = max_slots). A *slot* is a batch row; admitting a request means
-  prefilling its prompt into that row, finishing means freeing the row for
-  the next queued request. Model code never sees the queue.
+  prefilling its prompt into that row, finishing (or cancelling, or
+  evicting) means freeing the row for the next queued request. Model code
+  never sees the queue.
 
 * Prefill is token-parallel (`lm_prefill`): one forward over the whole
   prompt writes every layer's KV slots / conv buffers / SSM states. To keep
   jit recompiles bounded, admitted prompts are right-padded to a small set
-  of bucket lengths and the per-row true length rides in as `valid_len` —
-  padded positions are masked out of cache writes and freeze recurrent
-  state, so the caches are indistinguishable from exact-length prefill.
-  Same-bucket admissions prefill together as one batch.
+  of bucket lengths (overlong prompts round up to multiples of the largest
+  bucket, capped at `max_cache`) and the per-row true length rides in as
+  `valid_len`. Same-bucket admissions prefill together as one batch.
 
 * Decode runs ALL slots in lockstep shapes but at per-slot positions
   (`pos` is a (B,) vector): every active request decodes one token per
-  engine step regardless of when it was admitted — that is the continuous
+  engine tick regardless of when it was admitted — that is the continuous
   batching. Free slots ride along as dead rows (their writes land at stale
   positions that the causal/rolling masks provably never read back).
+
+* Sampling is DEVICE-SIDE (`serve/sampling.py`): per-slot temperature /
+  top-k / top-p / RNG key arrays ride into the jitted prefill and decode
+  steps, which return sampled int32 tokens — the host never round-trips
+  logits, and temperature-0 rows lower to the exact argmax the greedy
+  engine ran (token-for-token identical, f32 and int8).
+
+* The request lifecycle is event-driven (`serve/session.py`): `submit()`
+  returns a `GenerationHandle` streaming TOKEN / FINISHED / CANCELLED /
+  EVICTED events with TTFT/TPOT on the handle; admission order and
+  deadline eviction are a pluggable `Scheduler` (`serve/scheduler.py`).
 
 The jit cache ends up with exactly one decode executable plus one prefill
 executable per (bucket, group-size) pair actually seen.
@@ -28,7 +39,6 @@ executable per (bucket, group-size) pair actually seen.
 from __future__ import annotations
 
 import collections
-import dataclasses
 import time
 from typing import Sequence
 
@@ -39,49 +49,36 @@ import numpy as np
 from repro.api.plan import SubspacePlan, install, installed, plan_of
 from repro.config import ModelConfig
 from repro.models.lm import init_lm_cache, lm_decode_step, lm_prefill
+from repro.serve.sampling import SamplingParams, sample_tokens
+from repro.serve.scheduler import Scheduler, make_scheduler
+from repro.serve.session import Event, EventKind, GenerationHandle, Request
 
 DEFAULT_BUCKETS = (8, 16, 32, 64, 128, 256)
 
 
-def bucket_for(length: int, buckets: Sequence[int]) -> int:
-    """Smallest bucket >= length; prompts beyond the largest bucket get an
-    exact-length prefill (one extra compile, still a single forward)."""
+def bucket_for(length: int, buckets: Sequence[int],
+               max_cache: int | None = None) -> int:
+    """Smallest bucket >= length. Prompts beyond the largest bucket round
+    UP to the next multiple of it — a handful of shared executables instead
+    of one exact-length compile per adversarial prompt length — and every
+    result is capped at ``max_cache`` (admission validated the prompt
+    itself fits)."""
+    cap = max_cache if max_cache is not None else float("inf")
     for b in buckets:
         if b >= length:
-            return b
-    return length
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: list[int]
-    max_new: int
-    eos_id: int | None = None
-    generated: list[int] = dataclasses.field(default_factory=list)
-    submitted_at: float = 0.0
-    first_token_at: float = 0.0
-    finished_at: float = 0.0
-
-    @property
-    def done(self) -> bool:
-        if self.generated and self.eos_id is not None \
-                and self.generated[-1] == self.eos_id:
-            return True
-        return len(self.generated) >= self.max_new
-
-    @property
-    def tokens(self) -> list[int]:
-        return list(self.prompt) + list(self.generated)
+            return int(min(b, cap))
+    big = buckets[-1]
+    return int(min(-(-length // big) * big, cap))
 
 
 class ServeEngine:
-    """Greedy-decoding continuous-batching engine over a fixed slot pool."""
+    """Streaming continuous-batching engine over a fixed slot pool."""
 
     def __init__(self, params, cfg: ModelConfig | None = None, *,
                  plan: SubspacePlan | None = None, max_slots: int = 4,
                  max_cache: int = 512,
-                 buckets: Sequence[int] = DEFAULT_BUCKETS):
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 scheduler: Scheduler | str = "fcfs"):
         if cfg is None:
             if plan is None:
                 raise ValueError("ServeEngine needs a ModelConfig or a "
@@ -109,6 +106,8 @@ class ServeEngine:
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_cache = max_cache
+        self.sched: Scheduler = (make_scheduler(scheduler)
+                                 if isinstance(scheduler, str) else scheduler)
         # weight-storage accounting: an int8 deployment (plan.quantized +
         # convert.quantize) serves through the same engine; summary() then
         # reports the packed linear-weight bytes next to throughput
@@ -119,26 +118,38 @@ class ServeEngine:
         self.caches = init_lm_cache(cfg, max_slots, max_cache,
                                     dtype=jnp.dtype(cfg.dtype))
         self.slots: list[Request | None] = [None] * max_slots
-        # per-slot next decode position / next input token (row-aligned)
+        # per-slot decode state, row-aligned with the cache batch axis:
+        # position / next input token, plus the device-side sampling
+        # arrays (temperature, top-k, top-p, RNG seed, sampled-token count)
         self.pos = np.zeros(max_slots, np.int32)
         self.next_tok = np.zeros(max_slots, np.int32)
-        self.queue: collections.deque[Request] = collections.deque()
+        self.temp = np.zeros(max_slots, np.float32)
+        self.top_k = np.zeros(max_slots, np.int32)
+        self.top_p = np.ones(max_slots, np.float32)
+        self.seed = np.zeros(max_slots, np.uint32)
+        self.count = np.zeros(max_slots, np.int32)
         self._rid = 0
         self.stats = {"prefill_tokens": 0, "decode_steps": 0,
-                      "decode_tokens": 0, "completed": 0, "wall_s": 0.0,
-                      "prefill_s": 0.0, "decode_s": 0.0}
+                      "decode_tokens": 0, "completed": 0, "cancelled": 0,
+                      "evicted": 0, "wall_s": 0.0, "prefill_s": 0.0,
+                      "decode_s": 0.0}
 
-        def _decode(params_, toks, caches, pos):
-            return lm_decode_step(params_, toks, caches, pos, cfg)
+        def _decode(params_, toks, caches, pos, temp, tk, tp, seeds, counts):
+            logits, caches = lm_decode_step(params_, toks, caches, pos, cfg)
+            nxt = sample_tokens(logits, temp, tk, tp, seeds, counts)
+            return nxt, caches
 
-        def _prefill(params_, toks, caches, valid_len, rows):
+        def _prefill(params_, toks, caches, valid_len, rows,
+                     temp, tk, tp, seeds):
             # gather the admitted rows, prefill them as one batch, scatter
             # back — cache leaves are (repeat, B, ...), batch on axis 1
             sub = jax.tree.map(lambda a: a[:, rows], caches)
             logits, sub = lm_prefill(params_, toks, cfg, caches=sub,
                                      valid_len=valid_len, last_only=True)
             new = jax.tree.map(lambda g, l: g.at[:, rows].set(l), caches, sub)
-            return jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32), new
+            first = sample_tokens(logits[:, 0], temp, tk, tp, seeds,
+                                  jnp.zeros_like(seeds, jnp.int32))
+            return first, new
 
         # donate the cache pytree: the engine rebinds self.caches on every
         # call and never touches the old buffers, so XLA can update KV/SSM
@@ -165,68 +176,151 @@ class ServeEngine:
                 "the engine with ServeEngine(params, cfg) instead")
         return cls(params, plan=plan, **engine_kw)
 
-    # -- submission ---------------------------------------------------------
+    # -- submission / cancellation ------------------------------------------
 
-    def submit(self, prompt: Sequence[int], max_new: int,
-               eos_id: int | None = None) -> Request:
-        if len(prompt) + max_new > self.max_cache:
+    def submit(self, prompt: Sequence[int], max_new: int | None = None,
+               eos_id: int | None = None, *,
+               sampling: SamplingParams | None = None) -> GenerationHandle:
+        """Queue a generation; returns its :class:`GenerationHandle`.
+
+        ``sampling`` carries the full per-request contract (temperature /
+        top-k / top-p / seed / max_new / eos / deadline / priority); the
+        positional ``max_new`` / ``eos_id`` override it for the legacy
+        call shape. Default is greedy decoding, token-for-token identical
+        to the pre-redesign engine."""
+        sp = (sampling or SamplingParams()).resolved(
+            self._rid, max_new=max_new, eos_id=eos_id)
+        if len(prompt) + sp.max_new > self.max_cache:
             raise ValueError(
-                f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
+                f"prompt ({len(prompt)}) + max_new ({sp.max_new}) exceeds "
                 f"max_cache ({self.max_cache})")
         if len(prompt) < 1:
             raise ValueError("empty prompt")
-        if max_new < 1:
-            raise ValueError("max_new must be >= 1 (prefill always emits "
-                             "the first token)")
         req = Request(rid=self._rid, prompt=list(map(int, prompt)),
-                      max_new=max_new, eos_id=eos_id,
-                      submitted_at=time.perf_counter())
+                      sampling=sp, submitted_at=time.perf_counter())
         self._rid += 1
-        self.queue.append(req)
-        return req
+        self.sched.add(req)
+        return GenerationHandle(self, req)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a queued or running request. Running requests free their
+        slot IMMEDIATELY (the next tick can admit into it; the dead row's
+        stale cache writes are provably never read back). Returns False if
+        the rid is unknown or already terminal."""
+        queued = self.sched.remove(rid)
+        if queued is not None:
+            self._retire(queued, EventKind.CANCELLED, "user cancel")
+            return True
+        for slot, req in enumerate(self.slots):
+            if req is not None and req.rid == rid:
+                self._free_slot(slot)
+                self._retire(req, EventKind.CANCELLED, "user cancel")
+                return True
+        return False
+
+    @property
+    def queue(self) -> collections.deque:
+        """Queued requests in admission order (introspection only — the
+        scheduler owns the real wait set)."""
+        return collections.deque(self.sched.pending())
+
+    @property
+    def busy(self) -> bool:
+        """True while any request is queued or occupying a slot — the
+        ``step()``-until-done predicate ``run()`` (and any external
+        driver) loops on."""
+        return bool(len(self.sched)) or any(r is not None for r in self.slots)
 
     # -- internals ----------------------------------------------------------
 
+    def _free_slot(self, slot: int) -> None:
+        """Recycle a slot AND reset its sampling row to greedy defaults —
+        a stale temperature on a dead row would keep ``jnp.any(temp > 0)``
+        true and defeat the all-greedy ``lax.cond`` fast path."""
+        self.slots[slot] = None
+        self.temp[slot] = 0.0
+        self.top_k[slot] = 0
+        self.top_p[slot] = 1.0
+
+    def _emit_token(self, req: Request, token: int, t: float) -> None:
+        req.generated.append(token)
+        if not req.first_token_at:
+            req.first_token_at = t
+        req.last_token_at = t
+        req.events.append(Event(EventKind.TOKEN, req.rid, token=token, t=t))
+
+    def _retire(self, req: Request, kind: EventKind, reason: str) -> None:
+        t = time.perf_counter()
+        req.events.append(Event(kind, req.rid, reason=reason, t=t))
+        req.status = kind
+        req.finished_at = t
+        key = {EventKind.FINISHED: "completed",
+               EventKind.CANCELLED: "cancelled",
+               EventKind.EVICTED: "evicted"}[kind]
+        self.stats[key] += 1
+
     def _finish_if_done(self, slot: int) -> None:
         req = self.slots[slot]
-        if req is not None and req.done:
-            req.finished_at = time.perf_counter()
-            self.slots[slot] = None           # recycle: next _admit reuses it
-            self.stats["completed"] += 1
+        if req is not None and req.hit_stop:
+            self._free_slot(slot)         # recycle: next _admit reuses it
+            s = req.sampling
+            reason = ("eos" if s.eos_id is not None and req.generated
+                      and req.generated[-1] == s.eos_id else "max_new")
+            self._retire(req, EventKind.FINISHED, reason)
+
+    def _evict(self, now: float) -> None:
+        running = [r for r in self.slots if r is not None]
+        for req in self.sched.victims(running, now):
+            if req.terminal:      # defensive vs misbehaving schedulers:
+                continue          # a request gets exactly ONE terminal event
+            for slot, r in enumerate(self.slots):
+                if r is req:
+                    self._free_slot(slot)
+                    break
+            self._retire(req, EventKind.EVICTED, "deadline")
 
     def _admit(self) -> None:
         free = [i for i, r in enumerate(self.slots) if r is None]
-        if not free or not self.queue:
+        if not free or not len(self.sched):
             return
         t0 = time.perf_counter()
         admitted: list[tuple[int, Request]] = []
-        while free and self.queue:
-            admitted.append((free.pop(0), self.queue.popleft()))
-        # group by bucket so same-shape prompts prefill as one batch; the
-        # bucket is capped at max_cache (prompt itself always fits: submit()
-        # validated len + max_new <= max_cache)
+        while free:
+            req = self.sched.pop(t0)
+            if req is None:
+                break
+            if req.terminal:      # e.g. evicted-from-queue by a scheduler
+                continue          # that didn't also dequeue it
+            admitted.append((free.pop(0), req))
+        # group by bucket so same-shape prompts prefill as one batch
         groups: dict[int, list[tuple[int, Request]]] = collections.defaultdict(list)
         for slot, req in admitted:
-            bucket = min(bucket_for(len(req.prompt), self.buckets),
-                         self.max_cache)
-            groups[bucket].append((slot, req))
+            groups[bucket_for(len(req.prompt), self.buckets,
+                              self.max_cache)].append((slot, req))
         for bucket, group in groups.items():
             rows = np.array([s for s, _ in group], np.int32)
             vlen = np.array([len(r.prompt) for _, r in group], np.int32)
             toks = np.zeros((len(group), bucket), np.int32)
-            for i, (_, r) in enumerate(group):
-                toks[i, :len(r.prompt)] = r.prompt
+            for i, (slot, req) in enumerate(group):
+                toks[i, :len(req.prompt)] = req.prompt
+                sp = req.sampling
+                self.temp[slot] = sp.temperature
+                self.top_k[slot] = sp.top_k
+                self.top_p[slot] = sp.top_p
+                self.seed[slot] = np.uint32(sp.seed & 0xFFFFFFFF)
             first, self.caches = self._prefill(
                 self.params, jnp.asarray(toks), self.caches,
-                jnp.asarray(vlen), jnp.asarray(rows))
+                jnp.asarray(vlen), jnp.asarray(rows),
+                jnp.asarray(self.temp[rows]), jnp.asarray(self.top_k[rows]),
+                jnp.asarray(self.top_p[rows]), jnp.asarray(self.seed[rows]))
             first = np.asarray(first)
             now = time.perf_counter()
             for i, (slot, req) in enumerate(group):
                 self.slots[slot] = req
-                req.generated.append(int(first[i]))
-                req.first_token_at = now
+                self._emit_token(req, int(first[i]), now)
                 self.pos[slot] = int(vlen[i])
                 self.next_tok[slot] = int(first[i])
+                self.count[slot] = 1
                 self.stats["prefill_tokens"] += int(vlen[i])
                 self._finish_if_done(slot)
         self.stats["prefill_s"] += time.perf_counter() - t0
@@ -236,16 +330,21 @@ class ServeEngine:
         if not active:
             return
         t0 = time.perf_counter()
-        logits, self.caches = self._decode(
+        nxt, self.caches = self._decode(
             self.params, jnp.asarray(self.next_tok[:, None]),
-            self.caches, jnp.asarray(self.pos))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            self.caches, jnp.asarray(self.pos),
+            jnp.asarray(self.temp), jnp.asarray(self.top_k),
+            jnp.asarray(self.top_p), jnp.asarray(self.seed),
+            jnp.asarray(self.count))
+        nxt = np.asarray(nxt, np.int32)
         self.stats["decode_steps"] += 1
+        now = time.perf_counter()
         for slot in active:
             req = self.slots[slot]
-            req.generated.append(int(nxt[slot]))
+            self._emit_token(req, int(nxt[slot]), now)
             self.pos[slot] += 1
             self.next_tok[slot] = int(nxt[slot])
+            self.count[slot] += 1
             self.stats["decode_tokens"] += 1
             self._finish_if_done(slot)
         self.stats["decode_s"] += time.perf_counter() - t0
@@ -253,17 +352,19 @@ class ServeEngine:
     # -- driving ------------------------------------------------------------
 
     def step(self) -> None:
-        """One engine tick: admit whatever fits, then decode every active
-        slot by one token. Accumulates wall_s so summary() rates are
-        correct for callers driving step() directly, not just run()."""
+        """One engine tick: enforce deadlines, admit whatever fits, then
+        decode every active slot by one token. Accumulates wall_s so
+        summary() rates are correct for callers driving step() directly,
+        not just run()."""
         t0 = time.perf_counter()
+        self._evict(t0)
         self._admit()
         self._decode_all()
         self.stats["wall_s"] += time.perf_counter() - t0
 
     def run(self) -> None:
         """Drain queue + slots to completion."""
-        while self.queue or any(r is not None for r in self.slots):
+        while self.busy:
             self.step()
 
     # -- reporting ----------------------------------------------------------
@@ -284,4 +385,5 @@ class ServeEngine:
         s["weight_bytes"] = self.weight_report["total_bytes"]
         s["weight_mib"] = self.weight_report["total_bytes"] / 2**20
         s["quantized"] = self.quantized
+        s["scheduler"] = getattr(self.sched, "name", type(self.sched).__name__)
         return s

@@ -1,0 +1,138 @@
+"""Per-request sampling, executed DEVICE-SIDE inside the jitted decode.
+
+The contract that makes streaming serving fast: the host never sees
+logits. ``sample_tokens`` runs inside the engine's jitted prefill/decode
+step and returns one int32 token per slot; the only device->host transfer
+per engine tick is that (B,) token vector (which the greedy engine already
+paid for its argmax result).
+
+Per-slot parameters ride in as (B,) arrays so ONE executable serves any
+mix of requests — greedy next to temperature-0.8/top-k next to nucleus:
+
+* ``temperature <= 0`` lowers to ``jnp.argmax`` over the raw logits —
+  the same op on the same array the pre-redesign greedy engine ran, so
+  temperature-0 rows are token-for-token identical to it (f32 and int8).
+* ``top_k = 0`` / ``top_p = 1.0`` disable those filters; free slots ride
+  along as greedy rows whose sampled token is never read.
+
+Determinism: the per-row PRNG key is ``fold_in(PRNGKey(seed), n)`` where
+``n`` counts that REQUEST's sampled tokens (prefill token = 0). It depends
+only on (seed, token index) — never on the slot, the engine tick, or which
+other requests share the batch — so fixed-seed generations are identical
+under ``run()``, manual ``step()`` loops, or any admission interleaving.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+GREEDY_TEMPERATURE = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Everything the engine needs to know about one request.
+
+    temperature: 0 => greedy argmax (the default, bitwise-compatible with
+        the legacy engine); > 0 scales logits before sampling.
+    top_k: keep only the k highest logits (0 = off).
+    top_p: nucleus sampling — keep the smallest prefix of the sorted
+        distribution with cumulative probability >= top_p (1.0 = off).
+    seed: per-request RNG seed; None derives a stable one from the rid at
+        submit time, so sampled requests are reproducible by default.
+    max_new: generation budget (prefill always emits the first token).
+    eos_id: stop token (None = run to max_new).
+    deadline_s: wall-clock budget from submit(); a deadline-aware
+        scheduler evicts the request once it expires (EVICTED event).
+    priority: higher admits first under the priority scheduler (FIFO
+        within a priority level); ignored by FCFS/shortest-prompt.
+    """
+
+    temperature: float = GREEDY_TEMPERATURE
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int | None = None
+    max_new: int = 16
+    eos_id: int | None = None
+    deadline_s: float | None = None
+    priority: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 = off), got {self.top_k}")
+        if not 0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.max_new < 1:
+            raise ValueError("max_new must be >= 1 (prefill always emits "
+                             "the first token)")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {self.deadline_s}")
+
+    def resolved(self, rid: int, max_new: int | None = None,
+                 eos_id: int | None = None) -> "SamplingParams":
+        """Fill per-request defaults: explicit submit() overrides win, and
+        a missing seed becomes a stable function of the rid (so replaying
+        the same submission order reproduces the same generations)."""
+        return dataclasses.replace(
+            self,
+            max_new=self.max_new if max_new is None else max_new,
+            eos_id=self.eos_id if eos_id is None else eos_id,
+            seed=self.seed if self.seed is not None else rid)
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature <= GREEDY_TEMPERATURE
+
+
+def sample_tokens(logits, temperature, top_k, top_p, seeds, counts):
+    """Device-side batched sampling: (B, V) logits -> (B,) int32 tokens.
+
+    temperature/top_p (B,) f32, top_k/counts (B,) int32, seeds (B,) uint32.
+    Jit-traceable; rows with temperature <= 0 return the exact
+    ``jnp.argmax(logits, -1)`` the greedy engine computed (the sampled
+    branch is evaluated but discarded by ``where``).
+
+    Filter order matches the common serving convention (sequential
+    warpers): temperature scale, then top-k, then top-p over the
+    RENORMALIZED top-k-filtered distribution, then categorical. One
+    descending sort per row serves both filters (O(V log V) jnp — on
+    smoke vocabs this is noise; a fused TPU kernel is future work). An
+    ALL-greedy batch never pays for it: ``lax.cond`` skips the sampling
+    branch entirely, so the default engine path stays at the legacy
+    argmax-only decode cost.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def _sampled(_):
+        lg = logits.astype(jnp.float32)
+        v = lg.shape[-1]
+        safe_t = jnp.where(temperature <= 0, 1.0, temperature)[:, None]
+        order = jnp.argsort(-lg, axis=-1)                   # descending
+        scaled = jnp.take_along_axis(lg, order, axis=-1) / safe_t
+        ranks = jnp.arange(v, dtype=jnp.int32)[None, :]
+        k = jnp.where(top_k <= 0, v, top_k).astype(jnp.int32)[:, None]
+        keep = ranks < k
+        # nucleus cut over the top-k-RENORMALIZED distribution (softmax of
+        # the filtered logits): keep a token while the renormalized mass
+        # BEFORE it is < top_p (rank 0 always kept)
+        probs = jax.nn.softmax(jnp.where(keep, scaled, -jnp.inf), axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        keep &= (cum - probs) < top_p[:, None]
+        keep = keep.at[:, 0].set(True)
+        masked = jnp.where(keep, scaled, -jnp.inf)
+
+        def one(seed, count, row):
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
+            return jax.random.categorical(key, row)
+
+        drawn = jax.vmap(one)(seeds, counts, masked)        # sorted index
+        sampled = jnp.take_along_axis(
+            order, drawn[:, None], axis=-1)[:, 0].astype(jnp.int32)
+        return jnp.where(temperature <= 0, greedy, sampled)
+
+    return jax.lax.cond(jnp.any(temperature > 0), _sampled,
+                        lambda _: greedy, None)

@@ -24,7 +24,24 @@ def _engine(arch="qwen2-0.5b", **kw):
 def test_bucket_for():
     assert bucket_for(3, (4, 8)) == 4
     assert bucket_for(4, (4, 8)) == 4
-    assert bucket_for(9, (4, 8)) == 9   # beyond largest: exact length
+    # beyond the largest bucket: round UP to multiples of it (bounded jit
+    # cache under adversarial prompt lengths), capped at max_cache
+    assert bucket_for(9, (4, 8)) == 16
+    assert bucket_for(16, (4, 8)) == 16
+    assert bucket_for(17, (4, 8)) == 24
+    assert bucket_for(9, (4, 8), max_cache=12) == 12
+    assert bucket_for(9, (4, 16), max_cache=12) == 12   # in-bucket capped too
+
+
+def test_overlong_prompts_share_prefill_executables():
+    """Adversarial prompt lengths beyond the largest bucket must map to a
+    SMALL set of padded lengths (multiples of the largest bucket), not one
+    exact-length compile each."""
+    buckets = (4, 8)
+    lengths = range(9, 33)
+    padded = {bucket_for(n, buckets, max_cache=64) for n in lengths}
+    assert padded == {16, 24, 32}
+    assert all(b % buckets[-1] == 0 for b in padded)
 
 
 def test_more_requests_than_slots_recycles():
