@@ -1,0 +1,116 @@
+#!/usr/bin/env python
+"""Trend gate over serve-benchmark JSON (schema v3, benchmarks/common.py).
+
+``python scripts/bench_gate.py NEW.json [--baseline BENCH_serve.json]``
+
+Fails LOUDLY (non-zero exit, one line per violation) when a serving
+latency metric regresses beyond tolerance. Two kinds of checks:
+
+* ABSOLUTE bars on host-load-invariant RATIOS — the acceptance criteria
+  themselves, checked on every run regardless of baseline:
+    - chunked-prefill TPOT tax: ``tpot_p95_ratio`` <= 1.5 (a mixed trace
+      with an 8k prefill in flight vs the no-long-prompt baseline);
+    - paged decode overhead: ``paged_over_dense`` >= 0.5 (the page-table
+      gather must not halve decode throughput);
+    - prefix attach win: ``cold_over_hit`` >= 2 and ``prefix_hit_tokens``
+      >= 8000 (an 8k shared prefix must actually attach, not re-prefill).
+
+* RELATIVE drift vs the committed baseline, ratio metrics only — raw
+  microsecond columns vary with runner hardware and are NOT gated, so a
+  slower CI machine cannot fake a regression; a changed engine can.
+
+Exit codes: 0 clean, 1 violations, 2 malformed input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# (record name, key, op, bound) — op "max": value must be <= bound,
+# "min": value must be >= bound
+ABSOLUTE_BARS = [
+    ("tab2/serve_chunked_mixed", "tpot_p95_ratio", "max", 1.5),
+    ("tab2/serve_paged_decode", "paged_over_dense", "min", 0.5),
+    ("tab2/serve_prefix_attach_8k", "cold_over_hit", "min", 2.0),
+    ("tab2/serve_prefix_attach_8k", "prefix_hit_tokens", "min", 8000),
+]
+
+# ratio metrics allowed to drift at most this factor vs the baseline
+RELATIVE_KEYS = [
+    ("tab2/serve_chunked_mixed", "tpot_p95_ratio"),
+    ("tab2/serve_paged_decode", "paged_over_dense"),
+]
+RELATIVE_TOLERANCE = 1.35
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    if "records" not in payload:
+        sys.exit(f"bench_gate: {path} has no 'records' (schema v3 expected)")
+    return {r["name"]: r for r in payload["records"]}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new", help="freshly produced benchmark JSON")
+    ap.add_argument("--baseline", default="BENCH_serve.json",
+                    help="committed baseline to diff ratio metrics against "
+                         "('' skips the relative checks)")
+    args = ap.parse_args()
+
+    try:
+        new = load(args.new)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_gate: cannot read {args.new}: {e}", file=sys.stderr)
+        return 2
+
+    bad = []
+    for name, key, op, bound in ABSOLUTE_BARS:
+        rec = new.get(name)
+        if rec is None or key not in rec:
+            bad.append(f"MISSING {name}:{key} — the serve benchmark no "
+                       "longer emits the gated metric")
+            continue
+        v = rec[key]
+        ok = v <= bound if op == "max" else v >= bound
+        if not ok:
+            sign = "<=" if op == "max" else ">="
+            bad.append(f"ABSOLUTE {name}:{key} = {v} violates {sign} {bound}")
+
+    if args.baseline:
+        try:
+            base = load(args.baseline)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"bench_gate: cannot read baseline {args.baseline}: {e}",
+                  file=sys.stderr)
+            return 2
+        for name, key in RELATIVE_KEYS:
+            if name not in new or name not in base:
+                continue
+            v, b = new[name].get(key), base[name].get(key)
+            if v is None or b is None or b == 0:
+                continue
+            # direction-aware: tpot ratio regresses UP, throughput
+            # ratios regress DOWN — flag only the harmful direction
+            worse = v / b if key == "tpot_p95_ratio" else b / v
+            if worse > RELATIVE_TOLERANCE:
+                bad.append(f"RELATIVE {name}:{key} = {v} vs baseline {b} "
+                           f"(x{worse:.2f} worse > x{RELATIVE_TOLERANCE} "
+                           "tolerance)")
+
+    if bad:
+        print("bench_gate: FAIL", file=sys.stderr)
+        for line in bad:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print("bench_gate: OK "
+          f"({len(ABSOLUTE_BARS)} absolute bars"
+          + (f", {len(RELATIVE_KEYS)} relative checks" if args.baseline
+             else "") + ")")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

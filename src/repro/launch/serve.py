@@ -126,6 +126,23 @@ def main():
                     help="sampling seed (default: stable per-request rid)")
     ap.add_argument("--sched", default="fcfs", choices=sorted(SCHEDULERS),
                     help="admission policy (serve/scheduler.py)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV pool with prefix sharing + chunked "
+                         "prefill (serve/kvpool.py); needs full causal "
+                         "attention in every layer")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV positions per page (paged mode)")
+    ap.add_argument("--total-pages", type=int, default=0,
+                    help="pool size (0 => dense-equivalent capacity)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="tokens per chunked-prefill tick (0 => largest "
+                         "bucket)")
+    ap.add_argument("--prefill-every", type=int, default=1,
+                    help="run chunked prefill every Nth tick while decodes "
+                         "are active (higher => lower decode TPOT tax, "
+                         "slower long-prompt TTFT)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable cross-request radix prefix reuse")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they are generated plus "
                          "per-request TTFT/TPOT, instead of the batch "
@@ -135,6 +152,13 @@ def main():
     key = jax.random.PRNGKey(0)
     slots = args.max_slots or min(args.batch, 4)
     max_cache = args.prompt_len + args.tokens + 1
+    paged_kw = {}
+    if args.paged:
+        paged_kw = dict(paged=True, page_size=args.page_size,
+                        total_pages=args.total_pages or None,
+                        prefill_chunk=args.prefill_chunk or None,
+                        prefill_every=args.prefill_every,
+                        prefix_cache=not args.no_prefix_cache)
     if args.ckpt:
         params, plan, _ = api.convert.load_checkpoint(args.ckpt)
         if plan is None:
@@ -143,7 +167,8 @@ def main():
             plan = plan.quantized(args.quant)
             params = api.convert.quantize(params, plan)
         engine = ServeEngine(params, plan=plan, max_slots=slots,
-                             max_cache=max_cache, scheduler=args.sched)
+                             max_cache=max_cache, scheduler=args.sched,
+                             **paged_kw)
         cfg = engine.cfg
     else:
         cfg = configs.get(args.arch) if args.full \
@@ -158,7 +183,8 @@ def main():
             plan = plan.quantized(args.quant)
             params = api.convert.quantize(params, plan)
         engine = ServeEngine(params, plan=plan, max_slots=slots,
-                             max_cache=max_cache, scheduler=args.sched)
+                             max_cache=max_cache, scheduler=args.sched,
+                             **paged_kw)
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p, seed=args.seed)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
@@ -176,9 +202,15 @@ def main():
     qtag = " quant=int8" if engine.quantized else ""
     stag = "" if sp.is_greedy else (f" T={sp.temperature}"
                                     f" top_k={sp.top_k} top_p={sp.top_p}")
+    ptag = ""
+    if s["paged"]:
+        ptag = (f" paged pg={s['page_size']} pages={s['total_pages']} "
+                f"chunks={s['prefill_chunks']} "
+                f"prefix_hits={s['prefix_hit_tokens']}")
     print(f"[serve] arch={cfg.name} wasi={cfg.wasi.method}{qtag}{stag} "
           f"sched={s['scheduler']} slots={slots} requests={args.batch} "
-          f"wall={dt:.2f}s weights={s['weight_mib']:.2f}MiB")
+          f"wall={dt:.2f}s weights={s['weight_mib']:.2f}MiB "
+          f"kv={s['cache_bytes'] / 2**20:.2f}MiB{ptag}")
     print(f"[serve] prefill {s['prefill_tokens']} tok "
           f"({s['prefill_tok_s']:.1f} tok/s, one forward per admission "
           f"group) | decode {s['decode_tokens']} tok "

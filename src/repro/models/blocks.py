@@ -116,13 +116,17 @@ def apply_block(kind: str, p: dict, x: jax.Array, cfg: ModelConfig, *,
                 cache: dict | None = None, pos=None,
                 states: dict | None = None,
                 policy: MeshPolicy | None = None,
-                valid_len: jax.Array | None = None):
+                valid_len: jax.Array | None = None,
+                page_table: jax.Array | None = None):
     """Returns (x, new_cache, new_states, aux_loss).
 
     With a cache and S > 1 this is a token-parallel PREFILL step: the block
     attends/scans over the whole prompt and writes its decode cache in the
     same pass. ``valid_len`` (B,) masks right-padded rows (length-bucketed
-    serve admission) out of cache writes and recurrent-state updates."""
+    serve admission) out of cache writes and recurrent-state updates.
+    ``page_table`` (B, pages_per_slot) rides along when the cache is the
+    paged pool (nn/attention.py::PagedKVCache) — one table serves every
+    layer, since page allocation is layer-independent."""
     st = states or {}
     new_st = {}
     aux = jnp.zeros((), jnp.float32)
@@ -133,7 +137,8 @@ def apply_block(kind: str, p: dict, x: jax.Array, cfg: ModelConfig, *,
         a, new_kv, s_attn = apply_attention(
             p["attn"], h, cfg, causal=True, window=window,
             cache=None if cache is None else cache["kv"], pos=pos,
-            states=st.get("attn"), policy=policy, valid_len=valid_len)
+            states=st.get("attn"), policy=policy, valid_len=valid_len,
+            page_table=page_table)
         new_st["attn"] = s_attn
         x = x + a
         h = apply_norm(cfg.norm, p["ln2"], x)

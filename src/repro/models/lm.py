@@ -96,17 +96,50 @@ def init_lm_states(key, cfg: ModelConfig, batch: int, seq: int,
 
 
 def init_lm_cache(cfg: ModelConfig, batch: int, seq: int,
-                  dtype=jnp.bfloat16) -> list:
-    """Decode caches, mirroring params['groups'] structure (stacked)."""
+                  dtype=jnp.bfloat16, *,
+                  pages: int | None = None,
+                  page_size: int | None = None) -> list:
+    """Decode caches, mirroring params['groups'] structure (stacked).
+
+    With ``pages``/``page_size`` set, full-attention KV caches become
+    per-layer PAGED pools of shape (repeat, pages, page_size, KVH, Dh)
+    shared by all serve slots — ``batch``/``seq`` then only bound the
+    LOGICAL per-slot view the engine gathers through its page table
+    (serve/kvpool.py), decoupling live slot count from ``max_cache``.
+    Only causal full-attention layers can be paged; sliding-window and
+    recurrent (Mamba) caches raise — the engine gates paged mode to
+    configs where every layer qualifies (``supports_paging``)."""
+    if (pages is None) != (page_size is None):
+        raise ValueError("pages and page_size must be given together")
     out = []
     for g in cfg.groups:
         stacked = []
         for kind in g.pattern:
-            one = init_block_cache(kind, cfg, batch, seq, dtype)
+            if pages is None:
+                one = init_block_cache(kind, cfg, batch, seq, dtype)
+            else:
+                from repro.models.blocks import block_window
+                from repro.nn.attention import init_paged_cache
+
+                if kind not in ("dense", "moe") or block_window(kind, cfg):
+                    raise ValueError(
+                        f"block kind {kind!r} cannot use a paged KV cache "
+                        "(causal full attention only)")
+                one = {"kv": init_paged_cache(cfg, pages, page_size, dtype)}
             stacked.append(jax.tree.map(
                 lambda x: jnp.broadcast_to(x, (g.repeat,) + x.shape), one))
         out.append(stacked)
     return out
+
+
+def supports_paging(cfg: ModelConfig) -> bool:
+    """True when every layer's decode state can live in a paged pool:
+    causal full attention only (no sliding window, no recurrent SSM/conv
+    state, no shared-attention interleave)."""
+    from repro.models.blocks import block_window
+
+    return all(kind in ("dense", "moe") and not block_window(kind, cfg)
+               for g in cfg.groups for kind in g.pattern)
 
 
 def _empty_like_states(cfg: ModelConfig) -> list:
@@ -115,7 +148,8 @@ def _empty_like_states(cfg: ModelConfig) -> list:
 
 
 def _group_scan(cfg: ModelConfig, gi: int, x, gparams, gstates, gcaches,
-                shared, pos, policy, with_states: bool, valid_len=None):
+                shared, pos, policy, with_states: bool, valid_len=None,
+                page_table=None):
     """Scan one layer group. gparams/gstates/gcaches: list per pattern pos."""
     g = cfg.groups[gi]
 
@@ -131,7 +165,7 @@ def _group_scan(cfg: ModelConfig, gi: int, x, gparams, gstates, gcaches,
                 kind, pslices[j], h, cfg, shared=shared,
                 cache=cslices[j] if with_caches else None,
                 pos=pos, states=sslices[j] if with_states else None,
-                policy=policy, valid_len=valid_len)
+                policy=policy, valid_len=valid_len, page_table=page_table)
             # SP residual storage: the tensor saved at the remat boundary
             # is seq-sharded on the model axis (EXPERIMENTS.md §Perf)
             h = shard(h, policy, "batch", "seq_resid", None)
@@ -153,7 +187,8 @@ def _group_scan(cfg: ModelConfig, gi: int, x, gparams, gstates, gcaches,
 
 
 def lm_backbone(params, x, cfg: ModelConfig, *, states=None, caches=None,
-                pos=None, policy: MeshPolicy | None = None, valid_len=None):
+                pos=None, policy: MeshPolicy | None = None, valid_len=None,
+                page_table=None):
     """Run embedded hidden states through all layer groups.
     Returns (x, new_states, new_caches, aux)."""
     shared = params.get("shared_attn")
@@ -165,7 +200,7 @@ def lm_backbone(params, x, cfg: ModelConfig, *, states=None, caches=None,
             cfg, gi, x, params["groups"][gi],
             states[gi] if with_states else None,
             caches[gi] if caches is not None else None,
-            shared, pos, policy, with_states, valid_len)
+            shared, pos, policy, with_states, valid_len, page_table)
         new_states.append(ns)
         new_caches.append(nc)
         aux_total = aux_total + aux.sum()
@@ -217,21 +252,24 @@ def lm_loss(params, batch: dict, cfg: ModelConfig, *, states=None,
 
 
 def lm_decode_step(params, token, caches, pos, cfg: ModelConfig, *,
-                   policy: MeshPolicy | None = None):
+                   policy: MeshPolicy | None = None, page_table=None):
     """One serve step. token (B, 1) int32; pos: absolute position of this
     token — a scalar (lockstep batch) or a (B,) vector of per-slot positions
     (continuous batching: each serve slot is at its own depth).
+    ``page_table`` (B, pages_per_slot) routes reads/writes through the
+    paged KV pool when ``caches`` came from ``init_lm_cache(..., pages=)``.
     Returns (logits (B, V), new_caches)."""
     x = params["embed"]["w"].astype(jnp.float32)[token].astype(
         jnp.dtype(cfg.dtype))
     x, _, nc, _ = lm_backbone(params, x, cfg, states=None, caches=caches,
-                              pos=pos, policy=policy)
+                              pos=pos, policy=policy, page_table=page_table)
     return _logits(params, x, cfg, policy)[:, 0], nc
 
 
 def lm_prefill(params, tokens, cfg: ModelConfig, *, caches,
                valid_len=None, last_only: bool = False,
-               policy: MeshPolicy | None = None):
+               policy: MeshPolicy | None = None,
+               pos=None, page_table=None):
     """Token-parallel prefill: ONE forward over the whole prompt that also
     writes every layer's decode cache (KV slots — full and rolling — plus
     Mamba conv buffers and recurrent states) in the same pass. No per-token
@@ -250,12 +288,22 @@ def lm_prefill(params, tokens, cfg: ModelConfig, *, caches,
     before the output projection and returns (B, 1, V) — serving only needs
     one next-token distribution per prompt, so this skips P-1 rows of vocab
     projection (with bucket-padded admission the saving is bucket-sized).
+
+    Paged chunked prefill: with ``page_table`` and a paged cache, ``pos``
+    is a (B,) vector of absolute chunk offsets and ``tokens`` is ONE chunk
+    of a longer prompt; attention runs against the slot's whole logical
+    cache (earlier chunks, shared prefix pages), so a prompt may prefill
+    across several calls. ``valid_len`` then counts valid rows WITHIN the
+    chunk, and the ``last_only`` gather picks the chunk's last valid row —
+    only the final chunk's logits mean anything (the engine ignores the
+    rest).
     """
     x = params["embed"]["w"].astype(jnp.float32)[tokens].astype(
         jnp.dtype(cfg.dtype))
     x = shard(x, policy, "batch", "seq", None)
     x, _, nc, _ = lm_backbone(params, x, cfg, states=None, caches=caches,
-                              pos=0, policy=policy, valid_len=valid_len)
+                              pos=0 if pos is None else pos, policy=policy,
+                              valid_len=valid_len, page_table=page_table)
     if last_only:
         last = (jnp.full((x.shape[0],), x.shape[1] - 1, jnp.int32)
                 if valid_len is None else valid_len - 1)

@@ -36,6 +36,27 @@ class KVCache(NamedTuple):
     v: jax.Array  # (B, S_cache, KVH, Dh)
 
 
+class PagedKVCache(NamedTuple):
+    """Pooled KV storage: pages instead of per-slot rows.
+
+    The batch dimension is gone — storage is a pool of ``n_pages`` pages of
+    ``page_size`` token slots each, shared by every serve slot. A per-slot
+    ``page_table`` (B, pages_per_slot) int32 maps logical page j of slot b
+    to a physical page; reads gather the table into a (B, S_logical) view,
+    writes scatter through it. Page 0 is the engine's trash page (dead and
+    still-prefilling rows point their table there), so the pool never needs
+    per-row validity flags: a position is readable iff the causal mask says
+    so, exactly as with dense caches.
+    """
+
+    k: jax.Array  # (n_pages, page_size, KVH, Dh)
+    v: jax.Array  # (n_pages, page_size, KVH, Dh)
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[1]
+
+
 # ---------------------------------------------------------------------------
 # Parameter init / projection plumbing
 # ---------------------------------------------------------------------------
@@ -305,6 +326,80 @@ def init_cache(cfg: ModelConfig, batch: int, seq: int, *, window: int = 0,
     return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
 
 
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     dtype=jnp.bfloat16) -> PagedKVCache:
+    """Pooled KV storage for one layer: ``n_pages`` pages shared by every
+    serve slot (serve/kvpool.py owns the page accounting)."""
+    kvh, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (n_pages, page_size, kvh, dh)
+    return PagedKVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Paged gather / scatter / attention
+# ---------------------------------------------------------------------------
+
+def paged_gather(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """(n_pages, PG, KVH, Dh) pool + (B, P) table -> (B, P*PG, KVH, Dh)
+    per-slot logical view. Positions no page was written at hold whatever
+    the physical page last held — every read below masks by position, so
+    such slots contribute an exact softmax weight of zero."""
+    g = pool[page_table]                        # (B, P, PG, KVH, Dh)
+    b, p, pg = g.shape[:3]
+    return g.reshape(b, p * pg, *g.shape[3:])
+
+
+def paged_update_decode(cache: PagedKVCache, k_new, v_new, pos,
+                        page_table: jax.Array) -> PagedKVCache:
+    """Write one token's K/V per row at absolute position ``pos`` (B,)
+    through the page table. The engine guarantees the page under any LIVE
+    row's write position is exclusively owned (shared prefix pages are
+    read-only by construction); dead rows carry an all-trash table, so
+    their lockstep writes collide harmlessly on page 0."""
+    pg = cache.page_size
+    pid = jnp.take_along_axis(page_table, (pos // pg)[:, None], axis=1)[:, 0]
+    off = pos % pg
+    return PagedKVCache(k=cache.k.at[pid, off].set(k_new[:, 0]),
+                        v=cache.v.at[pid, off].set(v_new[:, 0]))
+
+
+def paged_update_prefill(cache: PagedKVCache, k_new, v_new, offset,
+                         page_table: jax.Array,
+                         valid_len: jax.Array | None = None) -> PagedKVCache:
+    """Write one prefill chunk (B, C) of K/V at absolute positions
+    ``offset[b] + i`` through the page table. ``valid_len`` (B,) counts the
+    chunk's valid rows; padded positions are routed to the trash page."""
+    b, c = k_new.shape[:2]
+    pos = offset[:, None] + jnp.arange(c)[None, :]            # (B, C) abs
+    pid = jnp.take_along_axis(page_table, pos // cache.page_size, axis=1)
+    if valid_len is not None:
+        pid = jnp.where(jnp.arange(c)[None, :] < valid_len[:, None], pid, 0)
+    off = pos % cache.page_size
+    return PagedKVCache(k=cache.k.at[pid, off].set(k_new),
+                        v=cache.v.at[pid, off].set(v_new))
+
+
+def paged_prefill_attention(q, cache: PagedKVCache, page_table, qpos):
+    """Chunked-prefill attention: q (B, C, H, Dh) at absolute positions
+    ``qpos`` (B, C) attends over the slot's ENTIRE logical cache (history
+    from earlier chunks and shared prefix pages included), masked causally
+    by absolute position. This is what lets a prompt prefill in chunks —
+    unlike the dense prefill path, which attends only within the chunk."""
+    k = paged_gather(cache.k, page_table)
+    v = paged_gather(cache.v, page_table)
+    b, c, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, c, kvh, g, dh) * (dh ** -0.5)
+    s = _gqa_scores(qg, k).astype(jnp.float32)      # (B,KVH,G,C,S_log)
+    kpos = jnp.arange(k.shape[1])
+    ok = kpos[None, None, :] <= qpos[:, :, None]    # (B, C, S_log)
+    s = s + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :, :]
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = _gqa_combine(p, v)
+    return o.reshape(b, c, h, dh)
+
+
 # ---------------------------------------------------------------------------
 # Full block-level attention apply
 # ---------------------------------------------------------------------------
@@ -316,6 +411,7 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
                     policy: MeshPolicy | None = None,
                     kv_memory: jax.Array | None = None,
                     valid_len: jax.Array | None = None,
+                    page_table: jax.Array | None = None,
                     chunked_threshold: int = 2048):
     """Attention sublayer (projections + core + output projection).
 
@@ -328,12 +424,26 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
       - decode:  cache given, S == 1   -> one-token step, cache updated
                  (``pos`` scalar, or (B,) per-slot for continuous batching)
       - cross:   kv_memory given       -> keys/values from encoder memory
+
+    A :class:`PagedKVCache` (``page_table`` required, (B, pages_per_slot))
+    switches the prefill/decode modes to the paged pool: reads gather the
+    slot's logical view through the table, writes scatter through it, and
+    prefill becomes CHUNKED — ``pos`` is a (B,) vector of absolute chunk
+    offsets and q attends over the whole logical cache (earlier chunks and
+    shared prefix pages), not just the chunk. Paged mode is causal
+    full-attention only (no sliding window, no cross-attention).
     Returns (out, new_cache, new_states).
     """
     h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     b, sq, _ = x.shape
     st = states or {}
     new_st = dict(st)
+    paged = isinstance(cache, PagedKVCache)
+    if paged:
+        if page_table is None:
+            raise ValueError("PagedKVCache needs a page_table")
+        if window > 0 or kv_memory is not None or not causal:
+            raise ValueError("paged KV supports causal full attention only")
 
     def maybe_rope(t, positions):
         # rope_theta <= 0 disables RoPE (whisper: absolute sinusoidal embeds)
@@ -372,6 +482,16 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
         else:
             o = dense_attention(q, k, v, causal=causal, window=window)
         new_cache = None
+    elif sq > 1 and paged:  # chunked prefill through the page table
+        k = proj("wk", x).reshape(b, sq, kvh, dh)
+        v = proj("wv", x).reshape(b, sq, kvh, dh)
+        offset = jnp.zeros((b,), jnp.int32) if pos is None else pos
+        qpos = offset[:, None] + jnp.arange(sq)[None, :]      # (B, C) abs
+        q = maybe_rope(q, qpos)
+        k = maybe_rope(k, qpos)
+        new_cache = paged_update_prefill(cache, k, v, offset, page_table,
+                                         valid_len=valid_len)
+        o = paged_prefill_attention(q, new_cache, page_table, qpos)
     elif sq > 1:  # token-parallel prefill: attend + build caches in one pass
         k = proj("wk", x).reshape(b, sq, kvh, dh)
         v = proj("wv", x).reshape(b, sq, kvh, dh)
@@ -387,6 +507,22 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
         else:
             o = dense_attention(q, k, v, causal=causal, window=window,
                                 q_offset=offset)
+    elif paged:  # decode one token per row through the page table
+        k = proj("wk", x).reshape(b, sq, kvh, dh)
+        v = proj("wv", x).reshape(b, sq, kvh, dh)
+        if not is_vector_pos(pos):
+            raise ValueError("paged decode needs per-row (B,) positions")
+        q = maybe_rope(q, pos[:, None])
+        k = maybe_rope(k, pos[:, None])
+        new_cache = paged_update_decode(cache, k, v, pos, page_table)
+        # gather the per-slot logical view and run the SAME masked decode
+        # attention the dense path runs — with pages_per_slot * page_size
+        # equal to the dense cache length this is the identical executable
+        # shape, which is what makes paged decode bitwise-comparable to the
+        # dense oracle in tests/test_serve_fuzz.py
+        gathered = KVCache(k=paged_gather(new_cache.k, page_table),
+                           v=paged_gather(new_cache.v, page_table))
+        o = decode_attention(q, gathered, pos, window=0)
     else:  # decode one token at absolute position ``pos`` (scalar or (B,))
         k = proj("wk", x).reshape(b, sq, kvh, dh)
         v = proj("wv", x).reshape(b, sq, kvh, dh)

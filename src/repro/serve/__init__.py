@@ -4,11 +4,19 @@ The engine owns the decode caches and the slot <-> request mapping; model
 code stays purely functional (models/lm.py). Sampling runs device-side
 inside the jitted decode (sampling.py), the request lifecycle streams
 typed events through GenerationHandle (session.py), and admission policy
-is a pluggable Scheduler (scheduler.py). See docs/serving.md for the
+is a pluggable Scheduler (scheduler.py). KV storage is either dense
+per-slot (the oracle path) or a paged pool with refcounted prefix
+sharing and chunked prefill (kvpool.py). See docs/serving.md for the
 request lifecycle and docs/architecture.md for the slot/caches design.
 """
 
-from repro.serve.engine import DEFAULT_BUCKETS, ServeEngine, bucket_for
+from repro.serve.engine import (
+    DEFAULT_BUCKETS,
+    DEFAULT_PAGE_SIZE,
+    ServeEngine,
+    bucket_for,
+)
+from repro.serve.kvpool import PagePool, RadixCache, pages_needed
 from repro.serve.sampling import SamplingParams, sample_tokens
 from repro.serve.scheduler import (
     FCFS,
@@ -22,11 +30,14 @@ from repro.serve.session import Event, EventKind, GenerationHandle, Request
 
 __all__ = [
     "DEFAULT_BUCKETS",
+    "DEFAULT_PAGE_SIZE",
     "Event",
     "EventKind",
     "FCFS",
     "GenerationHandle",
+    "PagePool",
     "PriorityDeadline",
+    "RadixCache",
     "Request",
     "SCHEDULERS",
     "SamplingParams",
@@ -35,5 +46,6 @@ __all__ = [
     "ShortestPromptFirst",
     "bucket_for",
     "make_scheduler",
+    "pages_needed",
     "sample_tokens",
 ]

@@ -1,26 +1,41 @@
 """Continuous-batching serve engine: streaming request lifecycle over a
-fixed slot pool, with device-side sampling and pluggable scheduling.
+fixed slot pool, with device-side sampling, pluggable scheduling, and an
+optional paged KV pool with prefix sharing and chunked prefill.
 
 Design (the TrainDeeploy lesson: kernel and serving loop co-designed):
 
-* The engine owns ONE set of batched decode caches (`init_lm_cache` with
-  batch = max_slots). A *slot* is a batch row; admitting a request means
-  prefilling its prompt into that row, finishing (or cancelling, or
-  evicting) means freeing the row for the next queued request. Model code
-  never sees the queue.
+* The engine owns ONE set of batched decode caches. A *slot* is a batch
+  row; admitting a request means prefilling its prompt into that row,
+  finishing (or cancelling, or evicting) means freeing the row for the
+  next queued request. Model code never sees the queue.
 
-* Prefill is token-parallel (`lm_prefill`): one forward over the whole
-  prompt writes every layer's KV slots / conv buffers / SSM states. To keep
-  jit recompiles bounded, admitted prompts are right-padded to a small set
-  of bucket lengths (overlong prompts round up to multiples of the largest
-  bucket, capped at `max_cache`) and the per-row true length rides in as
-  `valid_len`. Same-bucket admissions prefill together as one batch.
+* DENSE mode (`paged=False`, the oracle path): `init_lm_cache` with
+  batch = max_slots — every slot reserves `max_cache` KV in every layer.
+  Prefill is token-parallel (`lm_prefill`): admitted prompts are
+  right-padded to a small set of bucket lengths and same-bucket
+  admissions prefill together as one batch.
+
+* PAGED mode (`paged=True` / `"auto"`): KV storage is a pool of
+  fixed-size pages (`serve/kvpool.py` owns refcounts + free list;
+  `nn/attention.py::PagedKVCache` is the device side). Each slot maps
+  logical pages to physical ones through a per-slot page-table row, so
+  live slot count decouples from `max_cache` — a 12-token prompt holds
+  pages for 12+max_new tokens, not max_cache. A radix tree over prompt
+  prefixes lets a shared system prompt prefill ONCE: later requests
+  attach the shared pages by refcount and prefill only their suffix.
+  Prefill is CHUNKED — at most `prefill_chunks_per_tick` fixed-size
+  chunks advance per engine tick, interleaved with the decode tick, so
+  one 8k prompt cannot spike every other request's TPOT. Paged mode
+  needs causal full attention in every layer (`supports_paging`);
+  sliding-window / Mamba configs serve dense.
 
 * Decode runs ALL slots in lockstep shapes but at per-slot positions
   (`pos` is a (B,) vector): every active request decodes one token per
   engine tick regardless of when it was admitted — that is the continuous
-  batching. Free slots ride along as dead rows (their writes land at stale
-  positions that the causal/rolling masks provably never read back).
+  batching. Free (and still-prefilling) slots ride along as dead rows:
+  dense dead rows write at stale positions the causal masks provably
+  never read back; paged dead rows carry an all-zero page-table row, so
+  their writes land on the reserved trash page.
 
 * Sampling is DEVICE-SIDE (`serve/sampling.py`): per-slot temperature /
   top-k / top-p / RNG key arrays ride into the jitted prefill and decode
@@ -32,9 +47,13 @@ Design (the TrainDeeploy lesson: kernel and serving loop co-designed):
   returns a `GenerationHandle` streaming TOKEN / FINISHED / CANCELLED /
   EVICTED events with TTFT/TPOT on the handle; admission order and
   deadline eviction are a pluggable `Scheduler` (`serve/scheduler.py`).
+  In paged mode a popped request that cannot get enough pages is pushed
+  back to the scheduler and admission stops for the tick — pages free as
+  running requests retire (or the prefix cache evicts LRU entries).
 
-The jit cache ends up with exactly one decode executable plus one prefill
-executable per (bucket, group-size) pair actually seen.
+The jit cache ends up with one decode executable, plus (dense) one
+prefill executable per (bucket, group-size) pair actually seen or
+(paged) exactly ONE chunk-prefill executable regardless of prompt mix.
 """
 from __future__ import annotations
 
@@ -48,12 +67,19 @@ import numpy as np
 
 from repro.api.plan import SubspacePlan, install, installed, plan_of
 from repro.config import ModelConfig
-from repro.models.lm import init_lm_cache, lm_decode_step, lm_prefill
+from repro.models.lm import (
+    init_lm_cache,
+    lm_decode_step,
+    lm_prefill,
+    supports_paging,
+)
+from repro.serve.kvpool import PagePool, RadixCache, pages_needed
 from repro.serve.sampling import SamplingParams, sample_tokens
 from repro.serve.scheduler import Scheduler, make_scheduler
 from repro.serve.session import Event, EventKind, GenerationHandle, Request
 
 DEFAULT_BUCKETS = (8, 16, 32, 64, 128, 256)
+DEFAULT_PAGE_SIZE = 16
 
 
 def bucket_for(length: int, buckets: Sequence[int],
@@ -78,7 +104,14 @@ class ServeEngine:
                  plan: SubspacePlan | None = None, max_slots: int = 4,
                  max_cache: int = 512,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
-                 scheduler: Scheduler | str = "fcfs"):
+                 scheduler: Scheduler | str = "fcfs",
+                 paged: bool | str = False,
+                 page_size: int = DEFAULT_PAGE_SIZE,
+                 total_pages: int | None = None,
+                 prefix_cache: bool = True,
+                 prefill_chunk: int | None = None,
+                 prefill_chunks_per_tick: int = 1,
+                 prefill_every: int = 1):
         if cfg is None:
             if plan is None:
                 raise ValueError("ServeEngine needs a ModelConfig or a "
@@ -115,8 +148,48 @@ class ServeEngine:
         from repro.utils.memprof import model_weight_bytes
         self.weight_report = model_weight_bytes(params)
         self.buckets = tuple(sorted(buckets))
-        self.caches = init_lm_cache(cfg, max_slots, max_cache,
-                                    dtype=jnp.dtype(cfg.dtype))
+
+        if paged == "auto":
+            paged = supports_paging(cfg)
+        elif paged and not supports_paging(cfg):
+            raise ValueError(
+                f"config {cfg.name!r} has layers a paged KV pool cannot hold "
+                "(sliding-window or recurrent state); serve it dense or use "
+                "paged='auto'")
+        self.paged = bool(paged)
+        dtype = jnp.dtype(cfg.dtype)
+        if self.paged:
+            self.page_size = int(page_size)
+            self.pages_per_slot = pages_needed(max_cache, page_size)
+            if total_pages is None:
+                # dense-equivalent capacity by default; pass fewer pages to
+                # oversubscribe slots, or more to grow the prefix cache
+                total_pages = max_slots * self.pages_per_slot + 1
+            self.pool = PagePool(total_pages, page_size)
+            self.radix = RadixCache(self.pool) if prefix_cache else None
+            self.prefill_chunk = int(prefill_chunk or self.buckets[-1])
+            self.prefill_chunks_per_tick = int(prefill_chunks_per_tick)
+            # stride: with decodes active, advance prefill only every Nth
+            # tick — each chunk attends over the full gathered history, so
+            # on long prompts a chunk can cost several decode ticks; the
+            # stride bounds its TPOT tax at the price of long-request TTFT
+            # (benchmarks/tab2_latency.py measures the trade)
+            self.prefill_every = max(1, int(prefill_every))
+            self._tick = 0
+            self.caches = init_lm_cache(cfg, max_slots, max_cache,
+                                        dtype=dtype, pages=total_pages,
+                                        page_size=page_size)
+            # host-side slot state: page-table rows, per-slot page lists,
+            # and the prefill cursor (abs position of the next unprefilled
+            # prompt token; None = not prefilling)
+            self.tables = np.zeros((max_slots, self.pages_per_slot), np.int32)
+            self.slot_pages: list[list[int]] = [[] for _ in range(max_slots)]
+            self._cursor: list[int | None] = [None] * max_slots
+            self._pf_rr = 0
+        else:
+            self.pool = self.radix = None
+            self.caches = init_lm_cache(cfg, max_slots, max_cache,
+                                        dtype=dtype)
         self.slots: list[Request | None] = [None] * max_slots
         # per-slot decode state, row-aligned with the cache batch axis:
         # position / next input token, plus the device-side sampling
@@ -129,20 +202,24 @@ class ServeEngine:
         self.seed = np.zeros(max_slots, np.uint32)
         self.count = np.zeros(max_slots, np.int32)
         self._rid = 0
-        self.stats = {"prefill_tokens": 0, "decode_steps": 0,
+        self.stats = {"prefill_tokens": 0, "prefill_chunks": 0,
+                      "prefix_hit_tokens": 0, "decode_steps": 0,
                       "decode_tokens": 0, "completed": 0, "cancelled": 0,
-                      "evicted": 0, "wall_s": 0.0, "prefill_s": 0.0,
-                      "decode_s": 0.0}
+                      "evicted": 0, "deferred": 0, "wall_s": 0.0,
+                      "prefill_s": 0.0, "decode_s": 0.0}
 
-        def _decode(params_, toks, caches, pos, temp, tk, tp, seeds, counts):
-            logits, caches = lm_decode_step(params_, toks, caches, pos, cfg)
+        def _decode(params_, toks, caches, pos, table,
+                    temp, tk, tp, seeds, counts):
+            logits, caches = lm_decode_step(params_, toks, caches, pos, cfg,
+                                            page_table=table)
             nxt = sample_tokens(logits, temp, tk, tp, seeds, counts)
             return nxt, caches
 
         def _prefill(params_, toks, caches, valid_len, rows,
                      temp, tk, tp, seeds):
-            # gather the admitted rows, prefill them as one batch, scatter
-            # back — cache leaves are (repeat, B, ...), batch on axis 1
+            # dense grouped prefill: gather the admitted rows, prefill them
+            # as one batch, scatter back — cache leaves are (repeat, B, ...),
+            # batch on axis 1
             sub = jax.tree.map(lambda a: a[:, rows], caches)
             logits, sub = lm_prefill(params_, toks, cfg, caches=sub,
                                      valid_len=valid_len, last_only=True)
@@ -151,6 +228,18 @@ class ServeEngine:
                                   jnp.zeros_like(seeds, jnp.int32))
             return first, new
 
+        def _prefill_chunk(params_, toks, caches, offset, valid_len, table,
+                           temp, tk, tp, seeds):
+            # paged chunk prefill: one (1, chunk) executable for EVERY
+            # prompt; the pool rides whole (pages are disjoint by
+            # construction) and the chunk writes through this slot's table
+            logits, caches = lm_prefill(params_, toks, cfg, caches=caches,
+                                        pos=offset, valid_len=valid_len,
+                                        last_only=True, page_table=table)
+            first = sample_tokens(logits[:, 0], temp, tk, tp, seeds,
+                                  jnp.zeros_like(seeds, jnp.int32))
+            return first, caches
+
         # donate the cache pytree: the engine rebinds self.caches on every
         # call and never touches the old buffers, so XLA can update KV/SSM
         # state in place instead of copying the whole cache per token.
@@ -158,6 +247,7 @@ class ServeEngine:
         donate = () if jax.default_backend() == "cpu" else (2,)
         self._decode = jax.jit(_decode, donate_argnums=donate)
         self._prefill = jax.jit(_prefill, donate_argnums=donate)
+        self._prefill_chunk = jax.jit(_prefill_chunk, donate_argnums=donate)
 
     @classmethod
     def from_checkpoint(cls, ckpt_dir: str, step: int | None = None,
@@ -196,6 +286,13 @@ class ServeEngine:
                 f"max_cache ({self.max_cache})")
         if len(prompt) < 1:
             raise ValueError("empty prompt")
+        if self.paged:
+            need = pages_needed(len(prompt) + sp.max_new, self.page_size)
+            if need > self.pool.usable_pages:
+                raise ValueError(
+                    f"request needs {need} pages but the pool has "
+                    f"{self.pool.usable_pages} usable (total_pages too "
+                    "small for this prompt + max_new)")
         req = Request(rid=self._rid, prompt=list(map(int, prompt)),
                       sampling=sp, submitted_at=time.perf_counter())
         self._rid += 1
@@ -231,16 +328,56 @@ class ServeEngine:
         driver) loops on."""
         return bool(len(self.sched)) or any(r is not None for r in self.slots)
 
+    # -- paged-pool maintenance ---------------------------------------------
+
+    def release_prefix_cache(self) -> int:
+        """Drop every radix-held page (frees them back to the pool).
+        Returns the number of pages released. After a full drain plus this
+        call, every page refcount is zero — the invariant the fuzz harness
+        pins."""
+        return self.radix.clear() if self.radix is not None else 0
+
+    def check_invariants(self) -> None:
+        """Audit the paged bookkeeping (no-op in dense mode): pool
+        structure is sound and every page's refcount equals its holder
+        count (slots holding it in their table + radix nodes)."""
+        if not self.paged:
+            return
+        self.pool.check()
+        expected = np.zeros(self.pool.total_pages, np.int64)
+        for slot, pages in enumerate(self.slot_pages):
+            if self.slots[slot] is not None:
+                for p in pages:
+                    expected[p] += 1
+        if self.radix is not None:
+            for p in self.radix.held_pages():
+                expected[p] += 1
+        actual = self.pool.refs.astype(np.int64)
+        if not (expected == actual).all():
+            bad = np.nonzero(expected != actual)[0]
+            raise AssertionError(
+                f"page refcount leak: pages {bad.tolist()} expected "
+                f"{expected[bad].tolist()} got {actual[bad].tolist()}")
+
     # -- internals ----------------------------------------------------------
 
     def _free_slot(self, slot: int) -> None:
         """Recycle a slot AND reset its sampling row to greedy defaults —
         a stale temperature on a dead row would keep ``jnp.any(temp > 0)``
-        true and defeat the all-greedy ``lax.cond`` fast path."""
+        true and defeat the all-greedy ``lax.cond`` fast path. In paged
+        mode also release the slot's page references and point its table
+        row at the trash page, so the dead row's lockstep writes can never
+        land in a page the pool hands to someone else."""
         self.slots[slot] = None
         self.temp[slot] = 0.0
         self.top_k[slot] = 0
         self.top_p[slot] = 1.0
+        if self.paged:
+            for p in self.slot_pages[slot]:
+                self.pool.unref(p)
+            self.slot_pages[slot] = []
+            self.tables[slot, :] = 0
+            self._cursor[slot] = None
 
     def _emit_token(self, req: Request, token: int, t: float) -> None:
         req.generated.append(token)
@@ -279,7 +416,20 @@ class ServeEngine:
                     break
             self._retire(req, EventKind.EVICTED, "deadline")
 
+    def _set_sampling_row(self, slot: int, req: Request) -> None:
+        sp = req.sampling
+        self.temp[slot] = sp.temperature
+        self.top_k[slot] = sp.top_k
+        self.top_p[slot] = sp.top_p
+        self.seed[slot] = np.uint32(sp.seed & 0xFFFFFFFF)
+
     def _admit(self) -> None:
+        if self.paged:
+            self._admit_paged()
+        else:
+            self._admit_dense()
+
+    def _admit_dense(self) -> None:
         free = [i for i, r in enumerate(self.slots) if r is None]
         if not free or not len(self.sched):
             return
@@ -303,11 +453,7 @@ class ServeEngine:
             toks = np.zeros((len(group), bucket), np.int32)
             for i, (slot, req) in enumerate(group):
                 toks[i, :len(req.prompt)] = req.prompt
-                sp = req.sampling
-                self.temp[slot] = sp.temperature
-                self.top_k[slot] = sp.top_k
-                self.top_p[slot] = sp.top_p
-                self.seed[slot] = np.uint32(sp.seed & 0xFFFFFFFF)
+                self._set_sampling_row(slot, req)
             first, self.caches = self._prefill(
                 self.params, jnp.asarray(toks), self.caches,
                 jnp.asarray(vlen), jnp.asarray(rows),
@@ -325,14 +471,141 @@ class ServeEngine:
                 self._finish_if_done(slot)
         self.stats["prefill_s"] += time.perf_counter() - t0
 
+    def _admit_paged(self) -> None:
+        """Admit queued requests into free slots by RESERVING pages —
+        prefill itself happens chunk-by-chunk in `_prefill_tick`. The
+        radix cache is consulted first: matched full-page prefixes attach
+        by reference (refcount bump, zero prefill) and the prefill cursor
+        starts past them. A request the pool cannot satisfy (even after
+        LRU eviction of unreferenced prefix-cache pages) goes back to the
+        scheduler and admission stops for this tick — running requests
+        will free pages as they retire."""
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        if not free or not len(self.sched):
+            return
+        t0 = time.perf_counter()
+        while free:
+            req = self.sched.pop(t0)
+            if req is None:
+                break
+            if req.terminal:
+                continue
+            prompt = req.prompt
+            pg = self.page_size
+            need = pages_needed(len(prompt) + req.sampling.max_new, pg)
+            shared: list[int] = []
+            if self.radix is not None:
+                # cap shared pages so at least ONE prompt token is left to
+                # prefill — the final chunk must produce next-token logits
+                shared = self.radix.match(prompt)[:(len(prompt) - 1) // pg]
+                for p in shared:       # protect from our own eviction below
+                    self.pool.ref(p)
+            fresh = need - len(shared)
+            if self.pool.free_pages < fresh and self.radix is not None:
+                self.radix.evict(fresh - self.pool.free_pages)
+            alloc = self.pool.alloc(fresh)
+            if alloc is None:
+                for p in shared:
+                    self.pool.unref(p)
+                self.sched.add(req)        # not enough pages: wait
+                self.stats["deferred"] += 1
+                break
+            slot = free.pop(0)
+            pages = shared + alloc
+            self.tables[slot, :] = 0
+            self.tables[slot, :len(pages)] = pages
+            self.slot_pages[slot] = pages
+            self.slots[slot] = req
+            self._set_sampling_row(slot, req)
+            self._cursor[slot] = len(shared) * pg
+            self.pos[slot] = 0
+            self.count[slot] = 0
+            self.stats["prefix_hit_tokens"] += len(shared) * pg
+        self.stats["prefill_s"] += time.perf_counter() - t0
+
+    def _prefill_tick(self) -> None:
+        """Advance chunked prefill: up to `prefill_chunks_per_tick` chunks
+        across the slots currently prefilling, round-robin so a long
+        prompt cannot starve a short one. Each chunk is one fixed-shape
+        (1, prefill_chunk) jitted call that writes K/V through the slot's
+        page table; the final chunk samples the request's first token."""
+        if not self.paged:
+            return
+        waiting = [s for s in range(self.max_slots)
+                   if self.slots[s] is not None and self._cursor[s] is not None]
+        if not waiting:
+            return
+        decoding = any(self.slots[s] is not None and self._cursor[s] is None
+                       for s in range(self.max_slots))
+        if decoding and self._tick % self.prefill_every:
+            return      # stride only matters when there is someone to starve
+        t0 = time.perf_counter()
+        order = sorted(waiting, key=lambda s: (s - self._pf_rr) % self.max_slots)
+        for slot in order[:self.prefill_chunks_per_tick]:
+            self._pf_rr = (slot + 1) % self.max_slots
+            req = self.slots[slot]
+            cur = self._cursor[slot]
+            end = min(cur + self.prefill_chunk, len(req.prompt))
+            toks = np.zeros((1, self.prefill_chunk), np.int32)
+            toks[0, :end - cur] = req.prompt[cur:end]
+            # slice the table to a power-of-2 HISTORY bucket: the chunk
+            # attends (and writes) only positions < end, every shape in the
+            # paged attention flows from the table width, and masked
+            # columns contribute exactly 0 — so early chunks of a long
+            # prompt cost O(history so far), bitwise-identical to the
+            # full-width gather, at one executable per bucket (log2 many)
+            n_hist = min(self.pages_per_slot,
+                         1 << (pages_needed(end, self.page_size) - 1)
+                         .bit_length())
+            first, self.caches = self._prefill_chunk(
+                self.params, jnp.asarray(toks), self.caches,
+                jnp.asarray([cur], np.int32),
+                jnp.asarray([end - cur], np.int32),
+                jnp.asarray(self.tables[slot:slot + 1, :n_hist]),
+                jnp.asarray(self.temp[slot:slot + 1]),
+                jnp.asarray(self.top_k[slot:slot + 1]),
+                jnp.asarray(self.top_p[slot:slot + 1]),
+                jnp.asarray(self.seed[slot:slot + 1]))
+            self.stats["prefill_tokens"] += end - cur
+            self.stats["prefill_chunks"] += 1
+            if end < len(req.prompt):
+                self._cursor[slot] = end
+                continue
+            # prompt complete: publish full pages for prefix reuse, then
+            # emit the sampled first token and hand the slot to decode
+            self._cursor[slot] = None
+            if self.radix is not None:
+                n_full = len(req.prompt) // self.page_size
+                self.radix.insert(req.prompt,
+                                  self.slot_pages[slot][:n_full])
+            now = time.perf_counter()
+            self._emit_token(req, int(np.asarray(first)[0]), now)
+            self.pos[slot] = len(req.prompt)
+            self.next_tok[slot] = int(np.asarray(first)[0])
+            self.count[slot] = 1
+            self._finish_if_done(slot)
+        self.stats["prefill_s"] += time.perf_counter() - t0
+
     def _decode_all(self) -> None:
-        active = [i for i, r in enumerate(self.slots) if r is not None]
+        active = [i for i, r in enumerate(self.slots)
+                  if r is not None and (not self.paged
+                                        or self._cursor[i] is None)]
         if not active:
             return
         t0 = time.perf_counter()
+        if self.paged:
+            # still-prefilling rows ride along dead: route their lockstep
+            # writes to the trash page, not into pages their prefill owns
+            tbl = self.tables.copy()
+            for s in range(self.max_slots):
+                if self._cursor[s] is not None:
+                    tbl[s, :] = 0
+            table = jnp.asarray(tbl)
+        else:
+            table = None
         nxt, self.caches = self._decode(
             self.params, jnp.asarray(self.next_tok[:, None]),
-            self.caches, jnp.asarray(self.pos),
+            self.caches, jnp.asarray(self.pos), table,
             jnp.asarray(self.temp), jnp.asarray(self.top_k),
             jnp.asarray(self.top_p), jnp.asarray(self.seed),
             jnp.asarray(self.count))
@@ -352,13 +625,16 @@ class ServeEngine:
     # -- driving ------------------------------------------------------------
 
     def step(self) -> None:
-        """One engine tick: enforce deadlines, admit whatever fits, then
-        decode every active slot by one token. Accumulates wall_s so
-        summary() rates are correct for callers driving step() directly,
-        not just run()."""
+        """One engine tick: enforce deadlines, admit whatever fits, advance
+        chunked prefill (paged mode), then decode every active slot by one
+        token. Accumulates wall_s so summary() rates are correct for
+        callers driving step() directly, not just run()."""
         t0 = time.perf_counter()
+        if self.paged:
+            self._tick += 1
         self._evict(t0)
         self._admit()
+        self._prefill_tick()
         self._decode_all()
         self.stats["wall_s"] += time.perf_counter() - t0
 
@@ -374,6 +650,14 @@ class ServeEngine:
         for k in self.stats:
             self.stats[k] = type(self.stats[k])()
 
+    def cache_bytes(self) -> int:
+        """Device bytes of the decode caches: dense reserves
+        slots x max_cache per layer, paged reserves total_pages x
+        page_size per full-attention layer (the decoupling the paged pool
+        buys — see utils/memprof.kv_cache_bytes for the formula)."""
+        from repro.utils.memprof import array_bytes
+        return int(sum(array_bytes(a) for a in jax.tree.leaves(self.caches)))
+
     def summary(self) -> dict:
         """Counters plus derived rates. Phase throughputs use each phase's
         own wall time (prefill_s / decode_s) so they measure the phase,
@@ -386,4 +670,12 @@ class ServeEngine:
         s["weight_mib"] = self.weight_report["total_bytes"] / 2**20
         s["quantized"] = self.quantized
         s["scheduler"] = getattr(self.sched, "name", type(self.sched).__name__)
+        s["paged"] = self.paged
+        s["cache_bytes"] = self.cache_bytes()
+        if self.paged:
+            s["page_size"] = self.page_size
+            s["total_pages"] = self.pool.total_pages
+            s["pages_in_use"] = self.pool.pages_in_use
+            s["prefix_cache_pages"] = (self.radix.n_nodes
+                                       if self.radix is not None else 0)
         return s

@@ -159,6 +159,34 @@ def model_weight_bytes(params) -> dict:
     return out
 
 
+def kv_cache_bytes(cfg, batch: int, max_cache: int, *,
+                   pages: int | None = None,
+                   page_size: int | None = None) -> dict:
+    """Decode-cache storage for a serve engine, dense or paged — computed
+    with ``jax.eval_shape`` over the REAL ``init_lm_cache`` so the number
+    is the allocator's, not a formula that can drift from the code.
+
+    Dense reserves ``batch x max_cache`` KV per attention layer (every
+    slot pays for the worst case). Paged reserves ``pages x page_size``
+    rows per attention layer SHARED by all slots — total bytes scale with
+    the pool, not with ``batch x max_cache``, which is exactly the
+    decoupling the paged pool buys (docs/serving.md has the sizing
+    formulas). Returns {"total_bytes", "per_layer_bytes", "n_arrays",
+    "mode"}."""
+    from repro.models.lm import init_lm_cache
+
+    caches = jax.eval_shape(
+        lambda: init_lm_cache(cfg, batch, max_cache,
+                              dtype=np.dtype(cfg.dtype),
+                              pages=pages, page_size=page_size))
+    leaves = jax.tree.leaves(caches)
+    total = sum(array_bytes(l) for l in leaves)
+    return {"total_bytes": total,
+            "per_layer_bytes": total // max(cfg.n_layers, 1),
+            "n_arrays": len(leaves),
+            "mode": "paged" if pages is not None else "dense"}
+
+
 # ---------------------------------------------------------------------------
 # Per-role residual accounting (analytic, from the config's own policies).
 # ---------------------------------------------------------------------------

@@ -16,3 +16,25 @@ except ModuleNotFoundError:
     import _hypothesis_stub
 
     sys.modules["hypothesis"] = _hypothesis_stub
+
+
+# Every compiled XLA executable pins several memory maps (LLVM JIT code
+# pages), and a process is capped at vm.max_map_count (~65k) of them. The
+# full suite compiles enough executables that the count brushes the cap,
+# at which point a failed mmap inside LLVM surfaces as a SEGFAULT in
+# backend_compile — in whatever unlucky test compiles next. Dropping dead
+# executables at module boundaries keeps the count flat; modules compile
+# their own executables anyway, so cross-module recompiles are noise
+# against the suite's wall clock.
+import gc
+
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _reclaim_jit_memory_maps():
+    yield
+    import jax
+
+    jax.clear_caches()
+    gc.collect()

@@ -1,0 +1,207 @@
+"""Paged KV bookkeeping: PagePool refcounts/free-list, RadixCache prefix
+sharing, and the property layer over random alloc/free and insert/match
+sequences (hypothesis runs in CI via the `dev` extra; locally the stub in
+conftest.py makes @given tests skip cleanly)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serve import PagePool, RadixCache, pages_needed
+from repro.serve.kvpool import TRASH_PAGE
+
+
+def test_pages_needed():
+    assert pages_needed(1, 8) == 1
+    assert pages_needed(8, 8) == 1
+    assert pages_needed(9, 8) == 2
+    assert pages_needed(0, 8) == 0
+
+
+def test_pool_alloc_unref_cycle():
+    pool = PagePool(6, 8)
+    assert pool.usable_pages == 5 and pool.free_pages == 5
+    a = pool.alloc(3)
+    assert a is not None and len(set(a)) == 3 and TRASH_PAGE not in a
+    assert pool.pages_in_use == 3
+    assert (pool.refs[a] == 1).all()
+    pool.check()
+    for p in a:
+        pool.unref(p)
+    assert pool.free_pages == 5 and pool.pages_in_use == 0
+    pool.check()
+
+
+def test_pool_alloc_shortage_returns_none():
+    pool = PagePool(4, 8)
+    assert pool.alloc(4) is None          # only 3 usable (page 0 is trash)
+    assert pool.free_pages == 3           # failed alloc takes nothing
+    got = pool.alloc(3)
+    assert got is not None
+    assert pool.alloc(1) is None
+    pool.check()
+
+
+def test_pool_refcount_sharing():
+    pool = PagePool(4, 8)
+    (p,) = pool.alloc(1)
+    pool.ref(p)                           # second holder
+    pool.unref(p)
+    assert pool.free_pages == 2           # still held by the first
+    pool.unref(p)
+    assert pool.free_pages == 3
+    pool.check()
+
+
+def test_pool_guards():
+    pool = PagePool(4, 8)
+    with pytest.raises(ValueError):
+        pool.ref(TRASH_PAGE)
+    with pytest.raises(ValueError):
+        pool.unref(TRASH_PAGE)
+    (p,) = pool.alloc(1)
+    pool.unref(p)
+    with pytest.raises(ValueError):
+        pool.unref(p)                     # already free
+    with pytest.raises(ValueError):
+        PagePool(1, 8)                    # no room for the trash page
+
+
+def test_radix_match_is_page_granular():
+    pool = PagePool(10, 4)
+    radix = RadixCache(pool)
+    prompt = list(range(10))              # 2 full pages + 2-token tail
+    pages = pool.alloc(3)
+    assert radix.insert(prompt, pages) == 2       # tail page NOT published
+    assert radix.match(prompt) == pages[:2]
+    assert radix.match(prompt[:7]) == pages[:1]   # only 1 full page covered
+    assert radix.match(prompt[:3]) == []
+    assert radix.match([99] + prompt[1:]) == []   # first page differs
+    # tree holds its own ref on published pages; caller refs survive
+    assert pool.refs[pages[0]] == 2 and pool.refs[pages[2]] == 1
+
+
+def test_radix_first_writer_wins():
+    pool = PagePool(10, 4)
+    radix = RadixCache(pool)
+    a = pool.alloc(1)
+    b = pool.alloc(1)
+    radix.insert(list(range(4)), a)
+    assert radix.insert(list(range(4)), b) == 0   # span already published
+    assert radix.match(list(range(4))) == a       # keeps the first page
+    assert pool.refs[b[0]] == 1                   # b holds only caller's ref
+
+
+def test_radix_evict_lru_unreferenced_only():
+    pool = PagePool(10, 2)
+    radix = RadixCache(pool)
+    p1 = pool.alloc(2)
+    radix.insert([0, 1, 2, 3], p1)
+    p2 = pool.alloc(1)
+    radix.insert([9, 8], p2)
+    for p in p1 + p2:                     # hand the caller refs back
+        pool.unref(p)
+    radix.match([9, 8])                   # freshen the second chain
+    # p1's leaf [2,3] is older LRU; evicting it exposes [0,1] (cascade)
+    assert radix.evict(2) == 2
+    assert radix.match([0, 1, 2, 3]) == []
+    assert radix.match([9, 8]) == p2      # survivor
+    # a slot still referencing a page pins it against eviction
+    pool.ref(p2[0])
+    assert radix.evict(1) == 0
+    pool.unref(p2[0])
+    assert radix.evict(1) == 1
+    assert pool.pages_in_use == 0
+    pool.check()
+
+
+def test_radix_clear_releases_everything():
+    pool = PagePool(10, 2)
+    radix = RadixCache(pool)
+    pages = pool.alloc(3)
+    radix.insert([1, 2, 3, 4, 5, 6], pages)
+    for p in pages:
+        pool.unref(p)
+    assert sorted(radix.held_pages()) == sorted(pages)
+    assert radix.clear() == 3
+    assert radix.held_pages() == [] and radix.n_nodes == 0
+    assert pool.pages_in_use == 0
+    pool.check()
+
+
+# -- property layer ---------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(0, 4)), max_size=60))
+def test_pool_refcounts_match_reference_model(ops):
+    """Random alloc/unref sequences against a plain-dict reference: the
+    pool's refcounts, free count, and check() must agree at every step."""
+    pool = PagePool(9, 4)
+    held: list[int] = []
+    for is_alloc, n in ops:
+        if is_alloc:
+            got = pool.alloc(n)
+            if got is None:
+                assert pool.free_pages < n
+            else:
+                held.extend(got)
+        elif held:
+            pool.unref(held.pop(n % len(held)))
+        pool.check()
+        assert pool.pages_in_use == len(set(held))
+    counts = {p: held.count(p) for p in held}
+    assert all(pool.refs[p] == c for p, c in counts.items())
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 3), min_size=1, max_size=12),
+                min_size=1, max_size=8),
+       st.integers(1, 3))
+def test_radix_match_returns_longest_published_prefix(prompts, page_size):
+    """After inserting any set of prompts, match(p) must return exactly one
+    page per full page-span of p that some inserted prompt shares as a
+    prefix — and pool.check() must hold throughout."""
+    pool = PagePool(64, page_size)
+    radix = RadixCache(pool)
+    published: list[tuple] = []
+    for prompt in prompts:
+        n = len(prompt) // page_size
+        pages = pool.alloc(pages_needed(len(prompt), page_size))
+        if pages is None:
+            break
+        radix.insert(prompt, pages)
+        published.append(tuple(prompt[:n * page_size]))
+        for p in pages:
+            pool.unref(p)          # tree refs alone keep published pages
+        pool.check()
+    for prompt in prompts:
+        got = radix.match(prompt)
+        want = 0
+        for pub in published:
+            share = 0
+            for i in range(min(len(pub), len(prompt)) // page_size):
+                if tuple(prompt[i * page_size:(i + 1) * page_size]) \
+                        != pub[i * page_size:(i + 1) * page_size]:
+                    break
+                share = i + 1
+            want = max(want, share)
+        assert len(got) == want, (prompt, published)
+    radix.clear()
+    assert pool.pages_in_use == 0
+    pool.check()
+
+
+def test_reference_np_gather_matches_pool_layout():
+    """The device-side contract in miniature: writing token t of slot s to
+    page table[s][t // pg] at offset t % pg and gathering pool[table[s]]
+    reconstructs the slot's logical KV stream in order."""
+    pg, pages_per_slot = 4, 3
+    pool_arr = np.zeros((8, pg), np.int64)
+    table = np.array([[3, 5, 1], [2, 6, 4]])
+    streams = [np.arange(100, 110), np.arange(200, 207)]
+    for s, stream in enumerate(streams):
+        for t, tok in enumerate(stream):
+            pool_arr[table[s][t // pg], t % pg] = tok
+    for s, stream in enumerate(streams):
+        logical = pool_arr[table[s]].reshape(-1)
+        assert (logical[:len(stream)] == stream).all()

@@ -135,3 +135,149 @@ def test_mamba_arch_through_engine():
         ref = generate(params, cfg, jnp.asarray([p], jnp.int32),
                        max_cache=64, n_new=5)
         assert r.tokens == [int(t) for t in ref[0]], p
+
+
+# -- admission edge cases ----------------------------------------------------
+
+def test_prompt_plus_max_new_exactly_at_cap():
+    """prompt + max_new == max_cache is the last admissible request; one
+    token more must be rejected at submit, not die inside prefill."""
+    eng, cfg, _ = _engine(max_cache=16)
+    r = eng.submit(list(range(1, 13)), max_new=4)     # 12 + 4 == 16
+    eng.run()
+    assert r.done and len(r.generated) == 4
+    with pytest.raises(ValueError):
+        eng.submit(list(range(1, 14)), max_new=4)     # 13 + 4 > 16
+
+
+def test_prompt_exactly_max_cache_rejected():
+    """A prompt of max_cache tokens leaves no KV slot for even one
+    generated token (max_new >= 1 always)."""
+    eng, cfg, _ = _engine(max_cache=16)
+    with pytest.raises(ValueError):
+        eng.submit(list(range(1, 17)), max_new=1)
+
+
+def test_single_bucket_config():
+    """One bucket serves every length: shorter prompts pad to it, longer
+    ones round to its multiples (capped), all through one executable."""
+    eng, cfg, params = _engine(buckets=(8,), max_cache=32)
+    rng = np.random.default_rng(3)
+    prompts = [list(rng.integers(0, cfg.vocab_size, n)) for n in (2, 8, 11)]
+    reqs = [eng.submit(p, max_new=4) for p in prompts]
+    eng.run()
+    for p, r in zip(prompts, reqs):
+        ref = generate(params, cfg, jnp.asarray([p], jnp.int32),
+                       max_cache=32, n_new=4)
+        assert r.tokens == [int(t) for t in ref[0]], p
+    assert bucket_for(11, (8,)) == 16                 # overlong rounding
+    assert bucket_for(17, (8,), max_cache=20) == 20   # rounded AND capped
+
+
+# -- paged mode --------------------------------------------------------------
+
+def _paged(**kw):
+    kw.setdefault("paged", True)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("prefill_chunk", 16)
+    return _engine(**kw)
+
+
+def test_paged_matches_dense_oracle():
+    """Paged decode gathers into the same logical shape the dense cache
+    has, so greedy generations must match the dense engine token for
+    token — including a prompt long enough to need several prefill
+    chunks."""
+    dense, cfg, params = _engine()
+    paged, _, _ = _paged()
+    rng = np.random.default_rng(4)
+    prompts = [list(rng.integers(0, cfg.vocab_size, n))
+               for n in (3, 7, 12, 37)]
+    hd = [dense.submit(p, max_new=6) for p in prompts]
+    dense.run()
+    hp = [paged.submit(p, max_new=6) for p in prompts]
+    paged.run()
+    assert paged.stats["prefill_chunks"] >= len(prompts) + 2  # 37 => 3 chunks
+    for d, p in zip(hd, hp):
+        assert d.generated == p.generated
+    paged.check_invariants()
+    paged.release_prefix_cache()
+    assert paged.pool.pages_in_use == 0
+
+
+def test_shared_prefix_prefills_once_and_matches_cold():
+    """Requests sharing a 16-token prefix: the radix cache must attach the
+    shared pages by reference (prefill_tokens counts only the suffixes)
+    and generations must be bitwise identical to a cold engine that
+    prefills every prompt in full."""
+    warm, cfg, params = _paged()
+    cold, _, _ = _paged(prefix_cache=False)
+    rng = np.random.default_rng(5)
+    shared = list(rng.integers(0, cfg.vocab_size, 16))
+    sufs = [list(rng.integers(0, cfg.vocab_size, 5)) for _ in range(3)]
+    outs = {}
+    for eng in (warm, cold):
+        outs[eng] = []
+        for s in sufs:
+            h = eng.submit(shared + s, max_new=5)
+            eng.run()                 # sequential: prefix published first
+            outs[eng].append(h.generated)
+    assert outs[warm] == outs[cold]
+    # cold pays 21 tokens per request; warm pays the suffix after the first
+    assert cold.stats["prefill_tokens"] == 3 * 21
+    assert warm.stats["prefill_tokens"] == 21 + 5 + 5
+    assert warm.stats["prefix_hit_tokens"] == 32
+    assert cold.stats["prefix_hit_tokens"] == 0
+
+
+def test_paged_pool_shortage_defers_admission():
+    """A pool too small for two concurrent requests must serialize them
+    (deferred admission), not fail — and both must still complete."""
+    # 5 usable pages of 8; each request needs ceil((8+8)/8) = 2 pages, the
+    # radix keeps 1 page of each finished prompt, so the third admission
+    # forces both deferral and LRU eviction of radix pages.
+    eng, cfg, _ = _paged(max_cache=16, total_pages=6, page_size=8,
+                         max_slots=2)
+    rng = np.random.default_rng(6)
+    reqs = [eng.submit(list(rng.integers(0, cfg.vocab_size, 8)), max_new=8)
+            for _ in range(4)]
+    eng.run()
+    assert all(r.done and len(r.generated) == 8 for r in reqs)
+    assert eng.stats["completed"] == 4
+    eng.check_invariants()
+
+
+def test_paged_submit_validates_pool_capacity():
+    eng, cfg, _ = _paged(max_cache=64, total_pages=3, page_size=8)
+    with pytest.raises(ValueError):            # needs 4 pages, 2 usable
+        eng.submit(list(range(1, 17)), max_new=16)
+
+
+def test_paged_rejects_unsupported_arch_and_auto_falls_back():
+    with pytest.raises(ValueError):
+        _engine(arch="falcon-mamba-7b", paged=True)
+    eng, cfg, _ = _engine(arch="falcon-mamba-7b", paged="auto")
+    assert eng.paged is False                  # SSM state: dense fallback
+    r = eng.submit([1, 2, 3], max_new=3)
+    eng.run()
+    assert r.done and len(r.generated) == 3
+
+
+def test_paged_cancel_recycles_pages_mid_prefill():
+    """Cancelling a request still inside chunked prefill must release its
+    pages; a fresh request admitted into the recycled slot must match the
+    dense oracle (its pages are clean-by-masking, and the dead row's
+    writes went to the trash page)."""
+    eng, cfg, params = _paged(max_slots=1, prefill_chunk=8)
+    long_prompt = list(range(1, 30))           # 29 tokens => 4 chunks
+    h1 = eng.submit(long_prompt, max_new=4)
+    eng.step()                                 # admit + first chunk only
+    assert eng.stats["prefill_chunks"] == 1 and h1.generated == []
+    assert eng.cancel(h1.rid)
+    short = [3, 1, 4, 1, 5]
+    h2 = eng.submit(short, max_new=4)
+    eng.run()
+    ref = generate(params, cfg, jnp.asarray([short], jnp.int32),
+                   max_cache=64, n_new=4)
+    assert h2.tokens == [int(t) for t in ref[0]]
+    eng.check_invariants()

@@ -1,0 +1,202 @@
+"""Seeded stress fuzz of the serve engine: randomized interleavings of
+submit / cancel / deadline-expiry / step across all three schedulers,
+checking on every drain that
+
+* no slot or page leaks (slots empty, page refcounts match holders),
+* every request gets exactly ONE terminal event,
+* paged generations are token-for-token the dense-slot oracle's: a
+  FINISHED greedy request equals the oracle prefix of its length; a
+  CANCELLED / EVICTED one is a proper prefix of it.
+
+The oracle is computed ONCE per prompt with the dense engine (greedy
+decode depends only on the prompt prefix, so any max_new is an oracle
+prefix and the comparison is interleaving-invariant). Params are BRIEFLY
+TRAINED (the tab2_latency.py precedent): random-init logits have
+near-tied top-2 gaps below cross-shape reassociation noise, so greedy
+matching on them would measure tie-breaking, not cache correctness.
+
+Engines are built once per scheduler and reused across scenarios —
+executables stay warm, so the ~200 interleavings the acceptance bar asks
+for run in seconds, and the radix prefix cache carries state BETWEEN
+scenarios (long-lived-server aging the per-scenario tests can't see).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro import api
+from repro.config import TrainConfig
+from repro.data.synthetic import SyntheticLM
+from repro.models.lm import init_lm, init_lm_states, lm_loss
+from repro.serve import SamplingParams, ServeEngine
+from repro.serve.session import TERMINAL
+from repro.train.step import make_train_state, make_train_step
+
+MAX_CACHE = 32
+MAX_NEW_CAP = 6
+N_SEEDS_PAGED = 70       # x3 schedulers = 210 interleavings (bar: >= 200)
+N_SEEDS_DENSE = 10
+TICK_LIMIT = 400
+
+
+@pytest.fixture(scope="module")
+def world():
+    """Config + briefly-trained params + prompt pool + dense-oracle map +
+    one warm engine per (mode, scheduler)."""
+    cfg = configs.get_smoke("qwen2-0.5b")
+    api.uninstall(cfg)
+    key = jax.random.PRNGKey(0)
+    params = init_lm(key, cfg, jnp.dtype(cfg.dtype))
+    states = init_lm_states(key, cfg, 8, 32)
+    tcfg = TrainConfig(optimizer="sgd", lr=0.3, momentum=0.9,
+                       checkpoint_every=0)
+    state = make_train_state(key, params, cfg, tcfg, asi_states=states)
+    jstep = jax.jit(make_train_step(lm_loss, cfg, tcfg))
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8,
+                       seed=1)
+    for i in range(40):
+        state, _ = jstep(state, data.batch(i))
+    params = state.params
+
+    # prompt pool: three families sharing an 8-token prefix (page-aligned
+    # for page_size=8 => radix hits) plus unshared strays, lengths chosen
+    # to need 1..3 prefill chunks
+    rng = np.random.default_rng(42)
+    prefix = list(map(int, rng.integers(0, cfg.vocab_size, 8)))
+    prompts = [prefix + list(map(int, rng.integers(0, cfg.vocab_size, n)))
+               for n in (2, 5, 12)]
+    prompts += [list(map(int, rng.integers(0, cfg.vocab_size, n)))
+                for n in (3, 4, 7, 11, 16, 20)]
+
+    def build(mode, sched):
+        kw = dict(max_slots=2, max_cache=MAX_CACHE, buckets=(4, 8, 16),
+                  scheduler=sched)
+        if mode == "paged":
+            kw.update(paged=True, page_size=8, prefill_chunk=8)
+        return ServeEngine(params, cfg, **kw)
+
+    oracle_eng = build("dense", "fcfs")
+    handles = [oracle_eng.submit(p, max_new=MAX_NEW_CAP) for p in prompts]
+    oracle_eng.run()
+    oracle = [h.generated for h in handles]
+    assert all(len(o) == MAX_NEW_CAP for o in oracle)
+
+    engines = {(m, s): build(m, s)
+               for m in ("paged", "dense")
+               for s in ("fcfs", "spf", "priority")}
+    return {"cfg": cfg, "params": params, "prompts": prompts,
+            "oracle": oracle, "engines": engines}
+
+
+def _run_scenario(world, eng, sched, seed, n_requests=4):
+    """One seeded interleaving: tick-scripted submits and cancels, driven
+    to drain, then the full invariant audit."""
+    rng = np.random.default_rng(seed)
+    prompts, oracle = world["prompts"], world["oracle"]
+    live = []          # (handle, prompt_idx, max_new, eos_id)
+    submitted = 0
+    ticks = 0
+    while submitted < n_requests or eng.busy:
+        if submitted < n_requests and rng.random() < 0.6:
+            i = int(rng.integers(len(prompts)))
+            max_new = int(rng.integers(1, MAX_NEW_CAP + 1))
+            eos_id = None
+            if rng.random() < 0.25:     # eos drawn from the oracle path =>
+                j = int(rng.integers(max_new))      # guaranteed early stop
+                eos_id = oracle[i][j]
+            sp = SamplingParams(max_new=max_new, eos_id=eos_id)
+            if sched == "priority":
+                sp = SamplingParams(
+                    max_new=max_new, eos_id=eos_id,
+                    priority=int(rng.integers(0, 3)),
+                    # ~1/8 requests expire instantly => EVICTED path
+                    deadline_s=1e-6 if rng.random() < 0.125 else None)
+            live.append((eng.submit(prompts[i], sampling=sp), i,
+                         max_new, eos_id))
+            submitted += 1
+        if live and rng.random() < 0.12:
+            h = live[int(rng.integers(len(live)))][0]
+            if not h.done:
+                eng.cancel(h.rid)
+        eng.step()
+        ticks += 1
+        assert ticks < TICK_LIMIT, "engine failed to drain"
+        if ticks % 7 == 0:
+            eng.check_invariants()
+
+    # -- drained: audit ----------------------------------------------------
+    assert not eng.busy and all(s is None for s in eng.slots)
+    eng.check_invariants()
+    for h, i, max_new, eos_id in live:
+        events = h.events
+        assert sum(1 for e in events if e.kind in TERMINAL) == 1, h.rid
+        assert events[-1].kind in TERMINAL     # nothing after the terminal
+        gen = h.generated
+        assert len(gen) <= max_new
+        # greedy decode: ANY emitted tokens must be the oracle prefix —
+        # this is the paged-vs-dense token-for-token acceptance bar, and
+        # for cancelled/evicted requests it pins the partial output too
+        assert gen == oracle[i][:len(gen)], (h.rid, gen, oracle[i])
+        if h.finished:
+            if eos_id is None:
+                assert len(gen) == max_new
+            else:
+                assert gen[-1] == eos_id or len(gen) == max_new
+                assert eos_id not in gen[:-1]
+
+
+@pytest.mark.parametrize("sched", ["fcfs", "spf", "priority"])
+def test_fuzz_paged_interleavings(world, sched):
+    eng = world["engines"][("paged", sched)]
+    base = {"fcfs": 0, "spf": 1000, "priority": 2000}[sched]
+    for seed in range(N_SEEDS_PAGED):
+        _run_scenario(world, eng, sched, base + seed)
+    # end of life: drop the radix cache => every page refcount is zero
+    eng.release_prefix_cache()
+    eng.check_invariants()
+    assert eng.pool.pages_in_use == 0
+    assert eng.stats["completed"] + eng.stats["cancelled"] \
+        + eng.stats["evicted"] == N_SEEDS_PAGED * 4
+
+
+@pytest.mark.parametrize("sched", ["fcfs", "spf", "priority"])
+def test_fuzz_dense_interleavings(world, sched):
+    """Same harness over the dense oracle engine itself: the invariants
+    (single terminal event, slot recycling, oracle-prefix outputs) hold
+    for the path the paged comparisons lean on."""
+    eng = world["engines"][("dense", sched)]
+    for seed in range(N_SEEDS_DENSE):
+        _run_scenario(world, eng, sched, 100_000 + seed)
+
+
+def test_fuzz_paged_starved_pool(world):
+    """A pool with barely more than one request's pages: admissions defer
+    and radix pages are evicted under pressure, yet every interleaving
+    still drains with oracle-exact outputs."""
+    cfg = world["cfg"]
+    eng = ServeEngine(
+        world["params"], cfg,
+        max_slots=2, max_cache=MAX_CACHE, buckets=(4, 8, 16),
+        paged=True, page_size=8, prefill_chunk=8,
+        total_pages=5)               # 4 usable; the longest request needs 4
+    for seed in range(10):
+        _run_scenario(world, eng, "fcfs", 200_000 + seed, n_requests=3)
+    assert eng.stats["deferred"] > 0, "pool never under pressure"
+    eng.release_prefix_cache()
+    eng.check_invariants()
+    assert eng.pool.pages_in_use == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(["fcfs", "spf",
+                                                     "priority"]))
+def test_fuzz_property_random_seeds(world, seed, sched):
+    """Hypothesis sweep over the same harness: shrinking turns a failing
+    interleaving into a minimal seed instead of a 200-case haystack."""
+    _run_scenario(world, world["engines"][("paged", sched)], sched, seed,
+                  n_requests=3)
