@@ -72,6 +72,7 @@ def run() -> list[str]:
     rows += serve_rows()
     rows += paged_rows()
     rows += quant_rows()
+    rows += spec_rows()
     return rows
 
 
@@ -399,20 +400,86 @@ def quant_rows() -> list[str]:
     return rows
 
 
+def spec_rows() -> list[str]:
+    """Self-speculative decoding vs plain decode, same engine shape, same
+    prompts (docs/serving.md): per k in {2, 4} the measured draft
+    ACCEPTANCE RATE, mean emitted tokens per verify step, the spec/plain
+    decode-TPOT ratio (host-load-invariant — both sides time on the same
+    machine in the same process), and a greedy token-for-token match flag
+    against the non-spec generations (the losslessness claim as a bench
+    column; scripts/bench_gate.py pins it at 1 absolutely).
+
+    Trained briefly first, like quant_rows: acceptance on a random-init
+    model measures argmax tie-breaking under int8 noise, not drafting.
+    Off-accelerator the TPOT ratio is dispatch-dominated (k+1 cheap
+    launches + 1 verify vs 1 launch); the acceptance and
+    tokens-per-verify columns are the hardware-independent signal."""
+    rows = []
+    cfg = configs.get_smoke("qwen2-0.5b")
+    api.uninstall(cfg)
+    plan = api.install(api.resolve(cfg, batch=B, seq=S))
+    key = jax.random.PRNGKey(0)
+    params = init_lm(key, cfg, jnp.dtype(cfg.dtype))
+    states = init_lm_states(key, cfg, B, S)
+    tcfg = TrainConfig(optimizer="sgd", lr=0.3, momentum=0.9,
+                       checkpoint_every=0)
+    state = make_train_state(key, params, cfg, tcfg, asi_states=states)
+    jstep = jax.jit(make_train_step(lm_loss, cfg, tcfg))
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=S, global_batch=B,
+                       seed=1)
+    for i in range(40):
+        state, _ = jstep(state, data.batch(i))
+    params = state.params
+    prompt = jax.random.randint(key, (SERVE_B, SERVE_P), 0, cfg.vocab_size)
+    max_cache = SERVE_P + SERVE_NEW + 1
+
+    def serve(spec_k):
+        api.uninstall(cfg)
+        api.install(plan)
+        kw = dict(spec_k=spec_k, draft="int8") if spec_k else {}
+        engine = ServeEngine(params, plan=plan, max_slots=SERVE_B,
+                             max_cache=max_cache, **kw)
+        for i in range(SERVE_B):          # warmup compiles
+            engine.submit(list(map(int, prompt[i])), max_new=2)
+        engine.run()
+        engine.reset_stats()
+        hs = [engine.submit(list(map(int, prompt[i])), max_new=SERVE_NEW)
+              for i in range(SERVE_B)]
+        engine.run()
+        s = engine.summary()
+        return s, [h.generated for h in hs]
+
+    s0, gen0 = serve(0)
+    tpot0 = s0["decode_s"] / max(s0["decode_tokens"], 1)
+    for k in (2, 4):
+        s, gen = serve(k)
+        tpot = s["decode_s"] / max(s["decode_tokens"], 1)
+        ratio = tpot / tpot0
+        rows.append(f"tab2/serve_spec_decode_k{k},{tpot * 1e6:.1f},"
+                    f"acceptance_rate={s['acceptance_rate']:.3f};"
+                    f"tokens_per_verify={s['tokens_per_verify']:.2f};"
+                    f"spec_tpot_ratio={ratio:.3f};"
+                    f"greedy_match={int(gen == gen0)};"
+                    f"spec_steps={s['spec_steps']};draft=int8")
+    api.uninstall(cfg)
+    return rows
+
+
 def main():
     import argparse
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--serve", action="store_true",
-                    help="serving rows only (serve_rows + paged_rows) — "
-                         "the CI serve-bench job's fast path")
+                    help="serving rows only (serve_rows + paged_rows + "
+                         "spec_rows) — the CI serve-bench job's fast path")
     ap.add_argument("--json", default="",
                     help="also write stable-schema JSON "
                          "(benchmarks/common.py; BENCH_serve.json is the "
                          "committed baseline scripts/bench_gate.py "
                          "gates against)")
     args = ap.parse_args()
-    rows = (serve_rows() + paged_rows()) if args.serve else run()
+    rows = (serve_rows() + paged_rows() + spec_rows()) if args.serve \
+        else run()
     for row in rows:
         print(row)
     if args.json:

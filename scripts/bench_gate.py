@@ -13,7 +13,11 @@ latency metric regresses beyond tolerance. Two kinds of checks:
     - paged decode overhead: ``paged_over_dense`` >= 0.5 (the page-table
       gather must not halve decode throughput);
     - prefix attach win: ``cold_over_hit`` >= 2 and ``prefix_hit_tokens``
-      >= 8000 (an 8k shared prefix must actually attach, not re-prefill).
+      >= 8000 (an 8k shared prefix must actually attach, not re-prefill);
+    - speculative decode: ``greedy_match`` == 1 at k in {2, 4} (greedy
+      spec decode is LOSSLESS by construction — any mismatch is a bug,
+      not a regression) and ``acceptance_rate`` >= 0.5 (the int8 draft of
+      a trained model must actually predict its own f32 argmax).
 
 * RELATIVE drift vs the committed baseline, ratio metrics only — raw
   microsecond columns vary with runner hardware and are NOT gated, so a
@@ -34,14 +38,25 @@ ABSOLUTE_BARS = [
     ("tab2/serve_paged_decode", "paged_over_dense", "min", 0.5),
     ("tab2/serve_prefix_attach_8k", "cold_over_hit", "min", 2.0),
     ("tab2/serve_prefix_attach_8k", "prefix_hit_tokens", "min", 8000),
+    ("tab2/serve_spec_decode_k2", "greedy_match", "min", 1),
+    ("tab2/serve_spec_decode_k4", "greedy_match", "min", 1),
+    ("tab2/serve_spec_decode_k4", "acceptance_rate", "min", 0.5),
 ]
 
 # ratio metrics allowed to drift at most this factor vs the baseline
 RELATIVE_KEYS = [
     ("tab2/serve_chunked_mixed", "tpot_p95_ratio"),
     ("tab2/serve_paged_decode", "paged_over_dense"),
+    ("tab2/serve_spec_decode_k2", "acceptance_rate"),
+    ("tab2/serve_spec_decode_k4", "acceptance_rate"),
+    ("tab2/serve_spec_decode_k2", "spec_tpot_ratio"),
+    ("tab2/serve_spec_decode_k4", "spec_tpot_ratio"),
 ]
 RELATIVE_TOLERANCE = 1.35
+
+# keys where a LARGER value is the harmful direction (latency-style
+# ratios); everything else regresses by shrinking (throughput, acceptance)
+REGRESS_UP_KEYS = {"tpot_p95_ratio", "spec_tpot_ratio"}
 
 
 def load(path: str) -> dict:
@@ -92,9 +107,9 @@ def main() -> int:
             v, b = new[name].get(key), base[name].get(key)
             if v is None or b is None or b == 0:
                 continue
-            # direction-aware: tpot ratio regresses UP, throughput
-            # ratios regress DOWN — flag only the harmful direction
-            worse = v / b if key == "tpot_p95_ratio" else b / v
+            # direction-aware: tpot-style ratios regress UP, throughput
+            # and acceptance regress DOWN — flag only the harmful direction
+            worse = v / b if key in REGRESS_UP_KEYS else b / v
             if worse > RELATIVE_TOLERANCE:
                 bad.append(f"RELATIVE {name}:{key} = {v} vs baseline {b} "
                            f"(x{worse:.2f} worse > x{RELATIVE_TOLERANCE} "

@@ -113,7 +113,10 @@ def apply(spec: LinearSpec, p: dict, x: jax.Array, wasi: WasiConfig,
         # int8 deployment path (plan.quantized + convert.quantize): weights
         # are {L,sL,R,sR} / {w,sW}; scales fold into the matmul, and the
         # fused int8 kernel keeps factors VMEM-resident on TPU
-        if spec.quant is None:
+        if spec.quant is None and spec.draft != "int8":
+            # A draft-stamped spec legitimately sees BOTH layouts: f32
+            # master params on the verify pass, int8-packed draft params
+            # on the draft pass (serve/engine.py builds the latter).
             raise ValueError(
                 f"site {spec.name}: params are quantized but the spec is "
                 "not — serve under plan.quantized(...) (docs/deployment.md)")
@@ -186,6 +189,20 @@ def is_quantized(p: dict) -> bool:
     """Is this linear dict in an int8-packed layout (quant/quantize.py:
     scales ride next to the int8 payload as sL/sR/sW)?"""
     return "sL" in p or "sW" in p
+
+
+def draft_slice(p: dict, k: int) -> dict:
+    """The rank-k draft view of a factored linear dict: the leading k
+    columns of L and rows of R (plus the matching sR rows when the site is
+    int8-packed — sL scales one-per-output-channel and is untouched).
+    These are slices of the ALREADY-RESIDENT factors: the draft model
+    costs zero extra weights (docs/serving.md)."""
+    out = dict(p)
+    out["L"] = p["L"][..., :k]
+    out["R"] = p["R"][..., :k, :]
+    if "sR" in p:
+        out["sR"] = p["sR"][..., :k]
+    return out
 
 
 def dense_weight(v):

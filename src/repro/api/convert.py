@@ -141,6 +141,36 @@ def quantize(params, plan: SubspacePlan):
                          lambda spec, p: quantize_linear(p, spec))
 
 
+def draft_view(params, plan: SubspacePlan):
+    """The speculative-decoding draft param tree for a draft-stamped plan
+    (``plan.with_draft(...)``).
+
+    int8 drafts pack every draft-stamped site to int8 + per-channel scales
+    (or pass through sites that are ALREADY int8-resident — then the draft
+    literally is the serving weights); ``rank:<k>`` drafts slice the
+    leading k columns/rows of each factored site's resident L/R. Either
+    way the result aliases or derives from the same weights the verify
+    pass runs — no second model is loaded (docs/serving.md)."""
+    import dataclasses
+
+    from repro.api.bind import draft_slice
+    from repro.quant.quantize import quantize_linear
+
+    def one(spec, p):
+        if spec.draft is None:
+            return p
+        if spec.draft == "int8":
+            if is_quantized(p):
+                return p
+            return quantize_linear(p, dataclasses.replace(spec, quant="int8"))
+        k = int(spec.draft.split(":", 1)[1])
+        if linear_layout(p) != "factored":
+            return p
+        return draft_slice(p, k)
+
+    return _walk_linears(params, plan, one)
+
+
 def dequantize(params, plan: SubspacePlan):
     """Inverse of :func:`quantize` (lossy by the quantization error):
     int8 sites back to their f32 layouts, everything else untouched."""

@@ -102,6 +102,12 @@ class LinearSpec:
     # SubspacePlan.quantized(), never by policy resolution — quantization
     # is a deployment decision, not a training one.
     quant: str | None = None
+    # Speculative-decoding draft view of this site: None (site plays no
+    # part in drafting), "int8" (draft through the q8 kernels), or
+    # "rank:<K'>" (draft through the leading K' columns/rows of L/R —
+    # zero extra weights, just narrower slices). Stamped by
+    # SubspacePlan.with_draft(); like quant, a serving decision.
+    draft: str | None = None
 
     @property
     def factored_params(self) -> bool:
@@ -253,6 +259,45 @@ class SubspacePlan:
     def is_quantized(self) -> bool:
         return any(s.quant is not None for s in self.specs)
 
+    def with_draft(self, source: str = "int8") -> "SubspacePlan":
+        """Stamp a speculative-decoding draft view per site.
+
+        ``source`` is ``"int8"`` (every packable site — factored pairs and
+        dense 2D weights — drafts through the q8 kernels) or
+        ``"rank:<frac>"`` (factored sites draft through the leading
+        ``max(1, int(frac * rank))`` columns of L / rows of R; dense sites
+        have no narrower view and stay out of the draft stamp — the draft
+        forward simply runs them at full precision). The stamp never
+        changes f32 verify semantics: ``bind.apply`` only consults
+        ``draft`` to *permit* layouts, the engine builds the actual draft
+        params (serve/engine.py)."""
+        if source == "int8":
+            specs = tuple(dataclasses.replace(s, draft="int8")
+                          if s.mode in ("factored", "dense") else s
+                          for s in self.specs)
+        elif source.startswith("rank:"):
+            frac = float(source.split(":", 1)[1])
+            if not 0.0 < frac <= 1.0:
+                raise ValueError(f"draft rank fraction must be in (0, 1]: "
+                                 f"{source!r}")
+            specs = tuple(
+                dataclasses.replace(
+                    s, draft=f"rank:{max(1, int(frac * s.rank))}")
+                if s.mode == "factored" and s.rank > 0 else s
+                for s in self.specs)
+        else:
+            raise ValueError(f"unknown draft source {source!r} "
+                             "(expected 'int8' or 'rank:<frac>')")
+        return dataclasses.replace(self, specs=specs)
+
+    @property
+    def draft_source(self) -> str | None:
+        """"int8" | "rank" | None — the stamped draft family, if any."""
+        for s in self.specs:
+            if s.draft is not None:
+                return "int8" if s.draft == "int8" else "rank"
+        return None
+
     def summary(self) -> str:
         """Human-readable one-line-per-site table."""
         lines = [f"SubspacePlan[{self.model.name}] method={self.wasi.method} "
@@ -266,6 +311,8 @@ class SubspacePlan:
                 extra += f" bwd={'fused' if s.bwd_fits_vmem else 'xla'}"
             if s.quant is not None:
                 extra += f" quant={s.quant}"
+            if s.draft is not None:
+                extra += f" draft={s.draft}"
             lines.append(f"  {s.name:16s} {s.role:9s} "
                          f"({s.in_dim}->{s.out_dim}) {s.mode:8s}"
                          f" {s.kernel}{extra}")

@@ -143,6 +143,15 @@ def main():
                          "slower long-prompt TTFT)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable cross-request radix prefix reuse")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="self-speculative decoding: draft this many "
+                         "tokens per tick through a cheap subspace view "
+                         "of the SAME weights, verify them in one "
+                         "batched forward (0 = off; docs/serving.md)")
+    ap.add_argument("--draft", default="int8",
+                    help="draft source for --spec-k: 'int8' (packed "
+                         "factors) or 'rank:<frac>' (leading slice of "
+                         "each site's L/R, e.g. rank:0.5)")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they are generated plus "
                          "per-request TTFT/TPOT, instead of the batch "
@@ -153,6 +162,8 @@ def main():
     slots = args.max_slots or min(args.batch, 4)
     max_cache = args.prompt_len + args.tokens + 1
     paged_kw = {}
+    if args.spec_k:
+        paged_kw.update(spec_k=args.spec_k, draft=args.draft)
     if args.paged:
         paged_kw = dict(paged=True, page_size=args.page_size,
                         total_pages=args.total_pages or None,
@@ -216,6 +227,13 @@ def main():
           f"group) | decode {s['decode_tokens']} tok "
           f"({s['decode_tok_s']:.1f} tok/s) | "
           f"{s['requests_s']:.2f} req/s")
+    if args.spec_k:
+        print(f"[serve] spec k={s['spec_k']} draft={s['draft_source']} "
+              f"acceptance_rate={s['acceptance_rate']:.3f} "
+              f"tokens_per_verify={s['tokens_per_verify']:.2f} "
+              f"verify_steps={s['spec_steps']} "
+              f"drafted={s['spec_draft_tokens']} "
+              f"accepted={s['spec_accepted_tokens']}")
     print("[serve] sample:", handles[0].tokens)
 
 

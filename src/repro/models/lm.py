@@ -297,6 +297,13 @@ def lm_prefill(params, tokens, cfg: ModelConfig, *, caches,
     chunk, and the ``last_only`` gather picks the chunk's last valid row —
     only the final chunk's logits mean anything (the engine ignores the
     rest).
+
+    Speculative verify: the serve engine's spec-decode path reuses this
+    same entry point mid-decode — ``tokens`` is [last_committed, d_1..d_k]
+    drafted ahead of position ``pos``, ``valid_len`` masks each row's true
+    draft length, and the cache writes double as the rollback mechanism
+    (accepted positions land exact full-precision KV; rejected tail
+    positions are overwritten before they are ever attended to).
     """
     x = params["embed"]["w"].astype(jnp.float32)[tokens].astype(
         jnp.dtype(cfg.dtype))

@@ -318,6 +318,46 @@ def cache_update_prefill(cache: KVCache, k_new, v_new, offset, *,
     return KVCache(k=k, v=v)
 
 
+def cache_update_verify(cache: KVCache, k_new, v_new, offset,
+                        valid_len: jax.Array | None = None) -> KVCache:
+    """Write a (B, C) token block at PER-ROW absolute offsets — the dense
+    analogue of :func:`paged_update_prefill`, built for the spec-decode
+    verify pass where every serve slot sits at its own position.
+
+    Positions past ``valid_len[b]`` are routed OUT OF BOUNDS (index ==
+    cache length), which JAX scatter drops — so rows drafting fewer than k
+    tokens (and dead rows, valid_len 0) leave the cache untouched, the
+    same trick the paged path plays with its trash page."""
+    b, c = k_new.shape[:2]
+    pos = offset[:, None] + jnp.arange(c)[None, :]            # (B, C) abs
+    if valid_len is not None:
+        pos = jnp.where(jnp.arange(c)[None, :] < valid_len[:, None],
+                        pos, cache.k.shape[1])
+    rows = jnp.arange(b)[:, None]
+    return KVCache(k=cache.k.at[rows, pos].set(k_new, mode="drop"),
+                   v=cache.v.at[rows, pos].set(v_new, mode="drop"))
+
+
+def dense_verify_attention(q, cache: KVCache, qpos):
+    """Token-parallel attention over a row's ENTIRE dense cache: q
+    (B, C, H, Dh) at absolute positions ``qpos`` (B, C), masked causally
+    by absolute position. Same math as :func:`paged_prefill_attention`
+    minus the page gather — the dense prefill path cannot serve here
+    because it attends only within the chunk, and a verify block's
+    positions condition on all the history before them."""
+    b, c, h, dh = q.shape
+    kvh = cache.k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, c, kvh, g, dh) * (dh ** -0.5)
+    s = _gqa_scores(qg, cache.k).astype(jnp.float32)  # (B,KVH,G,C,S_cache)
+    kpos = jnp.arange(cache.k.shape[1])
+    ok = kpos[None, None, :] <= qpos[:, :, None]      # (B, C, S_cache)
+    s = s + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :, :]
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = _gqa_combine(p, cache.v)
+    return o.reshape(b, c, h, dh)
+
+
 def init_cache(cfg: ModelConfig, batch: int, seq: int, *, window: int = 0,
                dtype=jnp.bfloat16) -> KVCache:
     kvh, dh = cfg.n_kv_heads, cfg.resolved_head_dim
@@ -492,6 +532,20 @@ def apply_attention(p: dict, x: jax.Array, cfg: ModelConfig, *,
         new_cache = paged_update_prefill(cache, k, v, offset, page_table,
                                          valid_len=valid_len)
         o = paged_prefill_attention(q, new_cache, page_table, qpos)
+    elif sq > 1 and is_vector_pos(pos):  # spec-decode verify, dense cache
+        # each row carries its own absolute offset; q attends over the
+        # row's WHOLE cache (history included), unlike the prefill branch
+        # below which only sees the chunk itself
+        if window > 0:
+            raise ValueError("per-row dense verify needs full attention "
+                             "(spec decode is gated on supports_paging)")
+        k = proj("wk", x).reshape(b, sq, kvh, dh)
+        v = proj("wv", x).reshape(b, sq, kvh, dh)
+        qpos = pos[:, None] + jnp.arange(sq)[None, :]         # (B, C) abs
+        q = maybe_rope(q, qpos)
+        k = maybe_rope(k, qpos)
+        new_cache = cache_update_verify(cache, k, v, pos, valid_len=valid_len)
+        o = dense_verify_attention(q, new_cache, qpos)
     elif sq > 1:  # token-parallel prefill: attend + build caches in one pass
         k = proj("wk", x).reshape(b, sq, kvh, dh)
         v = proj("wv", x).reshape(b, sq, kvh, dh)

@@ -6,7 +6,10 @@ inside the jitted decode (sampling.py), the request lifecycle streams
 typed events through GenerationHandle (session.py), and admission policy
 is a pluggable Scheduler (scheduler.py). KV storage is either dense
 per-slot (the oracle path) or a paged pool with refcounted prefix
-sharing and chunked prefill (kvpool.py). See docs/serving.md for the
+sharing and chunked prefill (kvpool.py). Self-speculative decoding
+(spec_k > 0) drafts ahead through a cheap subspace view of the same
+weights and verifies in one batched forward with the device-side
+rejection rule (sampling.py::spec_accept). See docs/serving.md for the
 request lifecycle and docs/architecture.md for the slot/caches design.
 """
 
@@ -17,7 +20,13 @@ from repro.serve.engine import (
     bucket_for,
 )
 from repro.serve.kvpool import PagePool, RadixCache, pages_needed
-from repro.serve.sampling import SamplingParams, sample_tokens
+from repro.serve.sampling import (
+    SamplingParams,
+    sample_draft_tokens,
+    sample_tokens,
+    spec_accept,
+    warped_probs,
+)
 from repro.serve.scheduler import (
     FCFS,
     SCHEDULERS,
@@ -47,5 +56,8 @@ __all__ = [
     "bucket_for",
     "make_scheduler",
     "pages_needed",
+    "sample_draft_tokens",
     "sample_tokens",
+    "spec_accept",
+    "warped_probs",
 ]

@@ -111,7 +111,9 @@ class ServeEngine:
                  prefix_cache: bool = True,
                  prefill_chunk: int | None = None,
                  prefill_chunks_per_tick: int = 1,
-                 prefill_every: int = 1):
+                 prefill_every: int = 1,
+                 spec_k: int = 0,
+                 draft: str = "int8"):
         if cfg is None:
             if plan is None:
                 raise ValueError("ServeEngine needs a ModelConfig or a "
@@ -148,6 +150,47 @@ class ServeEngine:
         from repro.utils.memprof import model_weight_bytes
         self.weight_report = model_weight_bytes(params)
         self.buckets = tuple(sorted(buckets))
+
+        # -- self-speculative decoding setup ------------------------------
+        # spec_k > 0: each decode tick drafts spec_k tokens ahead through a
+        # cheap subspace view of the SAME weights (int8 factors, or a
+        # rank-K' slice of the resident L/R), then verifies all of them in
+        # one batched f32 forward with the standard rejection rule.
+        self.spec_k = int(spec_k)
+        self.draft_source = draft
+        if self.spec_k:
+            if self.spec_k > max_cache - 2:
+                raise ValueError(f"spec_k ({spec_k}) leaves no room in "
+                                 f"max_cache ({max_cache})")
+            if not supports_paging(cfg):
+                # rolling-window and recurrent (Mamba) caches update
+                # destructively — a rejected draft could not be rolled back
+                raise ValueError(
+                    f"config {cfg.name!r} has sliding-window or recurrent "
+                    "layers whose caches cannot roll back rejected drafts; "
+                    "speculative decoding needs causal full attention")
+            if draft == "int8" and self.quantized:
+                raise ValueError(
+                    "engine already serves int8 — an int8 draft would equal "
+                    "the target; use draft='rank:<frac>' to slice the "
+                    "resident int8 factors instead")
+            # stamp the plan so bind.apply accepts the draft layouts (an
+            # int8-packed draft under an f32 spec, or narrower factor
+            # slices). Stamps never change f32 semantics, so overriding an
+            # installed unstamped plan is safe for other consumers.
+            stamped = self.plan.with_draft(draft)
+            if stamped.draft_source is None:
+                raise ValueError(
+                    f"draft {draft!r} stamps no site of this plan (rank "
+                    "drafts need factored sites — a dense-only plan has "
+                    "nothing to slice)")
+            if stamped != self.plan:
+                install(stamped)
+                self.plan = stamped
+            from repro.api.convert import draft_view
+            self.draft_params = draft_view(params, self.plan)
+        else:
+            self.draft_params = None
 
         if paged == "auto":
             paged = supports_paging(cfg)
@@ -186,6 +229,10 @@ class ServeEngine:
             self.slot_pages: list[list[int]] = [[] for _ in range(max_slots)]
             self._cursor: list[int | None] = [None] * max_slots
             self._pf_rr = 0
+            # pages reserved at admission (pages_needed(prompt + max_new));
+            # spec decode may transiently allocate pages BEYOND this to hold
+            # draft KV past the budget end, and releases them every tick
+            self._prealloc = [0] * max_slots
         else:
             self.pool = self.radix = None
             self.caches = init_lm_cache(cfg, max_slots, max_cache,
@@ -206,7 +253,9 @@ class ServeEngine:
                       "prefix_hit_tokens": 0, "decode_steps": 0,
                       "decode_tokens": 0, "completed": 0, "cancelled": 0,
                       "evicted": 0, "deferred": 0, "wall_s": 0.0,
-                      "prefill_s": 0.0, "decode_s": 0.0}
+                      "prefill_s": 0.0, "decode_s": 0.0,
+                      "spec_steps": 0, "spec_draft_tokens": 0,
+                      "spec_accepted_tokens": 0, "spec_page_shrinks": 0}
 
         def _decode(params_, toks, caches, pos, table,
                     temp, tk, tp, seeds, counts):
@@ -240,6 +289,36 @@ class ServeEngine:
                                   jnp.zeros_like(seeds, jnp.int32))
             return first, caches
 
+        def _draft_step(dparams, toks, caches, pos, table,
+                        temp, tk, tp, seeds, counts):
+            # one draft-model decode step: same shape as _decode but under
+            # the cheap subspace view, sampling from the SALT_DRAFT stream
+            # and returning the warped proposal distribution q for the
+            # rejection test. Draft KV lands at the drafted positions and
+            # is OVERWRITTEN by the verify pass's f32 KV (rows past their
+            # capacity write at a sentinel position that scatter drops /
+            # the padded trash table column routes to page 0).
+            from repro.serve.sampling import sample_draft_tokens
+            logits, caches = lm_decode_step(dparams, toks, caches, pos, cfg,
+                                            page_table=table)
+            nxt, q = sample_draft_tokens(logits, temp, tk, tp, seeds, counts)
+            return nxt, q, caches
+
+        def _verify(params_, toks, caches, offset, table, draft_toks,
+                    draft_q, draft_len, temp, tk, tp, seeds, counts):
+            # ONE token-parallel f32 forward over [cur, d_0..d_{k-1}] at
+            # per-row offsets — the same machinery as chunked prefill
+            # (paged) or the dense per-row verify branch — followed by the
+            # device-side rejection rule. Only int32 tokens leave the jit.
+            from repro.serve.sampling import spec_accept
+            logits, caches = lm_prefill(params_, toks, cfg, caches=caches,
+                                        pos=offset, valid_len=draft_len + 1,
+                                        last_only=False, page_table=table)
+            n_acc, out = spec_accept(logits.astype(jnp.float32), draft_toks,
+                                     draft_q, draft_len, temp, tk, tp,
+                                     seeds, counts)
+            return n_acc, out, caches
+
         # donate the cache pytree: the engine rebinds self.caches on every
         # call and never touches the old buffers, so XLA can update KV/SSM
         # state in place instead of copying the whole cache per token.
@@ -248,6 +327,8 @@ class ServeEngine:
         self._decode = jax.jit(_decode, donate_argnums=donate)
         self._prefill = jax.jit(_prefill, donate_argnums=donate)
         self._prefill_chunk = jax.jit(_prefill_chunk, donate_argnums=donate)
+        self._draft_step = jax.jit(_draft_step, donate_argnums=donate)
+        self._verify = jax.jit(_verify, donate_argnums=donate)
 
     @classmethod
     def from_checkpoint(cls, ckpt_dir: str, step: int | None = None,
@@ -378,6 +459,7 @@ class ServeEngine:
             self.slot_pages[slot] = []
             self.tables[slot, :] = 0
             self._cursor[slot] = None
+            self._prealloc[slot] = 0
 
     def _emit_token(self, req: Request, token: int, t: float) -> None:
         req.generated.append(token)
@@ -515,6 +597,7 @@ class ServeEngine:
             self.tables[slot, :] = 0
             self.tables[slot, :len(pages)] = pages
             self.slot_pages[slot] = pages
+            self._prealloc[slot] = need
             self.slots[slot] = req
             self._set_sampling_row(slot, req)
             self._cursor[slot] = len(shared) * pg
@@ -622,6 +705,147 @@ class ServeEngine:
             self._finish_if_done(slot)
         self.stats["decode_s"] += time.perf_counter() - t0
 
+    def _spec_pages(self, active: list[int]) -> np.ndarray:
+        """Paged-mode draft coverage: per-slot draft length after making
+        sure pages exist under every position the draft + verify will
+        write (pos .. pos + draft_len). A draft near the end of its budget
+        may need pages BEYOND the admission reservation (the verify block
+        overruns `prompt + max_new` even though emission never does) —
+        those are allocated here and released by ``_spec_release`` the
+        same tick. Pool exhaustion shrinks the draft to the covered
+        region instead of deferring the whole tick."""
+        draft_len = np.zeros(self.max_slots, np.int32)
+        pg = self.page_size
+        for slot in active:
+            pos = int(self.pos[slot])
+            dl = min(self.spec_k, self.max_cache - 1 - pos)
+            need = pages_needed(pos + dl + 1, pg)
+            have = len(self.slot_pages[slot])
+            if need > have:
+                want = need - have
+                if self.pool.free_pages < want and self.radix is not None:
+                    self.radix.evict(want - self.pool.free_pages)
+                grab = min(want, self.pool.free_pages)
+                alloc = self.pool.alloc(grab) if grab else None
+                if alloc:
+                    self.tables[slot, have:have + len(alloc)] = alloc
+                    self.slot_pages[slot].extend(alloc)
+                    have += len(alloc)
+                if have < need:
+                    # shrink the draft to what the held pages cover
+                    dl = min(dl, have * pg - 1 - pos)
+                    self.stats["spec_page_shrinks"] += 1
+            draft_len[slot] = max(dl, 0)
+        return draft_len
+
+    def _spec_release(self) -> None:
+        """Return every page past a live slot's admission reservation to
+        the pool and zero its table tail — the rollback half of the paged
+        draft path. Emission is capped at max_new, so a slot never needs
+        those pages again; finished slots already released everything via
+        ``_free_slot``."""
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            keep = self._prealloc[slot]
+            extra = self.slot_pages[slot][keep:]
+            if not extra:
+                continue
+            for p in extra:
+                self.pool.unref(p)
+            self.slot_pages[slot] = self.slot_pages[slot][:keep]
+            self.tables[slot, keep:] = 0
+
+    def _spec_decode_all(self) -> None:
+        """One speculative tick over every decoding slot: draft ``spec_k``
+        tokens through the cheap subspace view, verify all of them (plus
+        the current token) in ONE batched f32 forward, emit the accepted
+        prefix + the corrected/bonus token. Per-row draft lengths are
+        clamped by CACHE CAPACITY only (max_cache - 1 - pos), not by the
+        request budget — the host stops emitting at max_new/EOS, and the
+        overrun KV is never read (dense) or its pages are released
+        (paged). Dead and still-prefilling rows ride along at draft
+        length 0 exactly as they ride through ``_decode_all``."""
+        active = [i for i, r in enumerate(self.slots)
+                  if r is not None and (not self.paged
+                                        or self._cursor[i] is None)]
+        if not active:
+            return
+        t0 = time.perf_counter()
+        k = self.spec_k
+        if self.paged:
+            draft_len = self._spec_pages(active)
+            # dead/prefilling rows write to the trash page; ALL rows get
+            # one extra trash column so a past-capacity position index
+            # (which gather CLIPS, not drops) can never alias a live page
+            tbl = self.tables.copy()
+            for s in range(self.max_slots):
+                if self.slots[s] is None or self._cursor[s] is not None:
+                    tbl[s, :] = 0
+            table = jnp.asarray(np.concatenate(
+                [tbl, np.zeros((self.max_slots, 1), np.int32)], axis=1))
+        else:
+            draft_len = np.zeros(self.max_slots, np.int32)
+            for slot in active:
+                draft_len[slot] = max(
+                    0, min(k, self.max_cache - 1 - int(self.pos[slot])))
+            table = None
+
+        temp = jnp.asarray(self.temp)
+        tk = jnp.asarray(self.top_k)
+        tp = jnp.asarray(self.top_p)
+        seeds = jnp.asarray(self.seed)
+        counts = jnp.asarray(self.count)
+        dlen = jnp.asarray(draft_len)
+        pos0 = jnp.asarray(self.pos)
+
+        # -- draft: k cheap decode steps, all device-resident -------------
+        cur = jnp.asarray(self.next_tok[:, None])
+        toks_cols = [cur]
+        q_cols = []
+        for i in range(k):
+            # rows done drafting park at the sentinel position max_cache:
+            # dense scatter drops it, the padded trash column absorbs it
+            p_i = jnp.where(i < dlen, pos0 + i, self.max_cache)
+            nxt, q, self.caches = self._draft_step(
+                self.draft_params, toks_cols[-1], self.caches, p_i, table,
+                temp, tk, tp, seeds, counts + i)
+            toks_cols.append(nxt[:, None])
+            q_cols.append(q[:, None])
+        draft_toks = jnp.concatenate(toks_cols[1:], axis=1)       # (B, k)
+        draft_q = jnp.concatenate(q_cols, axis=1)                 # (B, k, V)
+
+        # -- verify: one batched f32 forward + device-side rejection ------
+        ver_toks = jnp.concatenate(toks_cols, axis=1)             # (B, k+1)
+        n_acc, out, self.caches = self._verify(
+            self.params, ver_toks, self.caches, pos0, table,
+            draft_toks, draft_q, dlen, temp, tk, tp, seeds, counts)
+        n_acc = np.asarray(n_acc, np.int32)
+        out = np.asarray(out, np.int32)
+
+        self.stats["decode_steps"] += 1
+        self.stats["spec_steps"] += 1
+        now = time.perf_counter()
+        for slot in active:
+            req = self.slots[slot]
+            self.stats["spec_draft_tokens"] += int(draft_len[slot])
+            self.stats["spec_accepted_tokens"] += int(n_acc[slot])
+            req.accepted_counts.append(int(n_acc[slot]))
+            emitted = 0
+            for j in range(int(n_acc[slot]) + 1):
+                self._emit_token(req, int(out[slot, j]), now)
+                emitted += 1
+                if req.hit_stop:
+                    break
+            self.pos[slot] += emitted
+            self.next_tok[slot] = int(out[slot, emitted - 1])
+            self.count[slot] += emitted
+            self.stats["decode_tokens"] += emitted
+            self._finish_if_done(slot)
+        if self.paged:
+            self._spec_release()
+        self.stats["decode_s"] += time.perf_counter() - t0
+
     # -- driving ------------------------------------------------------------
 
     def step(self) -> None:
@@ -635,7 +859,10 @@ class ServeEngine:
         self._evict(t0)
         self._admit()
         self._prefill_tick()
-        self._decode_all()
+        if self.spec_k:
+            self._spec_decode_all()
+        else:
+            self._decode_all()
         self.stats["wall_s"] += time.perf_counter() - t0
 
     def run(self) -> None:
@@ -678,4 +905,13 @@ class ServeEngine:
             s["pages_in_use"] = self.pool.pages_in_use
             s["prefix_cache_pages"] = (self.radix.n_nodes
                                        if self.radix is not None else 0)
+        if self.spec_k:
+            s["spec_k"] = self.spec_k
+            s["draft_source"] = self.draft_source
+            s["acceptance_rate"] = (s["spec_accepted_tokens"]
+                                    / max(s["spec_draft_tokens"], 1))
+            # mean emitted tokens per verify step (accepted + corrected /
+            # bonus), the speedup numerator the paper's Tab. 2 reports
+            s["tokens_per_verify"] = (s["decode_tokens"]
+                                      / max(s["spec_steps"], 1))
         return s

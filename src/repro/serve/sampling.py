@@ -30,6 +30,26 @@ import jax.numpy as jnp
 
 GREEDY_TEMPERATURE = 0.0
 
+# Speculative-decoding RNG salts. The non-spec decode draws with
+# ``fold_in(PRNGKey(seed), n)``; spec decode needs THREE independent
+# streams per token index n (draft proposal, accept uniform, corrected
+# resample/bonus), so each folds a distinct salt on top:
+# ``fold_in(fold_in(PRNGKey(seed), n), salt)``. Distinct from the
+# non-spec stream and from each other; still a pure function of
+# (seed, token index), so spec generations are interleaving-invariant.
+SALT_DRAFT, SALT_ACCEPT, SALT_FIX = 1, 2, 3
+
+
+def _spec_key(seed, index, salt: int):
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), index), salt)
+
+
+def _safe_log(p):
+    """log(p) with exact -inf on zero-probability entries (so categorical
+    can never draw a filtered-out token)."""
+    return jnp.where(p > 0, jnp.log(jnp.maximum(p, 1e-38)), -jnp.inf)
+
 
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
@@ -136,3 +156,161 @@ def sample_tokens(logits, temperature, top_k, top_p, seeds, counts):
 
     return jax.lax.cond(jnp.any(temperature > 0), _sampled,
                         lambda _: greedy, None)
+
+
+def warped_probs(logits, temperature, top_k, top_p):
+    """The post-filter next-token distribution, in VOCAB order: (B, V)
+    logits -> (B, V) probabilities after the same temperature -> top-k ->
+    top-p warp ``sample_tokens`` draws from. This is the q (draft) and p
+    (target) of the speculative rejection rule — ``sample_tokens``'s
+    categorical over the masked sorted logits samples EXACTLY this
+    distribution, which is what makes the spec-decode acceptance test a
+    distribution-identity statement rather than an approximation.
+
+    Rows with temperature <= 0 are warped at temperature 1 (their value is
+    never read: greedy rows accept by argmax match, not by ratio)."""
+    lg = logits.astype(jnp.float32)
+    v = lg.shape[-1]
+    safe_t = jnp.where(temperature <= 0, 1.0, temperature)[:, None]
+    order = jnp.argsort(-lg, axis=-1)
+    scaled = jnp.take_along_axis(lg, order, axis=-1) / safe_t
+    ranks = jnp.arange(v, dtype=jnp.int32)[None, :]
+    k = jnp.where(top_k <= 0, v, top_k).astype(jnp.int32)[:, None]
+    keep = ranks < k
+    probs = jax.nn.softmax(jnp.where(keep, scaled, -jnp.inf), axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep &= (cum - probs) < top_p[:, None]
+    keep = keep.at[:, 0].set(True)
+    probs = jax.nn.softmax(jnp.where(keep, scaled, -jnp.inf), axis=-1)
+    inv = jnp.argsort(order, axis=-1)           # sorted order -> vocab order
+    return jnp.take_along_axis(probs, inv, axis=-1)
+
+
+def sample_draft_tokens(logits, temperature, top_k, top_p, seeds, counts):
+    """One draft-step proposal: (B, V) draft logits -> ((B,) int32 tokens,
+    (B, V) f32 q). ``counts`` is the ABSOLUTE index of the token being
+    proposed (request count at spec-step start + draft position), so draft
+    randomness is interleaving-invariant like everything else. q is the
+    warped draft distribution the proposal was drawn from — ``spec_accept``
+    needs it for the p/q ratio. Greedy rows propose argmax (the lossless
+    deterministic draft); an all-greedy batch skips the warp entirely."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def _sampled(_):
+        q = warped_probs(logits, temperature, top_k, top_p)
+
+        def one(seed, count, row):
+            return jax.random.categorical(
+                _spec_key(seed, count, SALT_DRAFT), _safe_log(row))
+
+        drawn = jax.vmap(one)(seeds, counts, q).astype(jnp.int32)
+        return jnp.where(temperature <= 0, greedy, drawn), q
+
+    def _greedy(_):
+        # value never read on the all-greedy path; one-hot keeps q a valid
+        # distribution for shape/dtype parity across the cond branches
+        return greedy, jax.nn.one_hot(greedy, logits.shape[-1],
+                                      dtype=jnp.float32)
+
+    return jax.lax.cond(jnp.any(temperature > 0), _sampled, _greedy, None)
+
+
+def spec_accept(target_logits, draft_toks, draft_q, draft_len,
+                temperature, top_k, top_p, seeds, counts):
+    """The standard speculative rejection rule, device-side over all k
+    positions at once.
+
+    target_logits (B, k+1, V): f32 verify logits — position i is the
+        target's next-token distribution GIVEN the first i draft tokens
+        (position 0 conditions on the pre-draft context only).
+    draft_toks (B, k) int32, draft_q (B, k, V) f32: the proposals and the
+        warped draft distributions they were drawn from.
+    draft_len (B,) int32: how many proposals are live per row (rows near
+        their cache capacity draft fewer than k; dead rows draft 0).
+    temperature/top_k/top_p/seeds (B,): the per-request sampling state.
+    counts (B,) int32: each request's sampled-token count at spec-step
+        start — position i corresponds to absolute token index counts + i.
+
+    Returns (n_acc (B,) int32, out (B, k+1) int32): row b emits
+    ``out[b, : n_acc[b] + 1]`` — the accepted prefix plus ONE more token
+    (the corrected resample from normalize(max(p - q, 0)) on rejection, or
+    the free bonus token from p_k when every proposal is accepted).
+
+    Greedy rows (temperature <= 0) use the deterministic rule — accept
+    while the proposal equals the target argmax — whose output is
+    token-for-token the non-spec greedy generation by construction.
+    Sampled rows accept proposal i iff u_i < p_i(d_i) / q_i(d_i); the
+    emitted sequence is then distributed EXACTLY as k+1 sequential draws
+    from p (the lossless guarantee tests/test_spec_decode.py checks at the
+    distribution level). All of it runs inside the jit: only the accepted
+    int32 tokens cross to host.
+    """
+    bsz, kk = draft_toks.shape
+    rows = jnp.arange(bsz)
+    pos = jnp.arange(kk, dtype=jnp.int32)[None, :]
+    live = pos < draft_len[:, None]
+
+    tgt = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)   # (B, k+1)
+    match = (draft_toks == tgt[:, :kk]) & live
+    m_greedy = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1),
+                       axis=1).astype(jnp.int32)
+
+    def _sampled(_):
+        p = jax.vmap(
+            lambda l: warped_probs(l, temperature, top_k, top_p),
+            in_axes=1, out_axes=1)(target_logits)                # (B,k+1,V)
+        q_d = jnp.take_along_axis(
+            draft_q, draft_toks[..., None], axis=-1)[..., 0]     # (B, k)
+        p_d = jnp.take_along_axis(
+            p[:, :kk], draft_toks[..., None], axis=-1)[..., 0]   # (B, k)
+
+        def uniforms(seed, count):
+            return jax.vmap(lambda i: jax.random.uniform(
+                _spec_key(seed, count + i, SALT_ACCEPT)))(
+                    jnp.arange(kk, dtype=jnp.int32))
+
+        u = jax.vmap(uniforms)(seeds, counts)                    # (B, k)
+        accept = (u * jnp.maximum(q_d, 1e-38) < p_d) & live
+        m = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1),
+                    axis=1).astype(jnp.int32)
+
+        # corrected resample per candidate position: normalize(max(p-q,0)),
+        # falling back to p when the residual is identically zero (q >= p
+        # everywhere => every proposal was accepted with probability 1, but
+        # guard the degenerate numerics anyway)
+        res = jnp.maximum(p[:, :kk] - draft_q, 0.0)
+        res = jnp.where(jnp.sum(res, axis=-1, keepdims=True) > 0,
+                        res, p[:, :kk])
+
+        def fix_row(seed, count, rws):
+            def one(i, row):
+                return jax.random.categorical(
+                    _spec_key(seed, count + i, SALT_FIX), _safe_log(row))
+            return jax.vmap(one)(jnp.arange(kk, dtype=jnp.int32), rws)
+
+        r = jax.vmap(fix_row)(seeds, counts, res).astype(jnp.int32)
+
+        # free bonus token when the whole draft survives: a fresh draw
+        # from the target at position draft_len
+        p_bonus = jnp.take_along_axis(
+            p, draft_len[:, None, None], axis=1)[:, 0]           # (B, V)
+
+        def bonus_one(seed, count, dl, row):
+            return jax.random.categorical(
+                _spec_key(seed, count + dl, SALT_FIX), _safe_log(row))
+
+        b = jax.vmap(bonus_one)(seeds, counts, draft_len,
+                                p_bonus).astype(jnp.int32)
+        r_at_m = jnp.take_along_axis(
+            r, jnp.minimum(m, kk - 1)[:, None], axis=1)[:, 0]
+        fix = jnp.where(m < draft_len, r_at_m, b)
+        out = jnp.concatenate(
+            [draft_toks, jnp.zeros((bsz, 1), jnp.int32)], axis=1)
+        out = out.at[rows, m].set(fix)
+
+        g = temperature <= 0
+        return (jnp.where(g, m_greedy, m),
+                jnp.where(g[:, None], tgt, out))
+
+    return jax.lax.cond(jnp.any(temperature > 0), _sampled,
+                        lambda _: (m_greedy, tgt), None)

@@ -49,6 +49,10 @@ class Request:
     sampling: SamplingParams
     generated: list[int] = dataclasses.field(default_factory=list)
     events: list[Event] = dataclasses.field(default_factory=list)
+    # speculative decoding: per-spec-step accepted draft-token counts
+    # (one entry per verify step this request took part in; empty when the
+    # engine decodes non-speculatively)
+    accepted_counts: list[int] = dataclasses.field(default_factory=list)
     status: EventKind | None = None   # None = queued/running; else terminal
     submitted_at: float = 0.0
     first_token_at: float = 0.0
@@ -149,6 +153,27 @@ class GenerationHandle:
         if len(r.generated) < 2 or not r.first_token_at:
             return None
         return (r.last_token_at - r.first_token_at) / (len(r.generated) - 1)
+
+    # -- speculative decoding -----------------------------------------------
+
+    @property
+    def accepted_counts(self) -> list[int]:
+        """Accepted draft tokens per spec-decode verify step this request
+        took part in (empty under a non-speculative engine). Each verify
+        step also emits one corrected/bonus token, so a step contributes
+        ``accepted + 1`` tokens (budget/EOS permitting)."""
+        return list(self._req.accepted_counts)
+
+    @property
+    def acceptance_rate(self) -> float | None:
+        """Mean accepted-draft fraction over this request's spec steps:
+        sum(accepted) / (steps * k) for the engine's draft length k. None
+        when the engine never spec-decoded this request."""
+        c = self._req.accepted_counts
+        k = getattr(self._engine, "spec_k", 0)
+        if not c or not k:
+            return None
+        return sum(c) / (len(c) * k)
 
     # -- control ------------------------------------------------------------
 

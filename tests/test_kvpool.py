@@ -191,6 +191,86 @@ def test_radix_match_returns_longest_published_prefix(prompts, page_size):
     pool.check()
 
 
+# -- speculative-draft transient pages --------------------------------------
+
+@pytest.fixture(scope="module")
+def spec_world():
+    """A tiny UNTRAINED model: these tests pin page accounting, not token
+    outputs (greedy equivalence on trained params lives in
+    test_spec_decode.py / test_serve_fuzz.py)."""
+    import jax
+    import jax.numpy as jnp
+
+    import repro.configs as configs
+    from repro import api
+    from repro.models.lm import init_lm
+
+    cfg = configs.get_smoke("qwen2-0.5b")
+    api.uninstall(cfg)
+    params = init_lm(jax.random.PRNGKey(0), cfg, jnp.dtype(cfg.dtype))
+    yield cfg, params
+    api.uninstall(cfg)
+
+
+def _spec_engine(cfg, params, **kw):
+    from repro.serve import ServeEngine
+
+    base = dict(max_slots=1, max_cache=32, buckets=(4, 8, 16),
+                paged=True, page_size=4, prefill_chunk=8,
+                spec_k=8, draft="int8")
+    base.update(kw)
+    return ServeEngine(params, cfg, **base)
+
+
+def test_spec_draft_straddles_page_boundary_and_releases(spec_world):
+    """A draft near the end of the request budget writes KV past the pages
+    reserved at admission: prompt 6 + max_new 3 reserves 3 pages (cover
+    positions 0..11) but the k=8 draft's verify block reaches position 14
+    — a 4th page is allocated mid-tick and MUST come back to the pool the
+    same tick, whether the request survives it or finishes."""
+    cfg, params = spec_world
+    eng = _spec_engine(cfg, params)
+    h = eng.submit(list(range(10, 16)), max_new=3)
+    eng.step()                        # prefill + the straddling spec tick
+    # the draft ran at FULL length 8 — positions 6..14, whose verify block
+    # needs a 4th page beyond the 3 reserved — and did not shrink: the
+    # transient page was really allocated
+    assert eng.stats["spec_draft_tokens"] == 8
+    assert eng.stats["spec_page_shrinks"] == 0
+    while eng.busy:
+        eng.step()
+        eng.check_invariants()
+        # transient pages never outlive their tick
+        if eng.slots[0] is not None:
+            assert len(eng.slot_pages[0]) == eng._prealloc[0] == 3
+    eng.check_invariants()
+    assert len(h.generated) == 3
+    eng.release_prefix_cache()
+    assert eng.pool.pages_in_use == 0
+    eng.check_invariants()
+
+
+def test_spec_draft_pool_exhaustion_shrinks_not_leaks(spec_world):
+    """With ZERO free pages (total = trash + exactly the reservation) the
+    overrunning draft cannot get its transient page: the draft shrinks to
+    the covered region (stats the shrink), generation still completes,
+    and no page leaks. The slot's own radix-published page is pinned by
+    the slot's reference, so eviction cannot save the draft either."""
+    cfg, params = spec_world
+    eng = _spec_engine(cfg, params, total_pages=4)
+    h = eng.submit(list(range(20, 26)), max_new=3)
+    eng.step()                        # draft wants page 4 of 3: shrink
+    assert eng.stats["spec_page_shrinks"] >= 1
+    # shrunk to what 3 pages cover: positions <= 11, so dl = 11 - 6 = 5
+    assert eng.stats["spec_draft_tokens"] == 5
+    eng.check_invariants()
+    eng.run()
+    assert len(h.generated) == 3
+    eng.release_prefix_cache()
+    assert eng.pool.pages_in_use == 0
+    eng.check_invariants()
+
+
 def test_reference_np_gather_matches_pool_layout():
     """The device-side contract in miniature: writing token t of slot s to
     page table[s][t // pg] at offset t % pg and gathering pool[table[s]]

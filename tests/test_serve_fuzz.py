@@ -76,8 +76,10 @@ def world():
     def build(mode, sched):
         kw = dict(max_slots=2, max_cache=MAX_CACHE, buckets=(4, 8, 16),
                   scheduler=sched)
-        if mode == "paged":
+        if "paged" in mode:
             kw.update(paged=True, page_size=8, prefill_chunk=8)
+        if mode.startswith("spec"):
+            kw.update(spec_k=4, draft="int8")
         return ServeEngine(params, cfg, **kw)
 
     oracle_eng = build("dense", "fcfs")
@@ -87,7 +89,7 @@ def world():
     assert all(len(o) == MAX_NEW_CAP for o in oracle)
 
     engines = {(m, s): build(m, s)
-               for m in ("paged", "dense")
+               for m in ("paged", "dense", "spec-dense", "spec-paged")
                for s in ("fcfs", "spf", "priority")}
     return {"cfg": cfg, "params": params, "prompts": prompts,
             "oracle": oracle, "engines": engines}
@@ -172,6 +174,64 @@ def test_fuzz_dense_interleavings(world, sched):
     eng = world["engines"][("dense", sched)]
     for seed in range(N_SEEDS_DENSE):
         _run_scenario(world, eng, sched, 100_000 + seed)
+
+
+@pytest.mark.parametrize("mode", ["spec-dense", "spec-paged"])
+@pytest.mark.parametrize("sched", ["fcfs", "spf", "priority"])
+def test_fuzz_spec_interleavings(world, mode, sched):
+    """The spec-decode engines against the NON-SPEC dense oracle: greedy
+    speculative decoding is lossless, so every interleaving invariant —
+    oracle-prefix outputs, one terminal event, cancel/evict mid-draft
+    freeing slots and pages — must hold unchanged. The paged variant's
+    pool (9 pages, two 4-page slots + trash) leaves ZERO free pages for
+    draft overrun, so the shrink-on-exhaustion path runs constantly and
+    the every-7-ticks `check_invariants` would catch any page the draft
+    path allocated and failed to release."""
+    eng = world["engines"][(mode, sched)]
+    base = {"fcfs": 0, "spf": 1000, "priority": 2000}[sched]
+    base += 10_000 if mode == "spec-dense" else 20_000
+    for seed in range(12):
+        _run_scenario(world, eng, sched, base + seed)
+    assert eng.stats["spec_steps"] > 0
+    if "paged" in mode:
+        eng.release_prefix_cache()
+        eng.check_invariants()
+        assert eng.pool.pages_in_use == 0
+
+
+def test_spec_kv_rollback_matches_never_drafted(world):
+    """After a full generation, the spec engine's dense KV cache is
+    BITWISE equal to a never-drafted engine's over every position the
+    final state says is valid (0..pos-1): the verify pass overwrites each
+    accepted draft position with exact f32 KV, and rejected positions lie
+    at >= pos where the next tick's writes land before any read."""
+    import jax
+
+    cfg, params = world["cfg"], world["params"]
+    prompt = world["prompts"][2]
+
+    def run(spec_k):
+        kw = dict(max_slots=1, max_cache=MAX_CACHE, buckets=(4, 8, 16))
+        if spec_k:
+            kw.update(spec_k=spec_k, draft="int8")
+        eng = ServeEngine(params, cfg, **kw)
+        h = eng.submit(prompt, max_new=MAX_NEW_CAP)
+        eng.run()
+        return eng, h
+
+    ref_eng, ref_h = run(0)
+    spec_eng, spec_h = run(3)      # 3 does not divide 6: partial last block
+    assert spec_h.generated == ref_h.generated
+    valid = int(ref_eng.pos[0])
+    assert valid == int(spec_eng.pos[0])
+    for a, b in zip(jax.tree.leaves(ref_eng.caches),
+                    jax.tree.leaves(spec_eng.caches)):
+        # engine cache leaves are (repeat, slot, position, ...); compare
+        # slot 0's valid region only — beyond pos is scratch by contract
+        assert a.shape == b.shape
+        av = np.asarray(a[:, 0, :valid])
+        bv = np.asarray(b[:, 0, :valid])
+        assert (av == bv).all(), "KV rollback left divergent cache state"
 
 
 def test_fuzz_paged_starved_pool(world):
