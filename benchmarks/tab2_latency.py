@@ -73,6 +73,7 @@ def run() -> list[str]:
     rows += paged_rows()
     rows += quant_rows()
     rows += spec_rows()
+    rows += tenancy_rows()
     return rows
 
 
@@ -465,21 +466,126 @@ def spec_rows() -> list[str]:
     return rows
 
 
+def tenancy_rows() -> list[str]:
+    """Multi-tenant serving rows (repro/tenancy/): the per-user-adapter
+    story as numbers, all host-load-invariant ratios plus one absolute
+    byte split.
+
+    * ``serve_tenancy_mixed`` — a mixed batch (three tenants + one bare-
+      base slot) vs the same engine serving one tenant only:
+      ``mixed_over_solo_tpot`` is the per-slot-gather tax (one jitted
+      executable either way), ``tenant_greedy_match`` pins mixed-batch
+      generations bitwise to per-tenant solo engines (lossless by
+      construction — bench_gate holds it at 1 absolutely), ``swap_us`` is
+      one cold adapter swap (store load + device bank-row upload).
+    * ``serve_tenancy_adapter_bytes`` — what one tenant costs at rest:
+      f32 vs int8-packed store bytes, gated at <= 0.5.
+    """
+    import tempfile
+    import time as _time
+
+    import numpy as np
+
+    from repro.tenancy import AdapterStore, init_adapters
+    from repro.tenancy.resident import ResidentAdapters
+
+    rows = []
+    cfg = configs.get_smoke("qwen2-0.5b")
+    api.uninstall(cfg)
+    plan = api.install(api.resolve(cfg))
+    key = jax.random.PRNGKey(0)
+    params = init_lm(key, cfg, jnp.dtype(cfg.dtype))
+    aplan = plan.with_adapter(0.25)
+    tenants = ["t0", "t1", "t2"]
+    store = AdapterStore(tempfile.mkdtemp(prefix="repro_tenancy_bench_"))
+    for i, t in enumerate(tenants):
+        ad = init_adapters(jax.random.PRNGKey(10 + i), params, aplan)
+        store.save(t, jax.tree.map(lambda x: x + 0.01 * (i + 1), ad), aplan)
+    m8 = store.save("t0_int8", store.load("t0")[0], aplan, fmt="int8")
+    f32_b = store.meta("t0")["bytes"]
+    rows.append(f"tab2/serve_tenancy_adapter_bytes,,"
+                f"f32_bytes={f32_b};int8_bytes={m8['bytes']};"
+                f"int8_over_f32_bytes={m8['bytes'] / f32_b:.3f};"
+                f"f32_mib={f32_b / 2**20:.4f}")
+
+    prompt = np.random.default_rng(3).integers(
+        0, cfg.vocab_size, (SERVE_B, SERVE_P))
+    # longer decode than the other serve rows: the TPOT ratio here divides
+    # two ~identical small numbers, so first-tick jitter needs amortizing
+    new_toks = SERVE_NEW * 3
+    max_cache = SERVE_P + new_toks + 1
+
+    def run_engine(assign):
+        eng = ServeEngine(params, plan=plan, max_slots=SERVE_B,
+                          max_cache=max_cache,
+                          adapters=ResidentAdapters(store, capacity=3))
+        for i in range(SERVE_B):          # warmup compiles + bank swaps
+            eng.submit(list(map(int, prompt[i])), max_new=2,
+                       tenant=assign[i])
+        eng.run()
+        eng.reset_stats()
+        hs = [eng.submit(list(map(int, prompt[i])), max_new=new_toks,
+                         tenant=assign[i]) for i in range(SERVE_B)]
+        eng.run()
+        return eng, hs
+
+    mix = (tenants + [None] * SERVE_B)[:SERVE_B]
+    eng_m, hs_m = run_engine(mix)
+    eng_s, _ = run_engine([tenants[0]] * SERVE_B)
+
+    def tpot(e):
+        s = e.summary()
+        return s["decode_s"] / max(s["decode_tokens"], 1)
+
+    ratio = tpot(eng_m) / tpot(eng_s)
+
+    match = 1
+    for i, t in enumerate(mix):           # per-tenant solo oracles
+        solo = ServeEngine(params, plan=plan, max_slots=SERVE_B,
+                           max_cache=max_cache,
+                           adapters=ResidentAdapters(store, capacity=3))
+        h = solo.submit(list(map(int, prompt[i])), max_new=new_toks,
+                        tenant=t)
+        solo.run()
+        match &= int(h.result() == hs_m[i].result())
+
+    # one cold swap: store load + device bank-row upload (+ an eviction)
+    ra = eng_m.adapters
+    cold = next(t for t in store.tenants() if t not in ra.row_of)
+    t0 = _time.perf_counter()
+    ra.acquire(cold, set())
+    jax.block_until_ready(ra.banks)
+    swap_us = (_time.perf_counter() - t0) * 1e6
+
+    s = eng_m.summary()
+    rows.append(f"tab2/serve_tenancy_mixed,{tpot(eng_m) * 1e6:.1f},"
+                f"tenant_greedy_match={match};"
+                f"mixed_over_solo_tpot={ratio:.3f};"
+                f"swap_us={swap_us:.1f};"
+                f"adapter_bank_bytes={s['adapter_bank_bytes']};"
+                f"swaps={s['tenancy']['swaps']};"
+                f"evictions={s['tenancy']['evictions']};"
+                f"n_tenants={len(tenants)};lru_capacity=3")
+    api.uninstall(cfg)
+    return rows
+
+
 def main():
     import argparse
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--serve", action="store_true",
                     help="serving rows only (serve_rows + paged_rows + "
-                         "spec_rows) — the CI serve-bench job's fast path")
+                         "spec_rows + tenancy_rows) — the CI serve-bench "
+                         "job's fast path")
     ap.add_argument("--json", default="",
                     help="also write stable-schema JSON "
                          "(benchmarks/common.py; BENCH_serve.json is the "
                          "committed baseline scripts/bench_gate.py "
                          "gates against)")
     args = ap.parse_args()
-    rows = (serve_rows() + paged_rows() + spec_rows()) if args.serve \
-        else run()
+    rows = (serve_rows() + paged_rows() + spec_rows() + tenancy_rows()) \
+        if args.serve else run()
     for row in rows:
         print(row)
     if args.json:

@@ -41,6 +41,11 @@ ABSOLUTE_BARS = [
     ("tab2/serve_spec_decode_k2", "greedy_match", "min", 1),
     ("tab2/serve_spec_decode_k4", "greedy_match", "min", 1),
     ("tab2/serve_spec_decode_k4", "acceptance_rate", "min", 0.5),
+    # tenancy: mixed-tenant greedy decoding is LOSSLESS vs per-tenant solo
+    # engines by construction; an int8-stored adapter must actually pack
+    ("tab2/serve_tenancy_mixed", "tenant_greedy_match", "min", 1),
+    ("tab2/serve_tenancy_mixed", "mixed_over_solo_tpot", "max", 1.6),
+    ("tab2/serve_tenancy_adapter_bytes", "int8_over_f32_bytes", "max", 0.5),
 ]
 
 # ratio metrics allowed to drift at most this factor vs the baseline
@@ -51,12 +56,20 @@ RELATIVE_KEYS = [
     ("tab2/serve_spec_decode_k4", "acceptance_rate"),
     ("tab2/serve_spec_decode_k2", "spec_tpot_ratio"),
     ("tab2/serve_spec_decode_k4", "spec_tpot_ratio"),
+    ("tab2/serve_tenancy_mixed", "mixed_over_solo_tpot"),
 ]
 RELATIVE_TOLERANCE = 1.35
 
 # keys where a LARGER value is the harmful direction (latency-style
 # ratios); everything else regresses by shrinking (throughput, acceptance)
-REGRESS_UP_KEYS = {"tpot_p95_ratio", "spec_tpot_ratio"}
+REGRESS_UP_KEYS = {"tpot_p95_ratio", "spec_tpot_ratio",
+                   "mixed_over_solo_tpot"}
+
+# rows deliberately deleted from the benchmark suite: a baseline row
+# missing from the current run fails the gate UNLESS listed here (or
+# passed via --retire) — renaming/dropping a row must be an explicit
+# decision, never a silent skip that masks a dead benchmark
+RETIRED_ROWS: set[str] = set()
 
 
 def load(path: str) -> dict:
@@ -73,7 +86,12 @@ def main() -> int:
     ap.add_argument("--baseline", default="BENCH_serve.json",
                     help="committed baseline to diff ratio metrics against "
                          "('' skips the relative checks)")
+    ap.add_argument("--retire", default="",
+                    help="comma-separated row names retired this run (on "
+                         "top of RETIRED_ROWS) — missing-vs-baseline "
+                         "failures are waived for them")
     args = ap.parse_args()
+    retired = RETIRED_ROWS | {n for n in args.retire.split(",") if n}
 
     try:
         new = load(args.new)
@@ -101,8 +119,16 @@ def main() -> int:
             print(f"bench_gate: cannot read baseline {args.baseline}: {e}",
                   file=sys.stderr)
             return 2
+        # every baseline row must still exist (or be explicitly retired) —
+        # a silently vanished row is how a dead benchmark masks a real
+        # regression behind it
+        for name in sorted(set(base) - set(new) - retired):
+            bad.append(f"MISSING_VS_BASELINE {name} — row exists in "
+                       f"{args.baseline} but the current run did not emit "
+                       "it; retire it explicitly (--retire or "
+                       "RETIRED_ROWS) if that is intended")
         for name, key in RELATIVE_KEYS:
-            if name not in new or name not in base:
+            if name in retired or name not in new or name not in base:
                 continue
             v, b = new[name].get(key), base[name].get(key)
             if v is None or b is None or b == 0:

@@ -161,9 +161,28 @@ def apply(spec: LinearSpec, p: dict, x: jax.Array, wasi: WasiConfig,
             y = asi_matmul(x, p["w"], xt)
         else:
             y = jnp.einsum("...i,oi->...o", x, p["w"])
+    if "La" in p:
+        y = y + adapter_delta(x, p["La"], p["Ra"])
     if "b" in p:
         y = y + p["b"]
     return y, new_state
+
+
+def adapter_delta(x, La, Ra):
+    """The per-tenant additive delta ``x R_u^T L_u^T`` (repro/tenancy/).
+
+    Two layouts, told apart by rank alone: the single-tenant pair
+    La (O, K_a) / Ra (K_a, I) routes through the same fused lowrank kernel
+    the factored sites use; a per-slot GATHERED bank row — La (B, O, K_a) /
+    Ra (B, K_a, I), one tenant's factors per batch row, selected inside the
+    serve engine's jitted step — contracts per row so one executable serves
+    any mix of tenants. A zero pair contributes exactly zero, which is how
+    the engine's identity row serves adapter-less slots."""
+    if La.ndim == x.ndim:
+        h = jnp.einsum("b...i,bki->b...k", x, Ra)
+        return jnp.einsum("b...k,bok->b...o", h, La)
+    from repro.kernels.ops import lowrank_matmul
+    return lowrank_matmul(x, Ra, La)
 
 
 def linear_out_dim(p: dict) -> int:
@@ -189,6 +208,13 @@ def is_quantized(p: dict) -> bool:
     """Is this linear dict in an int8-packed layout (quant/quantize.py:
     scales ride next to the int8 payload as sL/sR/sW)?"""
     return "sL" in p or "sW" in p
+
+
+def is_adapter_params(v) -> bool:
+    """Does ``v`` carry a per-tenant adapter pair (repro/tenancy/)? True
+    for both a pure adapter dict ({"La","Ra"}) and a merged linear dict
+    that carries the delta next to its base weights."""
+    return isinstance(v, dict) and "La" in v
 
 
 def draft_slice(p: dict, k: int) -> dict:
@@ -261,6 +287,25 @@ def iter_linear_dicts(tree, prefix: str = ""):
             yield from iter_linear_dicts(v, f"{prefix}/{i}" if prefix else str(i))
 
 
+def iter_adapter_dicts(tree, prefix: str = ""):
+    """Yield (path, dict) for every adapter-pair-bearing dict in a tree.
+    Walks pure adapter trees ({"La","Ra"} at the sites, repro/tenancy/)
+    and merged param trees (delta riding next to base weights) alike —
+    the sanctioned walk for per-tenant byte accounting."""
+    if isinstance(tree, dict):
+        if "La" in tree:
+            yield prefix, tree
+            return
+        if is_linear_params(tree):
+            return
+        for k, v in tree.items():
+            yield from iter_adapter_dicts(v, f"{prefix}/{k}" if prefix else k)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from iter_adapter_dicts(
+                v, f"{prefix}/{i}" if prefix else str(i))
+
+
 def linear_param_bytes(p: dict) -> dict:
     """Storage of one linear dict, split by payload kind:
     {"weights": .., "scales": .., "bias": ..} bytes. Quantized layouts show
@@ -270,12 +315,17 @@ def linear_param_bytes(p: dict) -> dict:
     def nbytes(a) -> int:
         return int(np.prod(a.shape)) * np.dtype(a.dtype).itemsize
 
-    out = {"weights": 0, "scales": 0, "bias": 0}
+    out = {"weights": 0, "scales": 0, "bias": 0,
+           "adapter_weights": 0, "adapter_scales": 0}
     for k, v in p.items():
         if k in ("w", "L", "R"):
             out["weights"] += nbytes(v)
         elif k in ("sW", "sL", "sR"):
             out["scales"] += nbytes(v)
+        elif k in ("La", "Ra"):
+            out["adapter_weights"] += nbytes(v)
+        elif k in ("sLa", "sRa"):
+            out["adapter_scales"] += nbytes(v)
         elif k == "b":
             out["bias"] += nbytes(v)
     return out

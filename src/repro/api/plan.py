@@ -108,6 +108,12 @@ class LinearSpec:
     # zero extra weights, just narrower slices). Stamped by
     # SubspacePlan.with_draft(); like quant, a serving decision.
     draft: str | None = None
+    # Per-tenant adapter rank: None (site carries no tenant delta) or the
+    # rank K_a of the additive (L_u, R_u) delta pair a fine-tuned tenant
+    # contributes at this site (y += x R_u^T L_u^T, repro/tenancy/).
+    # Stamped by SubspacePlan.with_adapter(); orthogonal to mode/quant —
+    # the base weights keep their layout, the delta rides NEXT TO them.
+    adapter: int | None = None
 
     @property
     def factored_params(self) -> bool:
@@ -290,6 +296,32 @@ class SubspacePlan:
                              "(expected 'int8' or 'rank:<frac>')")
         return dataclasses.replace(self, specs=specs)
 
+    def with_adapter(self, rank_frac: float = 0.25) -> "SubspacePlan":
+        """Stamp a per-tenant adapter rank per site (repro/tenancy/).
+
+        Every non-MoE site gains ``adapter = static_rank(in, out,
+        rank_frac)`` (unaligned, min 1 — adapters are deliberately tiny):
+        a fine-tuned tenant contributes an additive rank-K_a delta pair
+        ``(L_u, R_u)`` there, applied by ``bind.apply`` as
+        ``y += x R_u^T L_u^T`` whenever the param dict carries the
+        ``La/Ra`` keys. MoE sites stay out: their expert-banked matmul
+        does not route through the per-site delta path. Like quant/draft
+        stamps, this never changes base semantics — a tree without
+        adapter factors is bitwise the unstamped forward."""
+        if not 0.0 < rank_frac <= 1.0:
+            raise ValueError(
+                f"adapter rank fraction must be in (0, 1]: {rank_frac!r}")
+        specs = tuple(
+            dataclasses.replace(s, adapter=static_rank(
+                s.in_dim, s.out_dim, rank_frac, align=1, min_rank=1))
+            if s.role != "moe" else s
+            for s in self.specs)
+        return dataclasses.replace(self, specs=specs)
+
+    @property
+    def has_adapters(self) -> bool:
+        return any(s.adapter is not None for s in self.specs)
+
     @property
     def draft_source(self) -> str | None:
         """"int8" | "rank" | None — the stamped draft family, if any."""
@@ -313,6 +345,8 @@ class SubspacePlan:
                 extra += f" quant={s.quant}"
             if s.draft is not None:
                 extra += f" draft={s.draft}"
+            if s.adapter is not None:
+                extra += f" adapter={s.adapter}"
             lines.append(f"  {s.name:16s} {s.role:9s} "
                          f"({s.in_dim}->{s.out_dim}) {s.mode:8s}"
                          f" {s.kernel}{extra}")

@@ -18,7 +18,8 @@ process_index (multi-host data loading without a distributed filesystem).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import zlib
+from dataclasses import dataclass, replace
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +32,18 @@ class SyntheticLM:
     global_batch: int
     seed: int = 0
     n_topics: int = 8
+    # Tenant skew: when set, ~(1 - tenant_offmix) of rows sample the
+    # tenant's favorite topic (a stable hash of the id) instead of uniform,
+    # so a per-user adapter has a real distribution shift to learn
+    # (repro/tenancy/finetune.py) while the bigram backbone — and hence
+    # everything a GLOBAL model learns — is shared across tenants.
+    tenant: str | None = None
+    tenant_offmix: float = 0.15
+
+    def for_tenant(self, uid: str) -> "SyntheticLM":
+        """This stream, skewed toward tenant ``uid``'s topic. Deterministic
+        in (seed, step, uid); ``uid=None``-equivalent is the base stream."""
+        return replace(self, tenant=uid)
 
     def _tables(self):
         key = jax.random.PRNGKey(self.seed)
@@ -47,6 +60,11 @@ class SyntheticLM:
         key = jax.random.fold_in(jax.random.PRNGKey(self.seed + 1), step)
         kt, ks, kc = jax.random.split(key, 3)
         topics = jax.random.randint(kt, (b,), 0, self.n_topics)
+        if self.tenant is not None:
+            fav = zlib.crc32(self.tenant.encode()) % self.n_topics
+            km = jax.random.fold_in(kt, 1)
+            offmix = jax.random.uniform(km, (b,)) < self.tenant_offmix
+            topics = jnp.where(offmix, topics, fav)
         start = jax.random.randint(ks, (b,), 0, self.vocab_size)
 
         def gen_row(carry, k):

@@ -1,0 +1,86 @@
+"""Per-user adapter fine-tuning CLI: checkpointed base -> AdapterStore.
+
+``python -m repro.launch.finetune_user --ckpt /tmp/repro_example_lm_smoke
+  --tenant alice --store /tmp/adapters --steps 40``
+
+The on-device personalization loop (ROADMAP open item 2): load a
+plan-bearing checkpoint, FREEZE it, train only the per-site rank-K_a
+delta pair on that tenant's stream (``SyntheticLM.for_tenant`` — the
+tenant id skews the topic mixture, so there is a real shift to learn),
+and register the result — a few hundred KB, not a model copy — in the
+content-addressed store ``launch/serve --adapters`` hot-swaps from.
+
+``--check`` turns the run into an acceptance test: exit non-zero unless
+the adapter's CE on the tenant's held-out stream beats the frozen base's.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro import api
+from repro.data.synthetic import SyntheticLM
+from repro.tenancy import (AdapterStore, eval_ce, finetune_adapters,
+                           merge_adapters)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt", default="/tmp/repro_example_lm_smoke",
+                    help="plan-bearing base checkpoint dir "
+                         "(examples/train_lm.py --smoke writes one)")
+    ap.add_argument("--tenant", required=True,
+                    help="tenant id ([A-Za-z0-9._-]); also seeds the "
+                         "tenant's synthetic stream")
+    ap.add_argument("--store", default="/tmp/repro_adapters",
+                    help="AdapterStore root to register the adapter in")
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--rank-frac", type=float, default=0.25,
+                    help="adapter rank fraction per site "
+                         "(SubspacePlan.with_adapter)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quant", default="", choices=["", "int8"],
+                    help="pack the STORED adapter int8 (training stays f32; "
+                         "serve loads it dequantized)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless adapter CE < frozen-base CE on the "
+                         "tenant's held-out stream")
+    args = ap.parse_args()
+
+    params, plan, step = api.convert.load_checkpoint(args.ckpt)
+    if plan is None:
+        raise SystemExit(f"checkpoint at {args.ckpt} carries no plan")
+    aplan = plan.with_adapter(args.rank_frac)
+    cfg = plan.model
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                       global_batch=args.batch,
+                       seed=args.seed).for_tenant(args.tenant)
+
+    adapters, metrics = finetune_adapters(
+        params, aplan, data, steps=args.steps, seed=args.seed,
+        log_every=max(args.steps // 4, 1))
+    base_ce = eval_ce(params, cfg, data)
+    adapter_ce = eval_ce(merge_adapters(params, adapters), cfg, data)
+
+    store = AdapterStore(args.store)
+    meta = store.save(args.tenant, adapters, aplan,
+                      fmt=args.quant or "f32",
+                      extra={"base_step": step, "steps": args.steps,
+                             "base_ce": base_ce, "adapter_ce": adapter_ce})
+    print(f"[finetune_user] tenant={args.tenant} base_step={step} "
+          f"steps={args.steps} rank_frac={args.rank_frac}")
+    print(f"[finetune_user] base_ce={base_ce:.4f} "
+          f"adapter_ce={adapter_ce:.4f} "
+          f"delta={base_ce - adapter_ce:+.4f}")
+    print(f"[finetune_user] stored format={meta['format']} "
+          f"bytes={meta['bytes']} ({meta['bytes'] / 2**20:.4f} MiB) "
+          f"object={meta['object'][:12]} store={args.store}")
+    if args.check and not adapter_ce < base_ce:
+        raise SystemExit(
+            f"--check failed: adapter CE {adapter_ce:.4f} does not beat "
+            f"frozen base CE {base_ce:.4f} on tenant {args.tenant!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -156,16 +156,35 @@ def main():
                     help="print tokens as they are generated plus "
                          "per-request TTFT/TPOT, instead of the batch "
                          "summary only")
+    ap.add_argument("--adapters", default="",
+                    help="AdapterStore directory (launch/finetune_user.py "
+                         "writes it): requests carry per-tenant factored "
+                         "deltas hot-swapped from this store")
+    ap.add_argument("--tenants", default="",
+                    help="comma-separated tenant ids cycled across the "
+                         "submitted requests ('' entries = bare base); "
+                         "requires --adapters")
+    ap.add_argument("--adapter-slots", type=int, default=4,
+                    help="device-resident adapter LRU capacity "
+                         "(tenant churn past it swaps bank rows, never "
+                         "re-jits)")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
     slots = args.max_slots or min(args.batch, 4)
     max_cache = args.prompt_len + args.tokens + 1
+    if args.tenants and not args.adapters:
+        raise SystemExit("--tenants needs --adapters DIR")
+    tenants = ([t or None for t in args.tenants.split(",")]
+               if args.tenants else [None])
     paged_kw = {}
+    if args.adapters:
+        paged_kw.update(adapters=args.adapters,
+                        adapter_slots=args.adapter_slots)
     if args.spec_k:
         paged_kw.update(spec_k=args.spec_k, draft=args.draft)
     if args.paged:
-        paged_kw = dict(paged=True, page_size=args.page_size,
+        paged_kw.update(paged=True, page_size=args.page_size,
                         total_pages=args.total_pages or None,
                         prefill_chunk=args.prefill_chunk or None,
                         prefill_every=args.prefill_every,
@@ -202,8 +221,10 @@ def main():
                                  cfg.vocab_size)
     t0 = time.time()
     handles = [engine.submit(list(map(int, prompts[i])), max_new=args.tokens,
-                             sampling=sp)
+                             sampling=sp, tenant=tenants[i % len(tenants)])
                for i in range(args.batch)]
+    for i, h in enumerate(handles):
+        print(f"[serve] rid={h.rid} tenant={tenants[i % len(tenants)]}")
     if args.stream:
         _stream(engine, handles)
     else:
@@ -227,6 +248,13 @@ def main():
           f"group) | decode {s['decode_tokens']} tok "
           f"({s['decode_tok_s']:.1f} tok/s) | "
           f"{s['requests_s']:.2f} req/s")
+    if args.adapters:
+        t = s["tenancy"]
+        print(f"[serve] tenancy resident={','.join(t['resident']) or '-'} "
+              f"capacity={t['capacity']} swaps={t['swaps']} "
+              f"evictions={t['evictions']} hits={t['hits']} "
+              f"bank={t['bank_bytes'] / 2**20:.2f}MiB "
+              f"store_tenants={t['store_tenants']}")
     if args.spec_k:
         print(f"[serve] spec k={s['spec_k']} draft={s['draft_source']} "
               f"acceptance_rate={s['acceptance_rate']:.3f} "

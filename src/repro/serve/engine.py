@@ -113,7 +113,9 @@ class ServeEngine:
                  prefill_chunks_per_tick: int = 1,
                  prefill_every: int = 1,
                  spec_k: int = 0,
-                 draft: str = "int8"):
+                 draft: str = "int8",
+                 adapters=None,
+                 adapter_slots: int = 4):
         if cfg is None:
             if plan is None:
                 raise ValueError("ServeEngine needs a ModelConfig or a "
@@ -192,6 +194,35 @@ class ServeEngine:
         else:
             self.draft_params = None
 
+        # -- multi-tenant adapter banks -----------------------------------
+        # `adapters` is a ResidentAdapters (or a store dir path): per-slot
+        # int32 indices gather each request's tenant row out of the
+        # device-resident banks INSIDE the jitted steps, so any tenant mix
+        # — including adapter-less slots via identity row 0 — runs through
+        # one executable, and tenant churn swaps bank contents only.
+        if adapters is not None:
+            if self.spec_k:
+                raise ValueError(
+                    "speculative decoding and tenant adapters are mutually "
+                    "exclusive: the draft view does not carry per-tenant "
+                    "deltas, so drafts would systematically diverge")
+            from repro.tenancy.resident import ResidentAdapters
+            if isinstance(adapters, str):
+                adapters = ResidentAdapters(adapters, capacity=adapter_slots)
+            self.adapters = adapters
+            stamped = SubspacePlan.from_json(adapters.plan_json)
+            if stamped.model != cfg:
+                raise ValueError(
+                    f"adapter store was trained for model "
+                    f"{stamped.model.name!r} but the engine serves "
+                    f"{cfg.name!r}")
+            self.adapter_plan = stamped
+            adapters.on_evict = self._adapter_evicted
+        else:
+            self.adapters = None
+            self.adapter_plan = None
+        self.adapter_events: list[Event] = []
+
         if paged == "auto":
             paged = supports_paging(cfg)
         elif paged and not supports_paging(cfg):
@@ -243,6 +274,8 @@ class ServeEngine:
         # arrays (temperature, top-k, top-p, RNG seed, sampled-token count)
         self.pos = np.zeros(max_slots, np.int32)
         self.next_tok = np.zeros(max_slots, np.int32)
+        # per-slot adapter bank row (0 = identity / no tenant)
+        self.adapter_ix = np.zeros(max_slots, np.int32)
         self.temp = np.zeros(max_slots, np.float32)
         self.top_k = np.zeros(max_slots, np.int32)
         self.top_p = np.ones(max_slots, np.float32)
@@ -255,34 +288,50 @@ class ServeEngine:
                       "evicted": 0, "deferred": 0, "wall_s": 0.0,
                       "prefill_s": 0.0, "decode_s": 0.0,
                       "spec_steps": 0, "spec_draft_tokens": 0,
-                      "spec_accepted_tokens": 0, "spec_page_shrinks": 0}
+                      "spec_accepted_tokens": 0, "spec_page_shrinks": 0,
+                      "adapter_evictions": 0}
 
-        def _decode(params_, toks, caches, pos, table,
+        def _merged(params_, banks, aix):
+            # trace-time branch: a no-adapter engine passes banks=None and
+            # compiles the EXACT pre-tenancy computation; an adapter
+            # engine gathers each batch row's tenant factors from the
+            # banks and merges them next to the base weights, so
+            # bind.apply adds the delta. Tenant churn changes bank
+            # CONTENTS only — one executable either way.
+            if banks is None:
+                return params_
+            from repro.tenancy.adapter import gather_rows, merge_adapters
+            return merge_adapters(params_, gather_rows(banks, aix))
+
+        def _decode(params_, banks, aix, toks, caches, pos, table,
                     temp, tk, tp, seeds, counts):
-            logits, caches = lm_decode_step(params_, toks, caches, pos, cfg,
+            logits, caches = lm_decode_step(_merged(params_, banks, aix),
+                                            toks, caches, pos, cfg,
                                             page_table=table)
             nxt = sample_tokens(logits, temp, tk, tp, seeds, counts)
             return nxt, caches
 
-        def _prefill(params_, toks, caches, valid_len, rows,
+        def _prefill(params_, banks, aix, toks, caches, valid_len, rows,
                      temp, tk, tp, seeds):
             # dense grouped prefill: gather the admitted rows, prefill them
             # as one batch, scatter back — cache leaves are (repeat, B, ...),
-            # batch on axis 1
+            # batch on axis 1. `aix` is already row-gathered on the host.
             sub = jax.tree.map(lambda a: a[:, rows], caches)
-            logits, sub = lm_prefill(params_, toks, cfg, caches=sub,
+            logits, sub = lm_prefill(_merged(params_, banks, aix), toks,
+                                     cfg, caches=sub,
                                      valid_len=valid_len, last_only=True)
             new = jax.tree.map(lambda g, l: g.at[:, rows].set(l), caches, sub)
             first = sample_tokens(logits[:, 0], temp, tk, tp, seeds,
                                   jnp.zeros_like(seeds, jnp.int32))
             return first, new
 
-        def _prefill_chunk(params_, toks, caches, offset, valid_len, table,
-                           temp, tk, tp, seeds):
+        def _prefill_chunk(params_, banks, aix, toks, caches, offset,
+                           valid_len, table, temp, tk, tp, seeds):
             # paged chunk prefill: one (1, chunk) executable for EVERY
             # prompt; the pool rides whole (pages are disjoint by
             # construction) and the chunk writes through this slot's table
-            logits, caches = lm_prefill(params_, toks, cfg, caches=caches,
+            logits, caches = lm_prefill(_merged(params_, banks, aix), toks,
+                                        cfg, caches=caches,
                                         pos=offset, valid_len=valid_len,
                                         last_only=True, page_table=table)
             first = sample_tokens(logits[:, 0], temp, tk, tp, seeds,
@@ -322,13 +371,18 @@ class ServeEngine:
         # donate the cache pytree: the engine rebinds self.caches on every
         # call and never touches the old buffers, so XLA can update KV/SSM
         # state in place instead of copying the whole cache per token.
-        # (CPU ignores donation with a warning — skip it there.)
-        donate = () if jax.default_backend() == "cpu" else (2,)
+        # (CPU ignores donation with a warning — skip it there.) The
+        # adapter-aware steps carry caches at arg 4 (after banks + aix —
+        # banks are NOT donated, they persist across calls); the spec
+        # steps keep the original signature, caches at arg 2.
+        cpu = jax.default_backend() == "cpu"
+        donate = () if cpu else (4,)
+        donate_spec = () if cpu else (2,)
         self._decode = jax.jit(_decode, donate_argnums=donate)
         self._prefill = jax.jit(_prefill, donate_argnums=donate)
         self._prefill_chunk = jax.jit(_prefill_chunk, donate_argnums=donate)
-        self._draft_step = jax.jit(_draft_step, donate_argnums=donate)
-        self._verify = jax.jit(_verify, donate_argnums=donate)
+        self._draft_step = jax.jit(_draft_step, donate_argnums=donate_spec)
+        self._verify = jax.jit(_verify, donate_argnums=donate_spec)
 
     @classmethod
     def from_checkpoint(cls, ckpt_dir: str, step: int | None = None,
@@ -351,16 +405,27 @@ class ServeEngine:
 
     def submit(self, prompt: Sequence[int], max_new: int | None = None,
                eos_id: int | None = None, *,
-               sampling: SamplingParams | None = None) -> GenerationHandle:
+               sampling: SamplingParams | None = None,
+               tenant: str | None = None) -> GenerationHandle:
         """Queue a generation; returns its :class:`GenerationHandle`.
 
         ``sampling`` carries the full per-request contract (temperature /
         top-k / top-p / seed / max_new / eos / deadline / priority); the
         positional ``max_new`` / ``eos_id`` override it for the legacy
         call shape. Default is greedy decoding, token-for-token identical
-        to the pre-redesign engine."""
+        to the pre-redesign engine. ``tenant`` routes the request through
+        that tenant's adapter delta (engine built with ``adapters=``);
+        ``None`` serves the bare base via the identity bank row."""
         sp = (sampling or SamplingParams()).resolved(
             self._rid, max_new=max_new, eos_id=eos_id)
+        if tenant is not None:
+            if self.adapters is None:
+                raise ValueError(
+                    "engine has no adapter banks; build it with "
+                    "adapters=<ResidentAdapters or store dir>")
+            if not self.adapters.store.has(tenant):
+                raise ValueError(f"unknown tenant {tenant!r}: no adapter "
+                                 f"in store {self.adapters.store.root!r}")
         if len(prompt) + sp.max_new > self.max_cache:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new ({sp.max_new}) exceeds "
@@ -375,7 +440,8 @@ class ServeEngine:
                     f"{self.pool.usable_pages} usable (total_pages too "
                     "small for this prompt + max_new)")
         req = Request(rid=self._rid, prompt=list(map(int, prompt)),
-                      sampling=sp, submitted_at=time.perf_counter())
+                      sampling=sp, tenant=tenant,
+                      submitted_at=time.perf_counter())
         self._rid += 1
         self.sched.add(req)
         return GenerationHandle(self, req)
@@ -442,6 +508,37 @@ class ServeEngine:
 
     # -- internals ----------------------------------------------------------
 
+    def _adapter_evicted(self, tenant: str) -> None:
+        """Resident-bank LRU displacement -> the existing EVICTED event
+        machinery (rid -1: no single request owns a bank row)."""
+        self.adapter_events.append(Event(
+            EventKind.EVICTED, rid=-1,
+            reason=f"adapter lru tenant={tenant}", t=time.perf_counter()))
+        self.stats["adapter_evictions"] += 1
+
+    def _acquire_adapter(self, req: Request,
+                         admitted: list) -> int | None:
+        """Bank row for this request's tenant (0 = identity). Rows held by
+        slots still generating — and by requests admitted earlier this
+        same round, whose slots aren't populated yet (dense prefills in
+        one batch after the pop loop) — are pinned against eviction.
+        ``None`` = every row pinned; caller defers the request."""
+        if self.adapters is None or req.tenant is None:
+            return 0
+        pinned = {int(self.adapter_ix[s]) for s, r in enumerate(self.slots)
+                  if r is not None}
+        pinned.update(int(self.adapter_ix[s]) for s, _ in admitted)
+        pinned.discard(0)
+        return self.adapters.acquire(req.tenant, pinned)
+
+    def _adapter_args(self, rows=None):
+        """(banks, aix) for a jitted step — (None, None) on a no-adapter
+        engine so it traces the exact pre-tenancy computation."""
+        if self.adapters is None:
+            return None, None
+        ix = self.adapter_ix if rows is None else self.adapter_ix[rows]
+        return self.adapters.banks, jnp.asarray(ix)
+
     def _free_slot(self, slot: int) -> None:
         """Recycle a slot AND reset its sampling row to greedy defaults —
         a stale temperature on a dead row would keep ``jnp.any(temp > 0)``
@@ -450,6 +547,7 @@ class ServeEngine:
         row at the trash page, so the dead row's lockstep writes can never
         land in a page the pool hands to someone else."""
         self.slots[slot] = None
+        self.adapter_ix[slot] = 0     # unpin the tenant's bank row
         self.temp[slot] = 0.0
         self.top_k[slot] = 0
         self.top_p[slot] = 1.0
@@ -523,7 +621,14 @@ class ServeEngine:
                 break
             if req.terminal:      # e.g. evicted-from-queue by a scheduler
                 continue          # that didn't also dequeue it
-            admitted.append((free.pop(0), req))
+            row = self._acquire_adapter(req, admitted)
+            if row is None:
+                self.sched.add(req)       # every bank row pinned: wait
+                self.stats["deferred"] += 1
+                break
+            slot = free.pop(0)
+            self.adapter_ix[slot] = row
+            admitted.append((slot, req))
         # group by bucket so same-shape prompts prefill as one batch
         groups: dict[int, list[tuple[int, Request]]] = collections.defaultdict(list)
         for slot, req in admitted:
@@ -536,8 +641,9 @@ class ServeEngine:
             for i, (slot, req) in enumerate(group):
                 toks[i, :len(req.prompt)] = req.prompt
                 self._set_sampling_row(slot, req)
+            banks, aix = self._adapter_args(rows)
             first, self.caches = self._prefill(
-                self.params, jnp.asarray(toks), self.caches,
+                self.params, banks, aix, jnp.asarray(toks), self.caches,
                 jnp.asarray(vlen), jnp.asarray(rows),
                 jnp.asarray(self.temp[rows]), jnp.asarray(self.top_k[rows]),
                 jnp.asarray(self.top_p[rows]), jnp.asarray(self.seed[rows]))
@@ -572,6 +678,13 @@ class ServeEngine:
                 break
             if req.terminal:
                 continue
+            # paged admission populates self.slots inside the loop, so
+            # active-slot pinning already covers this round's admissions
+            row = self._acquire_adapter(req, [])
+            if row is None:
+                self.sched.add(req)        # every bank row pinned: wait
+                self.stats["deferred"] += 1
+                break
             prompt = req.prompt
             pg = self.page_size
             need = pages_needed(len(prompt) + req.sampling.max_new, pg)
@@ -579,7 +692,10 @@ class ServeEngine:
             if self.radix is not None:
                 # cap shared pages so at least ONE prompt token is left to
                 # prefill — the final chunk must produce next-token logits
-                shared = self.radix.match(prompt)[:(len(prompt) - 1) // pg]
+                # tenant-namespaced: a prefix prefilled under one adapter
+                # is NOT the same KV under another (or under the bare base)
+                shared = self.radix.match(
+                    prompt, namespace=req.tenant)[:(len(prompt) - 1) // pg]
                 for p in shared:       # protect from our own eviction below
                     self.pool.ref(p)
             fresh = need - len(shared)
@@ -593,6 +709,7 @@ class ServeEngine:
                 self.stats["deferred"] += 1
                 break
             slot = free.pop(0)
+            self.adapter_ix[slot] = row
             pages = shared + alloc
             self.tables[slot, :] = 0
             self.tables[slot, :len(pages)] = pages
@@ -640,8 +757,9 @@ class ServeEngine:
             n_hist = min(self.pages_per_slot,
                          1 << (pages_needed(end, self.page_size) - 1)
                          .bit_length())
+            banks, aix = self._adapter_args([slot])
             first, self.caches = self._prefill_chunk(
-                self.params, jnp.asarray(toks), self.caches,
+                self.params, banks, aix, jnp.asarray(toks), self.caches,
                 jnp.asarray([cur], np.int32),
                 jnp.asarray([end - cur], np.int32),
                 jnp.asarray(self.tables[slot:slot + 1, :n_hist]),
@@ -660,7 +778,8 @@ class ServeEngine:
             if self.radix is not None:
                 n_full = len(req.prompt) // self.page_size
                 self.radix.insert(req.prompt,
-                                  self.slot_pages[slot][:n_full])
+                                  self.slot_pages[slot][:n_full],
+                                  namespace=req.tenant)
             now = time.perf_counter()
             self._emit_token(req, int(np.asarray(first)[0]), now)
             self.pos[slot] = len(req.prompt)
@@ -686,8 +805,9 @@ class ServeEngine:
             table = jnp.asarray(tbl)
         else:
             table = None
+        banks, aix = self._adapter_args()
         nxt, self.caches = self._decode(
-            self.params, jnp.asarray(self.next_tok[:, None]),
+            self.params, banks, aix, jnp.asarray(self.next_tok[:, None]),
             self.caches, jnp.asarray(self.pos), table,
             jnp.asarray(self.temp), jnp.asarray(self.top_k),
             jnp.asarray(self.top_p), jnp.asarray(self.seed),
@@ -905,6 +1025,15 @@ class ServeEngine:
             s["pages_in_use"] = self.pool.pages_in_use
             s["prefix_cache_pages"] = (self.radix.n_nodes
                                        if self.radix is not None else 0)
+        if self.adapters is not None:
+            # base-vs-adapter accounting split (utils/memprof.py):
+            # weight_bytes above is the RESIDENT BASE; the banks are the
+            # only per-tenant device cost, store bytes the per-tenant
+            # disk cost
+            t = self.adapters.summary()
+            t["bytes_by_tenant"] = self.adapters.store.bytes_by_tenant()
+            s["tenancy"] = t
+            s["adapter_bank_bytes"] = t["bank_bytes"]
         if self.spec_k:
             s["spec_k"] = self.spec_k
             s["draft_source"] = self.draft_source

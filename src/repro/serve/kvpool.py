@@ -148,6 +148,13 @@ class RadixCache:
     eviction (LRU over unreferenced leaves) is the only way the tree lets
     go of a page, which keeps "who owns this page" a pure refcount
     question the fuzz harness can audit.
+
+    ``namespace`` partitions the tree: the KV of a token span is only
+    reusable under the SAME model weights, and tenant adapters
+    (repro/tenancy/) make weights per-request state — a prefix prefilled
+    under tenant A's adapter must never attach to tenant B's request.
+    Namespace nodes are pageless interior markers (page = TRASH_PAGE):
+    never ref'd, never evicted, invisible to ``held_pages``.
     """
 
     def __init__(self, pool: PagePool):
@@ -162,11 +169,22 @@ class RadixCache:
         for i in range(len(tokens) // pg):
             yield tuple(tokens[i * pg:(i + 1) * pg])
 
-    def match(self, tokens: Sequence[int]) -> list[int]:
-        """Pages of the longest cached full-page prefix of ``tokens``.
-        Touches every matched node (LRU freshness). The caller must
-        ``pool.ref`` each page it actually attaches."""
-        node, pages = self.root, []
+    def _ns_root(self, namespace) -> _Node:
+        if namespace is None:
+            return self.root
+        # key shape can't collide with a span (a tuple of ints)
+        key = ("\x00ns", namespace)
+        child = self.root.children.get(key)
+        if child is None:                   # pageless marker, not counted
+            child = self.root.children[key] = _Node()
+        return child
+
+    def match(self, tokens: Sequence[int], *,
+              namespace=None) -> list[int]:
+        """Pages of the longest cached full-page prefix of ``tokens``
+        within ``namespace``. Touches every matched node (LRU freshness).
+        The caller must ``pool.ref`` each page it actually attaches."""
+        node, pages = self._ns_root(namespace), []
         now = next(self._clock)
         for span in self._spans(tokens):
             child = node.children.get(span)
@@ -177,14 +195,15 @@ class RadixCache:
             node = child
         return pages
 
-    def insert(self, tokens: Sequence[int], pages: Sequence[int]) -> int:
+    def insert(self, tokens: Sequence[int], pages: Sequence[int], *,
+               namespace=None) -> int:
         """Publish a prefilled prompt's full pages; ``pages[i]`` holds the
         KV of tokens ``[i*pg, (i+1)*pg)``. Spans already in the tree keep
         their existing page (first writer wins — both copies hold bitwise
         identical KV, and the caller's copy dies with its request); new
         nodes take a tree-owned reference on the caller's page. Returns
         the number of pages newly published."""
-        node, created = self.root, 0
+        node, created = self._ns_root(namespace), 0
         now = next(self._clock)
         for span, page in zip(self._spans(tokens), pages):
             child = node.children.get(span)
@@ -217,7 +236,8 @@ class RadixCache:
         freed = 0
         while freed < n_pages:
             evictable = [(n.last_used, n, p, k) for n, p, k in self._leaves()
-                         if self.pool.refs[n.page] == 1]
+                         if n.page != TRASH_PAGE        # namespace markers
+                         and self.pool.refs[n.page] == 1]
             if not evictable:
                 break
             # one eviction per pass: dropping a leaf exposes its parent,
@@ -237,7 +257,7 @@ class RadixCache:
             nonlocal released
             for c in node.children.values():
                 walk(c)
-            if node is not self.root:
+            if node is not self.root and node.page != TRASH_PAGE:
                 self.pool.unref(node.page)
                 released += 1
 
@@ -252,7 +272,8 @@ class RadixCache:
 
         def walk(node):
             for c in node.children.values():
-                out.append(c.page)
+                if c.page != TRASH_PAGE:
+                    out.append(c.page)
                 walk(c)
 
         walk(self.root)

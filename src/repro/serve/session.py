@@ -47,6 +47,9 @@ class Request:
     rid: int
     prompt: list[int]
     sampling: SamplingParams
+    # tenant id routing this request through its adapter delta
+    # (repro/tenancy/); None = bare base via the identity bank row
+    tenant: str | None = None
     generated: list[int] = dataclasses.field(default_factory=list)
     events: list[Event] = dataclasses.field(default_factory=list)
     # speculative decoding: per-spec-step accepted draft-token counts

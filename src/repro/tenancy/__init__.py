@@ -1,0 +1,36 @@
+"""Multi-tenant subspace adapters (ROADMAP open item 2).
+
+One resident base, thousands of per-user rank-K_a deltas: train them
+frozen-base (:mod:`repro.tenancy.finetune`), register them
+content-addressed on disk (:mod:`repro.tenancy.store`), and hot-swap them
+through a device-resident LRU bank (:mod:`repro.tenancy.resident`) that
+the serve engine gathers per slot — one jitted executable for any tenant
+mix. Tree plumbing lives in :mod:`repro.tenancy.adapter`.
+
+``resident`` is imported lazily: it is serve-facing, and the serve engine
+itself imports :mod:`repro.tenancy.adapter` — an eager import here would
+close the cycle.
+"""
+from __future__ import annotations
+
+from repro.tenancy import adapter, finetune, store
+from repro.tenancy.adapter import (adapter_site_ranks, gather_rows,
+                                   init_adapters, merge_adapters,
+                                   stack_adapters, zero_adapters)
+from repro.tenancy.finetune import (adapter_loss_fn, eval_ce,
+                                    finetune_adapters)
+from repro.tenancy.store import AdapterStore, plan_sha
+
+__all__ = [
+    "AdapterStore", "ResidentAdapters", "adapter", "adapter_loss_fn",
+    "adapter_site_ranks", "eval_ce", "finetune", "finetune_adapters",
+    "gather_rows", "init_adapters", "merge_adapters", "plan_sha",
+    "resident", "stack_adapters", "store", "zero_adapters",
+]
+
+
+def __getattr__(name):
+    if name in ("resident", "ResidentAdapters"):
+        from repro.tenancy import resident
+        return resident if name == "resident" else resident.ResidentAdapters
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,177 @@
+"""Per-tenant adapter trees: init, merge, stack, gather.
+
+An *adapter tree* mirrors a model's param tree but carries only the
+additive delta pairs of the plan's adapter-stamped sites
+(``SubspacePlan.with_adapter``): each stamped linear dict maps to
+``{"La": (*stack, O, K_a), "Ra": (*stack, K_a, I)}`` with the same leading
+stack dims as the base weights (scan repeats ride through ``lax.scan``
+unchanged). Everything else is a structural placeholder, so a merge is a
+lockstep walk — never a key-pattern rename.
+
+Layout lifecycle (repro/tenancy/):
+
+* TRAIN — ``init_adapters`` (La = 0 so the initial delta is exactly the
+  base forward, the LoRA convention), ``merge_adapters`` inside the loss,
+  only the adapter tree is differentiated (finetune.py).
+* SERVE — ``stack_adapters`` piles T tenants' trees into banks with the
+  tenant axis at ``ndim - 3`` (after the scan-stack dims, before (O, K_a));
+  row 0 is the all-zeros identity for adapter-less slots. The engine's
+  jitted step calls ``gather_rows`` with the per-slot int32 index vector,
+  so swapping a tenant changes array CONTENTS, never shapes — one compiled
+  executable serves any tenant mix.
+
+The delta application itself is ``api.bind.adapter_delta`` (dispatch by
+key stays bind's monopoly); this module only builds/walks the trees, keyed
+by the same ``LEAF_TO_SPEC`` convert.py walks with.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.bind import is_linear_params, linear_dims
+from repro.api.plan import LEAF_TO_SPEC, SubspacePlan
+
+
+def _walk_sites(tree, plan: SubspacePlan, fn):
+    """Build a PARALLEL tree: ``fn(spec, linear_dict)`` at every
+    adapter-stamped site (-> its adapter node), structural placeholders
+    ({} / same-length lists) everywhere else, so the result zips against
+    the param tree leaf-for-leaf in ``merge_adapters``."""
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for key, v in node.items():
+                if key in LEAF_TO_SPEC and is_linear_params(v):
+                    name, role = LEAF_TO_SPEC[key]
+                    o, i = linear_dims(v)
+                    spec = plan.linear(name, i, o, role=role)
+                    if spec.adapter:
+                        out[key] = fn(spec, v)
+                else:
+                    out[key] = walk(v)
+            return out
+        if isinstance(node, (list, tuple)):
+            t = [walk(v) for v in node]
+            return t if isinstance(node, list) else tuple(t)
+        return {}
+
+    return walk(tree)
+
+
+def init_adapters(key, params, plan: SubspacePlan, *, dtype=jnp.float32,
+                  ra_scale: float = 0.02):
+    """Fresh adapter tree for ``params`` under an adapter-stamped plan.
+
+    La is ZEROS and Ra small random, so the initial delta is exactly zero
+    (fine-tuning starts bitwise at the frozen base) while the first
+    gradient step still flows: d/dLa of the delta is (Ra x)-shaped and
+    nonzero. Leading stack dims copy the base leaf's."""
+    if not plan.has_adapters:
+        raise ValueError("plan carries no adapter stamps; call "
+                         "plan.with_adapter(rank_frac) first")
+    sites = []
+
+    def shape_one(spec, p):
+        leaf = p["L"] if "L" in p else p["w"]
+        stack = tuple(leaf.shape[:-2])
+        sites.append((spec, stack))
+        return {"La": None, "Ra": None}     # placeholder, filled below
+
+    skeleton = _walk_sites(params, plan, shape_one)
+    keys = jax.random.split(key, max(len(sites), 1))
+    filled = iter(zip(sites, keys))
+
+    def fill(node):
+        if isinstance(node, dict):
+            if "La" in node:
+                (spec, stack), k = next(filled)
+                ka = spec.adapter
+                return {"La": jnp.zeros(stack + (spec.out_dim, ka), dtype),
+                        "Ra": (jax.random.normal(
+                            k, stack + (ka, spec.in_dim), jnp.float32)
+                            * ra_scale).astype(dtype)}
+            return {k2: fill(v) for k2, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [fill(v) for v in node]
+            return t if isinstance(node, list) else tuple(t)
+        return node
+
+    return fill(skeleton)
+
+
+def zero_adapters(params, plan: SubspacePlan, *, dtype=jnp.float32):
+    """All-zeros adapter tree (the identity delta) — the bank template and
+    the ``adapter_id=None`` row."""
+    def one(spec, p):
+        leaf = p["L"] if "L" in p else p["w"]
+        stack = tuple(leaf.shape[:-2])
+        return {"La": jnp.zeros(stack + (spec.out_dim, spec.adapter), dtype),
+                "Ra": jnp.zeros(stack + (spec.adapter, spec.in_dim), dtype)}
+
+    return _walk_sites(params, plan, one)
+
+
+def merge_adapters(params, adapters):
+    """Inject each site's adapter pair next to its base weights, so
+    ``bind.apply`` adds the delta. Works on single-tenant trees (leaves
+    (*stack, O, K_a)) and on gathered per-slot bank rows (leaves
+    (*stack, B, O, K_a)) alike — traceable, runs inside jit."""
+    def walk(p, a):
+        if not isinstance(a, (dict, list, tuple)) or not a:
+            return p
+        if isinstance(p, dict):
+            if is_linear_params(p) and isinstance(a, dict) and "La" in a:
+                out = dict(p)
+                out.update(a)
+                return out
+            return {k: walk(v, a.get(k) if isinstance(a, dict) else None)
+                    for k, v in p.items()}
+        if isinstance(p, (list, tuple)):
+            t = [walk(v, a[i] if i < len(a) else None)
+                 for i, v in enumerate(p)]
+            return t if isinstance(p, list) else tuple(t)
+        return p
+
+    return walk(params, adapters)
+
+
+def stack_adapters(trees):
+    """Pile per-tenant adapter trees (identical structure) into banks:
+    every leaf gains a tenant axis at position ``ndim - 2`` of the input
+    leaf — i.e. AFTER the scan-stack dims, BEFORE the (O, K_a) / (K_a, I)
+    pair — so banks ride through the group scan untouched and
+    ``gather_rows`` can always address the tenant axis as ``ndim - 3``."""
+    if not trees:
+        raise ValueError("stack_adapters needs at least one tree")
+    return jax.tree.map(lambda *ls: jnp.stack(ls, axis=ls[0].ndim - 2),
+                        *trees)
+
+
+def gather_rows(banks, ix):
+    """Per-slot bank selection: ``ix`` (B,) int32 tenant-row indices ->
+    a tree of (*stack, B, O, K_a) leaves, one tenant's factors per batch
+    row. Pure gather — runs inside the jitted serve step, so tenant churn
+    changes only the CONTENTS of ``banks``, never any shape."""
+    return jax.tree.map(lambda b: jnp.take(b, ix, axis=b.ndim - 3), banks)
+
+
+def set_bank_row(banks, row: int, tree):
+    """Upload one tenant's adapter tree into bank row ``row`` (device-side
+    functional update; shapes never change, so no retrace downstream)."""
+    return jax.tree.map(
+        lambda b, h: b.at[..., row, :, :].set(jnp.asarray(h, b.dtype)),
+        banks, tree)
+
+
+def make_banks(template, capacity: int):
+    """Zero banks holding ``capacity`` tenants PLUS the identity row 0,
+    shaped from a single-tenant ``template`` adapter tree."""
+    return jax.tree.map(
+        lambda h: jnp.zeros(h.shape[:-2] + (capacity + 1,) + h.shape[-2:],
+                            jnp.float32), template)
+
+
+def adapter_site_ranks(plan: SubspacePlan) -> dict[str, int]:
+    """{site name: K_a} for every adapter-stamped site of the plan."""
+    return {s.name: s.adapter for s in plan.specs if s.adapter}

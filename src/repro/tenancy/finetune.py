@@ -1,0 +1,93 @@
+"""Freeze-base adapter fine-tuning: train ONLY the per-site delta factors.
+
+The paper's subspace claim makes per-user personalization nearly free: a
+fine-tune is a rank-K_a pair per site (a few hundred KB), not a model
+copy. The mechanism here is gradient masking by construction — the base
+params are a closed-over constant of the loss and the differentiated
+pytree IS the adapter tree, so ``jax.value_and_grad`` can only produce
+adapter gradients and the optimizer state is adapter-sized too. The whole
+thing runs through the unmodified ``train/step.py`` machinery (clip,
+schedule, optimizer, factored-refresh cond — which no-ops on adapter
+trees, their dicts carry no {L,R} pair).
+
+``finetune_adapters(base, plan, data, ...)`` is the library entry;
+``launch/finetune_user.py`` is the CLI that closes the loop from a
+checkpointed base into an ``AdapterStore``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+from repro.models.lm import lm_loss
+from repro.optim import init_optimizer
+from repro.tenancy.adapter import init_adapters, merge_adapters
+from repro.train.step import TrainState, make_train_step
+
+#: small-model SGD recipe that moves a rank-K adapter in tens of steps
+DEFAULT_TCFG = TrainConfig(optimizer="sgd", lr=0.3, momentum=0.9,
+                           weight_decay=0.0, schedule="constant",
+                           warmup=0, clip_norm=2.0)
+
+
+def adapter_loss_fn(base_params, loss_fn=lm_loss):
+    """A ``train/step.py``-shaped loss over the ADAPTER tree only: merges
+    the frozen base in before the forward. Differentiating it w.r.t. its
+    first argument touches exactly the (La, Ra) leaves — the base cannot
+    receive a gradient because it is not an input."""
+    frozen = jax.lax.stop_gradient(base_params)
+
+    def fn(adapters, batch, cfg, *, states=None, policy=None):
+        return loss_fn(merge_adapters(frozen, adapters), batch, cfg,
+                       states=states, policy=policy)
+
+    return fn
+
+
+def finetune_adapters(base_params, plan, data, *, steps: int = 40,
+                      tcfg: TrainConfig | None = None, seed: int = 0,
+                      batch_size: int | None = None, adapters=None,
+                      log_every: int = 0):
+    """Train a fresh (or resumed) adapter tree against a frozen base.
+
+    ``plan`` must be adapter-stamped (``plan.with_adapter``) and NOT
+    quantized — deltas train in f32 against the f32 master; quantize the
+    artifact at store time instead. Returns (adapters, last_metrics)."""
+    if plan.is_quantized:
+        raise ValueError("fine-tune against the f32 master, not an int8 "
+                         "deployment view (store the adapter int8 instead)")
+    # checkpoint restores hand back numpy leaves; as closed-over constants
+    # of the jitted step they must be device arrays (numpy[tracer] throws)
+    base_params = jax.tree.map(jnp.asarray, base_params)
+    cfg = plan.model
+    tcfg = tcfg or dataclasses.replace(DEFAULT_TCFG, steps=steps)
+    key = jax.random.PRNGKey(seed)
+    if adapters is None:
+        adapters = init_adapters(key, base_params, plan)
+    # hand-built TrainState: no ASI/WSI/PowerSGD state belongs to a delta
+    state = TrainState(params=adapters, opt=init_optimizer(adapters, tcfg),
+                       asi=None, wsi=None, psgd=None,
+                       step=jnp.zeros((), jnp.int32))
+    step = jax.jit(make_train_step(adapter_loss_fn(base_params), cfg, tcfg))
+    metrics = {}
+    for i in range(steps):
+        state, metrics = step(state, data.batch(i, batch_size))
+        if log_every and (i + 1) % log_every == 0:
+            print(f"[finetune] step {i + 1}/{steps} "
+                  f"ce={float(metrics['ce']):.4f}")
+    return state.params, {k: float(v) for k, v in metrics.items()}
+
+
+def eval_ce(params, cfg, data, *, steps: int = 4,
+            batch_size: int | None = None, start_step: int = 10_000) -> float:
+    """Mean CE of ``params`` (merged or base) on held-out batches of
+    ``data`` — held out by step offset, since batches are a pure function
+    of (seed, step)."""
+    loss = jax.jit(lambda p, b: lm_loss(p, b, cfg)[1][1]["ce"])
+    params = jax.tree.map(jnp.asarray, params)
+    vals = [float(loss(params, data.batch(start_step + i, batch_size)))
+            for i in range(steps)]
+    return sum(vals) / len(vals)

@@ -1,0 +1,140 @@
+"""Device-resident LRU of tenant adapter banks for mixed-tenant serving.
+
+The banks are ONE pytree whose leaves carry a tenant axis of fixed size
+``capacity + 1`` (row 0 is the all-zeros identity for adapter-less slots).
+The serve engine passes the banks plus a per-slot int32 row index into its
+jitted step, which gathers each slot's factors (``adapter.gather_rows``)
+— so admitting a new tenant is a host-side ``AdapterStore.load`` plus a
+``set_bank_row`` in-place-shaped update. Array CONTENTS change; no shape,
+dtype, or structure ever does; the compiled executable is reused across
+arbitrary tenant churn.
+
+Eviction policy is LRU over rows 1..capacity with PINNING: the engine
+pins the rows of every slot still generating, so a tenant mid-decode can
+never have its factors swapped out from under it. ``acquire`` returns
+``None`` when every row is pinned — the engine defers that request to the
+next admission tick instead of blocking.
+
+Construction is EAGER: the banks are built (and their jit-visible
+structure fixed) from the store's first adapter at ``__init__`` — the
+engine's traced signature never flips None -> tree at runtime.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.tenancy.adapter import make_banks, set_bank_row
+from repro.tenancy.store import AdapterStore
+
+
+class ResidentAdapters:
+    """LRU cache of ``capacity`` tenant adapter rows on device.
+
+    ``on_evict(tenant)`` fires when a resident tenant is displaced — the
+    engine routes it into its EVICTED event machinery.
+    """
+
+    def __init__(self, store: AdapterStore | str, capacity: int = 4, *,
+                 on_evict: Callable[[str], None] | None = None):
+        self.store = AdapterStore(store) if isinstance(store, str) else store
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1: {capacity}")
+        names = self.store.tenants()
+        if not names:
+            raise ValueError(f"adapter store {self.store.root!r} is empty — "
+                             "banks need at least one adapter for shapes")
+        self.capacity = int(capacity)
+        self.on_evict = on_evict
+        template, meta = self.store.load(names[0])
+        self.plan_sha: str = meta["plan_sha"]
+        self.plan_json: dict = meta["plan"]
+        self.banks = make_banks(template, self.capacity)
+        self._zero_row = jax.tree.map(jnp.zeros_like, template)
+        self.row_of: dict[str, int] = {}      # tenant -> row (1-based)
+        self.tenant_of: dict[int, str] = {}   # row -> tenant
+        self._last_used: dict[int, int] = {}  # row -> tick
+        self._tick = 0
+        self.hits = 0
+        self.swaps = 0
+        self.evictions = 0
+
+    # -- queries ----------------------------------------------------------
+    def resident(self) -> list[str]:
+        return [self.tenant_of[r] for r in sorted(self.tenant_of)]
+
+    def bank_bytes(self) -> int:
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(self.banks))
+
+    def tenant_bytes(self, tenant: str) -> int:
+        return int(self.store.meta(tenant)["bytes"])
+
+    # -- the one mutating entry point -------------------------------------
+    def acquire(self, tenant: str, pinned: set[int] = frozenset()) -> int | None:
+        """Row index for ``tenant``, loading + evicting as needed.
+
+        ``pinned`` rows (slots still generating) are never evicted. Returns
+        ``None`` when the tenant is not resident and every row is pinned —
+        caller should defer. Raises KeyError/FileNotFoundError for a tenant
+        the store has never seen (caller validates at submit time)."""
+        self._tick += 1
+        row = self.row_of.get(tenant)
+        if row is not None:
+            self.hits += 1
+            self._last_used[row] = self._tick
+            return row
+        row = self._victim(pinned)
+        if row is None:
+            return None
+        old = self.tenant_of.pop(row, None)
+        if old is not None:
+            del self.row_of[old]
+            self.evictions += 1
+            if self.on_evict is not None:
+                self.on_evict(old)
+        tree, meta = self.store.load(tenant, expect_plan_sha=self.plan_sha)
+        self.banks = set_bank_row(self.banks, row, tree)
+        self.row_of[tenant] = row
+        self.tenant_of[row] = tenant
+        self._last_used[row] = self._tick
+        self.swaps += 1
+        return row
+
+    def _victim(self, pinned: set[int]) -> int | None:
+        for row in range(1, self.capacity + 1):      # free row first
+            if row not in self.tenant_of and row not in pinned:
+                return row
+        lru = [r for r in self.tenant_of if r not in pinned]
+        if not lru:
+            return None
+        return min(lru, key=lambda r: self._last_used.get(r, 0))
+
+    def release_row(self, row: int) -> None:
+        """Optional hygiene when a tenant's last slot retires: the row
+        stays resident (it may be reused — that's the cache), but its
+        recency is left alone. Zeroing is NOT needed for correctness (row
+        0 handles adapter-less slots); method kept for symmetry/tests."""
+
+    def drop(self, tenant: str) -> None:
+        """Forcibly forget a tenant (tests / admin). Zeroes its row so a
+        stale gather can never read its factors."""
+        row = self.row_of.pop(tenant, None)
+        if row is None:
+            return
+        del self.tenant_of[row]
+        self._last_used.pop(row, None)
+        self.banks = set_bank_row(self.banks, row, self._zero_row)
+
+    def summary(self) -> dict:
+        return {
+            "capacity": self.capacity,
+            "resident": self.resident(),
+            "bank_bytes": self.bank_bytes(),
+            "store_tenants": len(self.store.tenants()),
+            "hits": self.hits,
+            "swaps": self.swaps,
+            "evictions": self.evictions,
+        }

@@ -1,0 +1,218 @@
+"""Content-addressed on-disk registry of plan-stamped tenant adapters.
+
+Layout:
+
+    <root>/objects/<sha256>.npz      leaf payload (leaf_0 .. leaf_N)
+    <root>/tenants/<tenant>.json     pointer + metadata
+
+The object name is a sha256 over the tree spec AND every leaf's
+dtype/shape/raw bytes — NOT over the npz file (zip timestamps would make
+that non-deterministic) — so identical adapter trees dedupe to one object
+no matter how many tenants point at them, and a pointer file can be
+re-targeted atomically.
+
+Formats: ``"f32"`` stores the training dtype verbatim; ``"int8"`` packs
+each (La, Ra) pair per-channel symmetric via ``quant/quantize.py``'s
+``quantize_tensor`` (scales ride next to the payload as sLa/sRa, mirroring
+the base-weight sL/sR convention without touching ``SCALE_KEY`` — adapter
+storage is NOT a serve-time layout, ``load`` always hands back f32).
+
+Metadata pins the adapter-stamped plan (full JSON + sha) and per-site
+ranks, so a serving process can refuse an adapter trained under a
+different plan before any shape error gets a chance to be cryptic. Byte
+accounting is memprof-convention: exact nbytes of what is on disk.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import _build_from_spec, _tree_spec
+from repro.quant.quantize import dequantize_tensor, quantize_tensor
+from repro.tenancy.adapter import adapter_site_ranks
+
+#: adapter weight leaf key -> its scale key (int8 storage packing only;
+#: deliberately disjoint from quantize.SCALE_KEY — bind never sees these)
+ADAPTER_SCALE_KEY = {"La": "sLa", "Ra": "sRa"}
+
+_TENANT_RE = re.compile(r"^[A-Za-z0-9._-]{1,64}$")
+
+FORMATS = ("f32", "int8")
+
+
+def _check_tenant(tenant: str) -> str:
+    if not _TENANT_RE.match(tenant or ""):
+        raise ValueError(f"bad tenant id {tenant!r} (want [A-Za-z0-9._-], "
+                         "1-64 chars — it names a file)")
+    return tenant
+
+
+def pack_int8(adapters):
+    """Adapter tree -> int8 storage tree: every {"La","Ra"} site becomes
+    {"La" int8, "sLa" f32, "Ra" int8, "sRa" f32} (per-channel absmax over
+    the contraction axis, exactly the base-weight scheme)."""
+    def walk(node):
+        if isinstance(node, dict):
+            if "La" in node:
+                out = {}
+                for k, v in node.items():
+                    if k in ADAPTER_SCALE_KEY:
+                        out[k], out[ADAPTER_SCALE_KEY[k]] = quantize_tensor(v)
+                    else:
+                        out[k] = v
+                return out
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [walk(v) for v in node]
+            return t if isinstance(node, list) else tuple(t)
+        return node
+
+    return walk(adapters)
+
+
+def unpack_int8(stored):
+    """Inverse of :func:`pack_int8` — back to the f32 adapter layout the
+    resident banks and ``merge_adapters`` expect."""
+    def walk(node):
+        if isinstance(node, dict):
+            if "sLa" in node:
+                return {k: dequantize_tensor(v, node[ADAPTER_SCALE_KEY[k]])
+                        for k, v in node.items() if k in ADAPTER_SCALE_KEY}
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [walk(v) for v in node]
+            return t if isinstance(node, list) else tuple(t)
+        return node
+
+    return walk(stored)
+
+
+def _flatten(tree):
+    leaves = [np.asarray(jax.device_get(x)) for x in jax.tree.leaves(tree)]
+    counter = [0]
+    spec = _tree_spec(tree, counter)
+    if spec is None or counter[0] != len(leaves):
+        raise ValueError("adapter tree is not spec-serializable")
+    return leaves, spec
+
+
+def _content_sha(leaves, spec) -> str:
+    h = hashlib.sha256()
+    h.update(json.dumps(spec, sort_keys=True).encode())
+    for leaf in leaves:
+        h.update(f"{leaf.dtype}{leaf.shape}".encode())
+        h.update(np.ascontiguousarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+def plan_sha(plan) -> str:
+    return hashlib.sha256(
+        json.dumps(plan.to_json(), sort_keys=True).encode()).hexdigest()
+
+
+class AdapterStore:
+    """save/load/list plan-stamped adapter trees, content-addressed."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(os.path.join(root, "objects"), exist_ok=True)
+        os.makedirs(os.path.join(root, "tenants"), exist_ok=True)
+
+    # -- paths ------------------------------------------------------------
+    def _meta_path(self, tenant: str) -> str:
+        return os.path.join(self.root, "tenants",
+                            f"{_check_tenant(tenant)}.json")
+
+    def _obj_path(self, sha: str) -> str:
+        return os.path.join(self.root, "objects", f"{sha}.npz")
+
+    # -- write ------------------------------------------------------------
+    def save(self, tenant: str, adapters, plan, *, fmt: str = "f32",
+             extra: dict | None = None) -> dict:
+        """Persist one tenant's adapter tree. Returns the meta record
+        (also written to ``tenants/<tenant>.json``)."""
+        if fmt not in FORMATS:
+            raise ValueError(f"unknown adapter format {fmt!r}; "
+                             f"want one of {FORMATS}")
+        if not getattr(plan, "has_adapters", False):
+            raise ValueError("plan carries no adapter stamps; refusing to "
+                             "store an unstamped tree")
+        stored = pack_int8(adapters) if fmt == "int8" else adapters
+        leaves, spec = _flatten(stored)
+        sha = _content_sha(leaves, spec)
+        obj = self._obj_path(sha)
+        if not os.path.exists(obj):                      # dedupe
+            tmp = obj + f".tmp{os.getpid()}"             # savez appends .npz
+            np.savez(tmp, **{f"leaf_{i}": leaf
+                             for i, leaf in enumerate(leaves)})
+            os.replace(tmp + ".npz", obj)
+        meta = {
+            "tenant": tenant,
+            "object": sha,
+            "format": fmt,
+            "bytes": int(sum(leaf.nbytes for leaf in leaves)),
+            "n_leaves": len(leaves),
+            "tree": spec,
+            "ranks": adapter_site_ranks(plan),
+            "plan_sha": plan_sha(plan),
+            "plan": plan.to_json(),
+        }
+        if extra:
+            meta["extra"] = dict(extra)
+        mp = self._meta_path(tenant)
+        tmp = mp + f".tmp{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(meta, f, indent=1, sort_keys=True)
+        os.replace(tmp, mp)
+        return meta
+
+    # -- read -------------------------------------------------------------
+    def meta(self, tenant: str) -> dict:
+        with open(self._meta_path(tenant)) as f:
+            return json.load(f)
+
+    def has(self, tenant: str) -> bool:
+        try:
+            return os.path.exists(self._meta_path(tenant))
+        except ValueError:
+            return False
+
+    def load(self, tenant: str, *, expect_plan_sha: str | None = None):
+        """-> (f32 adapter tree, meta). int8 objects are dequantized here:
+        the store format is a disk format, not a serve layout."""
+        meta = self.meta(tenant)
+        if expect_plan_sha is not None and meta["plan_sha"] != expect_plan_sha:
+            raise ValueError(
+                f"adapter for tenant {tenant!r} was trained under plan "
+                f"{meta['plan_sha'][:12]} but the engine runs "
+                f"{expect_plan_sha[:12]} — refusing the shape roulette")
+        with np.load(self._obj_path(meta["object"])) as z:
+            leaves = [z[f"leaf_{i}"] for i in range(meta["n_leaves"])]
+        tree = _build_from_spec(meta["tree"], leaves)
+        if meta["format"] == "int8":
+            tree = unpack_int8(tree)
+        return tree, meta
+
+    # -- accounting -------------------------------------------------------
+    def tenants(self) -> list[str]:
+        d = os.path.join(self.root, "tenants")
+        return sorted(n[:-5] for n in os.listdir(d) if n.endswith(".json"))
+
+    def list(self) -> list[dict]:
+        return [self.meta(t) for t in self.tenants()]
+
+    def bytes_by_tenant(self) -> dict[str, int]:
+        """Per-tenant on-disk payload bytes (memprof convention: exact
+        nbytes of the stored leaves; dedup'd objects count per pointer)."""
+        return {m["tenant"]: m["bytes"] for m in self.list()}
+
+    def total_object_bytes(self) -> int:
+        """Actual disk footprint of the object pool (after dedupe)."""
+        d = os.path.join(self.root, "objects")
+        return sum(os.path.getsize(os.path.join(d, n))
+                   for n in os.listdir(d) if n.endswith(".npz"))

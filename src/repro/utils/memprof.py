@@ -134,28 +134,59 @@ def model_weight_bytes(params) -> dict:
     """Linear-site weight storage of a param tree, split so a quantized
     deployment shows its packing win next to the f32 master:
 
-    {"weights_bytes", "scales_bytes", "bias_bytes", "total_bytes",
-     "n_linears"} — weights are the w/L/R payloads (int8 after
-    ``convert.quantize``), scales the per-channel f32 vectors that ride
-    with them, bias always f32. The walk covers every linear-LAYOUT dict
-    ({"w"}/{"L","R"}-keyed), which includes w-keyed leaves the plan does
-    not treat (tied embeddings, an untied lm_head) — those stay f32 and
-    dilute the aggregate packing ratio; norms/convs/router tables are
-    excluded. This is the accounting ``benchmarks/tab2_latency.py``
-    reports as ``weight_mib`` and docs/deployment.md sizes devices by.
-    The tree walk is ``api.bind``'s (the key monopoly)."""
+    {"weights_bytes", "scales_bytes", "bias_bytes", "adapter_bytes",
+     "total_bytes", "n_linears"} — weights are the w/L/R payloads (int8
+    after ``convert.quantize``), scales the per-channel f32 vectors that
+    ride with them, bias always f32; adapter_bytes counts any per-tenant
+    La/Ra delta pairs (plus their int8 storage scales) riding next to the
+    base weights in a merged tree — zero on a plain base tree, so every
+    pre-tenancy caller sees unchanged numbers. The walk covers every
+    linear-LAYOUT dict ({"w"}/{"L","R"}-keyed), which includes w-keyed
+    leaves the plan does not treat (tied embeddings, an untied lm_head) —
+    those stay f32 and dilute the aggregate packing ratio;
+    norms/convs/router tables are excluded. This is the accounting
+    ``benchmarks/tab2_latency.py`` reports as ``weight_mib`` and
+    docs/deployment.md sizes devices by. The tree walk is ``api.bind``'s
+    (the key monopoly)."""
     from repro.api.bind import iter_linear_dicts, linear_param_bytes
 
     out = {"weights_bytes": 0, "scales_bytes": 0, "bias_bytes": 0,
-           "n_linears": 0}
+           "adapter_bytes": 0, "n_linears": 0}
     for _, p in iter_linear_dicts(params):
         b = linear_param_bytes(p)
         out["weights_bytes"] += b["weights"]
         out["scales_bytes"] += b["scales"]
         out["bias_bytes"] += b["bias"]
+        out["adapter_bytes"] += b["adapter_weights"] + b["adapter_scales"]
         out["n_linears"] += 1
     out["total_bytes"] = (out["weights_bytes"] + out["scales_bytes"]
-                          + out["bias_bytes"])
+                          + out["bias_bytes"] + out["adapter_bytes"])
+    return out
+
+
+def adapter_bytes(params, plan=None) -> dict:
+    """Per-tenant delta storage of an adapter tree (or a merged tree):
+    {"adapter_bytes", "n_sites", "by_site"} over every La/Ra-keyed dict.
+    This is the base-vs-adapter split ``ServeEngine.summary()`` and the
+    tenancy bench rows report: ``model_weight_bytes`` sizes the resident
+    base, this sizes what each additional tenant costs. ``plan`` (adapter-
+    stamped) is optional cross-checking: when given, a site count mismatch
+    against ``plan``'s stamps raises instead of under-reporting."""
+    from repro.api.bind import iter_adapter_dicts
+
+    by_site = {}
+    for path, p in iter_adapter_dicts(params):
+        by_site[path] = sum(
+            array_bytes(v) for k, v in p.items()
+            if k in ("La", "Ra", "sLa", "sRa"))
+    out = {"adapter_bytes": sum(by_site.values()),
+           "n_sites": len(by_site), "by_site": by_site}
+    if plan is not None:
+        stamped = sum(1 for s in plan.specs if s.adapter)
+        if stamped and not by_site:
+            raise ValueError(
+                f"plan stamps {stamped} adapter sites but the tree carries "
+                "none — accounting would silently report 0")
     return out
 
 

@@ -260,3 +260,100 @@ def test_fuzz_property_random_seeds(world, seed, sched):
     interleaving into a minimal seed instead of a 200-case haystack."""
     _run_scenario(world, world["engines"][("paged", sched)], sched, seed,
                   n_requests=3)
+
+
+# -- multi-tenant interleavings --------------------------------------------
+
+TENANT_POOL = [None, "fz-a", "fz-b", "fz-c"]   # 3 adapters + the bare base
+
+
+@pytest.fixture(scope="module")
+def tenancy(world, tmp_path_factory):
+    """Adapter store (3 tenants, nonzero deltas) + per-tenant solo-engine
+    oracles over the shared prompt pool. The None oracle is the WORLD's —
+    tenant=None rides identity row 0 and must equal a no-adapter engine."""
+    from repro.tenancy import AdapterStore, init_adapters
+
+    cfg, params = world["cfg"], world["params"]
+    aplan = api.plan_of(cfg).with_adapter(0.25)
+    store = AdapterStore(str(tmp_path_factory.mktemp("fuzz_adapters")))
+    for i, t in enumerate(TENANT_POOL[1:]):
+        ad = init_adapters(jax.random.PRNGKey(40 + i), params, aplan)
+        store.save(t, jax.tree.map(lambda x: x + 0.02 * (i + 1), ad), aplan)
+
+    oracle = {None: world["oracle"]}
+    for t in TENANT_POOL[1:]:
+        solo = ServeEngine(params, cfg, max_slots=2, max_cache=MAX_CACHE,
+                           buckets=(4, 8, 16), adapters=str(store.root),
+                           adapter_slots=2)
+        hs = [solo.submit(p, max_new=MAX_NEW_CAP, tenant=t)
+              for p in world["prompts"]]
+        solo.run()
+        oracle[t] = [h.generated for h in hs]
+        assert all(len(o) == MAX_NEW_CAP for o in oracle[t])
+    # the adapters are not inert: each tenant's greedy path must diverge
+    # from the base somewhere, or the interleaving checks test nothing
+    for t in TENANT_POOL[1:]:
+        assert oracle[t] != oracle[None], f"{t} adapter changed no output"
+    return {"store": store, "oracle": oracle}
+
+
+def _run_tenant_scenario(world, tz, eng, seed, n_requests=4):
+    """The fuzz loop with a tenant axis: every submit draws a tenant from
+    a pool LARGER than the LRU bank (churn + evict-under-pin + defers),
+    cancels land mid-swap, and every emitted token must be the prefix of
+    THAT tenant's solo-engine oracle."""
+    rng = np.random.default_rng(seed)
+    prompts, oracle = world["prompts"], tz["oracle"]
+    live = []          # (handle, tenant, prompt_idx, max_new)
+    submitted = 0
+    ticks = 0
+    while submitted < n_requests or eng.busy:
+        if submitted < n_requests and rng.random() < 0.6:
+            i = int(rng.integers(len(prompts)))
+            t = TENANT_POOL[int(rng.integers(len(TENANT_POOL)))]
+            max_new = int(rng.integers(1, MAX_NEW_CAP + 1))
+            h = eng.submit(prompts[i], max_new=max_new, tenant=t)
+            live.append((h, t, i, max_new))
+            submitted += 1
+        if live and rng.random() < 0.12:
+            h = live[int(rng.integers(len(live)))][0]
+            if not h.done:
+                eng.cancel(h.rid)
+        eng.step()
+        ticks += 1
+        assert ticks < TICK_LIMIT, "engine failed to drain"
+        if ticks % 7 == 0:
+            eng.check_invariants()
+
+    assert not eng.busy and all(s is None for s in eng.slots)
+    eng.check_invariants()
+    assert all(ix == 0 for ix in eng.adapter_ix), "drained engine pins rows"
+    for h, t, i, max_new in live:
+        events = h.events
+        assert sum(1 for e in events if e.kind in TERMINAL) == 1, h.rid
+        gen = h.generated
+        assert len(gen) <= max_new
+        assert gen == oracle[t][i][:len(gen)], (h.rid, t, gen, oracle[t][i])
+
+
+@pytest.mark.parametrize("mode", ["dense", "paged"])
+def test_fuzz_tenant_interleavings(world, tenancy, mode):
+    """Mixed adapter-vs-no-adapter batches under churn: a 2-row bank
+    serves a 4-way tenant pool, so interleavings constantly evict and
+    re-load adapters between (and under) live requests — outputs must stay
+    per-tenant-oracle-exact through every swap."""
+    cfg = world["cfg"]
+    kw = dict(max_slots=2, max_cache=MAX_CACHE, buckets=(4, 8, 16),
+              adapters=str(tenancy["store"].root), adapter_slots=2)
+    if mode == "paged":
+        kw.update(paged=True, page_size=8, prefill_chunk=8)
+    eng = ServeEngine(world["params"], cfg, **kw)
+    for seed in range(10):
+        _run_tenant_scenario(world, tenancy, eng, 300_000 + seed)
+    assert eng.adapters.swaps > 0
+    assert eng.adapters.evictions > 0, "pool never churned past capacity"
+    if mode == "paged":
+        eng.release_prefix_cache()
+        eng.check_invariants()
+        assert eng.pool.pages_in_use == 0

@@ -1,0 +1,307 @@
+"""Tenancy subsystem: adapter plans, freeze-base fine-tuning, the
+content-addressed store, and mixed-tenant serving.
+
+The acceptance bars live here as tests:
+
+* a mixed-tenant batch is BITWISE equal to per-tenant solo engines —
+  with f32-stored AND int8-stored adapters (the store format is a disk
+  format; both paths serve the same dequantized banks);
+* tenant churn past the LRU bank capacity swaps bank CONTENTS only —
+  the decode executable count stays at one (no re-jit, no re-upload of
+  the base) while adapter EVICTED events fire;
+* a rank-K smoke adapter through the store is < 1 MiB f32 and STRICTLY
+  smaller int8;
+* fine-tuning on a tenant's skewed stream beats the frozen base's CE,
+  and the base cannot receive gradients by construction.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro import api
+from repro.config import TrainConfig
+from repro.data.synthetic import SyntheticLM
+from repro.models.lm import init_lm, init_lm_states, lm_loss
+from repro.serve import ServeEngine
+from repro.serve.session import EventKind
+from repro.tenancy import (AdapterStore, adapter_loss_fn, eval_ce,
+                           finetune_adapters, init_adapters, merge_adapters,
+                           plan_sha)
+from repro.tenancy.resident import ResidentAdapters
+from repro.utils.memprof import adapter_bytes, model_weight_bytes
+
+MAX_NEW = 6
+TENANTS = ["alice", "bob", "carol"]
+
+
+@pytest.fixture(scope="module")
+def tw(tmp_path_factory):
+    """Adapter-stamped plan + briefly-trained base + a store holding each
+    tenant's adapter in BOTH formats (int8 copies under '<t>.i8')."""
+    cfg = configs.get_smoke("qwen2-0.5b")
+    api.uninstall(cfg)
+    plan = api.install(api.resolve(cfg))
+    key = jax.random.PRNGKey(0)
+    params = init_lm(key, cfg, jnp.dtype(cfg.dtype))
+    # briefly trained (the serve-fuzz precedent): random-init greedy paths
+    # sit on near-ties, and the bitwise bars here decode greedily
+    states = init_lm_states(key, cfg, 8, 32)
+    tcfg = TrainConfig(optimizer="sgd", lr=0.3, momentum=0.9,
+                       checkpoint_every=0)
+    from repro.train.step import make_train_state, make_train_step
+    state = make_train_state(key, params, cfg, tcfg, asi_states=states)
+    jstep = jax.jit(make_train_step(lm_loss, cfg, tcfg))
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32,
+                      global_batch=8, seed=1)
+    for i in range(30):
+        state, _ = jstep(state, data.batch(i))
+    params = state.params
+
+    aplan = plan.with_adapter(0.25)
+    store = AdapterStore(str(tmp_path_factory.mktemp("adapters")))
+    trees = {}
+    for i, t in enumerate(TENANTS):
+        ad = init_adapters(jax.random.PRNGKey(10 + i), params, aplan)
+        # constant offset puts mass in La too => a real, nonzero delta
+        trees[t] = jax.tree.map(lambda x: x + 0.01 * (i + 1), ad)
+        store.save(t, trees[t], aplan)
+        store.save(f"{t}.i8", trees[t], aplan, fmt="int8")
+
+    rng = np.random.default_rng(7)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, n)))
+               for n in (5, 9, 12, 7)]
+    yield {"cfg": cfg, "plan": plan, "aplan": aplan, "params": params,
+           "store": store, "trees": trees, "prompts": prompts}
+    api.uninstall(cfg)
+
+
+# -- plan stamps ------------------------------------------------------------
+
+def test_adapter_plan_json_roundtrip(tw):
+    aplan = tw["aplan"]
+    assert aplan.has_adapters and not tw["plan"].has_adapters
+    back = type(aplan).from_json(aplan.to_json())
+    assert back.has_adapters
+    assert [s.adapter for s in back.specs] == [s.adapter for s in aplan.specs]
+    assert plan_sha(back) == plan_sha(aplan)
+    assert plan_sha(aplan) != plan_sha(tw["plan"])
+
+
+def test_zero_init_adapter_is_identity(tw):
+    """Freshly initialized adapters (La = 0) leave the forward EXACTLY at
+    the base model: the delta contributes x Ra^T 0^T = 0."""
+    cfg, params = tw["cfg"], tw["params"]
+    ad0 = init_adapters(jax.random.PRNGKey(99), params, tw["aplan"])
+    assert all(not np.asarray(p["La"]).any()
+               for _, p in _adapter_sites(ad0))
+    batch = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16,
+                       global_batch=2, seed=3).batch(0)
+    loss = jax.jit(lambda p, b: lm_loss(p, b, cfg)[0])
+    assert float(loss(params, batch)) == \
+        float(loss(merge_adapters(params, ad0), batch))
+
+
+def _adapter_sites(tree):
+    from repro.api.bind import iter_adapter_dicts
+    return list(iter_adapter_dicts(tree))
+
+
+# -- store ------------------------------------------------------------------
+
+def test_store_roundtrip_f32_bitwise(tw):
+    store, trees = tw["store"], tw["trees"]
+    back, meta = store.load("alice")
+    for a, b in zip(jax.tree.leaves(trees["alice"]), jax.tree.leaves(back)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert meta["format"] == "f32"
+    assert meta["bytes"] < 2**20, "smoke adapter must be < 1 MiB f32"
+    assert meta["bytes"] == sum(
+        np.asarray(x).nbytes for x in jax.tree.leaves(trees["alice"]))
+
+
+def test_store_content_dedupe(tw):
+    """Identical trees under different tenants share ONE object."""
+    store = tw["store"]
+    before = store.total_object_bytes()
+    m = store.save("alice-twin", tw["trees"]["alice"], tw["aplan"])
+    assert m["object"] == store.meta("alice")["object"]
+    assert store.total_object_bytes() == before
+    assert "alice-twin" in store.tenants()
+    assert store.bytes_by_tenant()["alice-twin"] == m["bytes"]
+
+
+def test_store_int8_strictly_smaller_and_close(tw):
+    store = tw["store"]
+    f32_b = store.meta("bob")["bytes"]
+    m8 = store.meta("bob.i8")
+    assert m8["format"] == "int8"
+    assert m8["bytes"] < f32_b, "int8 packing must beat f32 strictly"
+    ref, _ = store.load("bob")
+    deq, _ = store.load("bob.i8")        # load always hands back f32
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(deq)):
+        a, b = np.asarray(a), np.asarray(b)
+        assert b.dtype == np.float32
+        assert np.abs(a - b).max() < 1e-2
+
+
+def test_store_refuses_unstamped_plan(tw):
+    with pytest.raises(ValueError, match="no adapter stamps"):
+        tw["store"].save("zed", tw["trees"]["alice"], tw["plan"])
+
+
+def test_store_plan_sha_guard(tw):
+    with pytest.raises(ValueError, match="refusing"):
+        tw["store"].load("alice", expect_plan_sha="0" * 64)
+
+
+# -- freeze-base fine-tuning ------------------------------------------------
+
+def test_finetune_beats_frozen_base_on_tenant_stream(tw):
+    """The per-tenant acceptance bar: adapters trained on a tenant's
+    topic-skewed stream must beat the frozen base's CE on held-out batches
+    of the SAME stream."""
+    cfg, params = tw["cfg"], tw["params"]
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32,
+                      global_batch=8, seed=5).for_tenant("alice")
+    ad, metrics = finetune_adapters(params, tw["aplan"], data, steps=30)
+    assert np.isfinite(metrics["ce"])
+    assert eval_ce(merge_adapters(params, ad), cfg, data) \
+        < eval_ce(params, cfg, data)
+    # and it actually trained: La left its zero init
+    assert any(np.asarray(p["La"]).any() for _, p in _adapter_sites(ad))
+
+
+def test_freeze_base_gradient_masking(tw):
+    """The base cannot receive gradients by construction: the grad pytree
+    IS the adapter tree (La/Ra leaves only), and every La grad is live at
+    zero init (dLa = dy (x Ra^T) with Ra random-normal)."""
+    cfg, params = tw["cfg"], tw["params"]
+    ad0 = init_adapters(jax.random.PRNGKey(4), params, tw["aplan"])
+    batch = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16,
+                       global_batch=2, seed=6).batch(0)
+    lf = adapter_loss_fn(params)
+    grads = jax.grad(lambda a: lf(a, batch, cfg)[0])(ad0)
+    assert jax.tree.structure(grads) == jax.tree.structure(ad0)
+    sites = _adapter_sites(grads)
+    assert sites
+    for _, g in sites:
+        assert set(g) == {"La", "Ra"}
+        assert np.isfinite(np.asarray(g["La"])).all()
+        assert np.asarray(g["La"]).any()
+
+
+def test_finetune_refuses_quantized_plan(tw):
+    data = SyntheticLM(vocab_size=tw["cfg"].vocab_size, seq_len=16,
+                      global_batch=2, seed=0)
+    with pytest.raises(ValueError, match="f32 master"):
+        finetune_adapters(tw["params"], tw["aplan"].quantized(), data,
+                          steps=1)
+
+
+# -- memprof accounting -----------------------------------------------------
+
+def test_adapter_bytes_accounting(tw):
+    ad = tw["trees"]["alice"]
+    rep = adapter_bytes(ad, tw["aplan"])
+    assert rep["n_sites"] == len(_adapter_sites(ad)) > 0
+    assert rep["adapter_bytes"] == tw["store"].meta("alice")["bytes"]
+    merged = merge_adapters(tw["params"], ad)
+    mw = model_weight_bytes(merged)
+    assert mw["adapter_bytes"] == rep["adapter_bytes"]
+    base = model_weight_bytes(tw["params"])
+    assert base["adapter_bytes"] == 0
+    assert mw["total_bytes"] == base["total_bytes"] + rep["adapter_bytes"]
+    with pytest.raises(ValueError, match="accounting"):
+        adapter_bytes(tw["params"], tw["aplan"])
+
+
+# -- mixed-tenant serving ---------------------------------------------------
+
+def _engine(tw, **kw):
+    base = dict(max_slots=4, max_cache=32, buckets=(4, 8, 16))
+    base.update(kw)
+    return ServeEngine(tw["params"], tw["cfg"], **base)
+
+
+@pytest.mark.parametrize("suffix", ["", ".i8"])
+def test_mixed_batch_bitwise_equals_solo_engines(tw, suffix):
+    """THE tenancy bar: one engine serving [alice, bob, carol, base] in a
+    single batch emits, per slot, exactly what a solo engine serving only
+    that tenant emits — for f32-stored and int8-stored adapters alike."""
+    prompts = tw["prompts"]
+    assign = [t + suffix for t in TENANTS] + [None]
+    mixed = _engine(tw, adapters=ResidentAdapters(tw["store"], capacity=3))
+    hs = [mixed.submit(prompts[i], max_new=MAX_NEW, tenant=t)
+          for i, t in enumerate(assign)]
+    mixed.run()
+    assert mixed.adapters.resident()          # banks actually populated
+    for i, t in enumerate(assign):
+        solo = _engine(tw,
+                       adapters=ResidentAdapters(tw["store"], capacity=3))
+        h = solo.submit(prompts[i], max_new=MAX_NEW, tenant=t)
+        solo.run()
+        assert hs[i].result() == h.result(), (t, i)
+    # the no-adapter slot also matches an engine with NO tenancy at all:
+    # identity row 0 is bitwise inert
+    bare = _engine(tw)
+    h = bare.submit(prompts[3], max_new=MAX_NEW)
+    bare.run()
+    assert hs[3].result() == h.result()
+
+
+def test_churn_past_capacity_never_rejits(tw):
+    """Four tenants through a TWO-row bank: every swap past capacity
+    evicts (EVICTED adapter events fire, stats count them) yet the decode
+    executable compiled for the first request serves every later one —
+    churn changes bank CONTENTS, never shapes."""
+    eng = _engine(tw, max_slots=1,
+                  adapters=ResidentAdapters(tw["store"], capacity=2))
+    prompt = tw["prompts"][0]
+    rotation = [None] + TENANTS + [TENANTS[0] + ".i8", None, TENANTS[2]]
+    outs = {}
+    for t in rotation:
+        h = eng.submit(prompt, max_new=MAX_NEW, tenant=t)
+        eng.run()
+        outs.setdefault(t, h.result())
+        assert outs[t] == h.result(), f"revisit of {t} diverged after churn"
+    assert eng._decode._cache_size() == 1, \
+        "adapter churn must reuse ONE decode executable"
+    assert eng.stats["adapter_evictions"] > 0
+    assert eng.adapters.evictions > 0 and eng.adapters.swaps >= 4
+    kinds = {e.kind for e in eng.adapter_events}
+    assert kinds == {EventKind.EVICTED}
+    assert all("adapter lru" in e.reason for e in eng.adapter_events)
+
+
+def test_submit_unknown_tenant_raises(tw):
+    eng = _engine(tw, adapters=ResidentAdapters(tw["store"], capacity=2))
+    with pytest.raises((KeyError, ValueError, FileNotFoundError)):
+        eng.submit(tw["prompts"][0], max_new=2, tenant="nobody")
+
+
+def test_tenant_without_adapters_raises(tw):
+    eng = _engine(tw)
+    with pytest.raises(ValueError):
+        eng.submit(tw["prompts"][0], max_new=2, tenant="alice")
+
+
+def test_spec_decode_plus_adapters_rejected(tw):
+    with pytest.raises(ValueError):
+        _engine(tw, spec_k=2,
+                adapters=ResidentAdapters(tw["store"], capacity=2))
+
+
+def test_summary_reports_tenancy(tw):
+    eng = _engine(tw, adapters=ResidentAdapters(tw["store"], capacity=2))
+    h = eng.submit(tw["prompts"][1], max_new=2, tenant="bob")
+    eng.run()
+    assert h.finished
+    s = eng.summary()
+    t = s["tenancy"]
+    assert t["resident"] == ["bob"]
+    assert t["capacity"] == 2 and t["swaps"] >= 1
+    assert s["adapter_bank_bytes"] == t["bank_bytes"] > 0
+    assert t["bytes_by_tenant"]["bob"] == tw["store"].meta("bob")["bytes"]
