@@ -1,0 +1,133 @@
+"""DP gradient-collective traffic: factor-only vs dense vs PowerSGD.
+
+MEASURED, not analytic: each variant's train step is compiled against an
+8-device simulated host mesh and the per-step collective bytes are parsed
+out of the post-SPMD HLO (distributed/collectives.collective_bytes) — the
+numbers are what actually crosses the data axis, so a regression here
+means the step really started moving more bytes. The WASI claim under
+test: all-reducing the rank-K ``dL``/``dR`` factors costs K(O+I) per site
+vs O*I for the dense gradient, so the factored smoke LM must come in
+strictly below its dense twin; PowerSGD covers the dense 2-D stragglers.
+
+Emits BENCH_train.json rows (schema v3, benchmarks/common.py), gated by
+``scripts/bench_gate.py --suite train``:
+
+* ``train_comm_{dense,factor,powersgd}_bytes`` — per-step collective
+  bytes of each variant (regress UP: more traffic is the harmful way);
+* ``factor_over_dense_bytes`` / ``powersgd_over_dense_bytes`` — the
+  acceptance ratios, absolute-barred < 1;
+* ``dp_step_ratio`` — 8-way DP step wall time over the single-device
+  step (same host, same math: load-invariant enough to trend).
+
+NOT wired into benchmarks/run.py: the forced-device flag must be set
+before jax initializes, so this module owns its process —
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` is injected below
+if absent, which only works when nothing imported jax first.
+"""
+from __future__ import annotations
+
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8").strip()
+
+import argparse
+import dataclasses
+
+import jax
+
+import repro.configs as configs
+from benchmarks.common import csv_row, row_to_record, time_call, write_json
+from repro.config import TrainConfig
+
+N_DEV = 8
+B, S = 8, 32
+ARCH = "qwen2-0.5b"
+ROW = f"comm/train_dp{N_DEV}_{ARCH}_smoke"
+
+
+def _world(method: str, powersgd_rank: int = 0):
+    from repro.data.synthetic import SyntheticLM
+    from repro.models.lm import init_lm, init_lm_states, lm_loss
+
+    cfg = configs.get_smoke(ARCH)
+    cfg = cfg.replace(wasi=dataclasses.replace(cfg.wasi, method=method))
+    tcfg = TrainConfig(optimizer="sgd", lr=0.3, momentum=0.9,
+                       checkpoint_every=0, powersgd_rank=powersgd_rank)
+    key = jax.random.PRNGKey(0)
+    params = init_lm(key, cfg)
+    asi = init_lm_states(key, cfg, B, S) if cfg.wasi.compress_acts else None
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=S,
+                       global_batch=B, seed=1)
+    return cfg, tcfg, params, asi, lm_loss, data
+
+
+def _variant(mesh, method: str, powersgd_rank: int = 0):
+    """(per-step collective bytes, DP step wall us) for one variant."""
+    from repro.distributed.collectives import measured_collective_bytes
+    from repro.train.step import (
+        dp_batch_sharding,
+        dp_state_shardings,
+        make_train_state,
+        make_train_step,
+    )
+
+    cfg, tcfg, params, asi, loss_fn, data = _world(method, powersgd_rank)
+    state = make_train_state(jax.random.PRNGKey(0), params, cfg, tcfg,
+                             asi_states=asi, dp_degree=N_DEV)
+    state = jax.device_put(state, dp_state_shardings(state, mesh))
+    step = make_train_step(loss_fn, cfg, tcfg, mesh=mesh)
+    batch = jax.device_put(data.batch(0), dp_batch_sharding(mesh))
+    cb = measured_collective_bytes(step, state, batch)
+    us = time_call(jax.jit(step), state, batch)
+    return cb["total"], us
+
+
+def run() -> list[str]:
+    from repro.launch.mesh import make_host_mesh
+    from repro.train.step import make_train_state, make_train_step
+
+    if len(jax.devices()) < N_DEV:
+        raise SystemExit(f"fig_comm: {len(jax.devices())} devices visible; "
+                         "run standalone so the forced-device flag applies")
+    mesh = make_host_mesh(N_DEV)
+
+    factor_b, factor_us = _variant(mesh, "wasi")
+    dense_b, dense_us = _variant(mesh, "none")
+    psgd_b, _ = _variant(mesh, "none", powersgd_rank=8)
+
+    # single-device oracle step of the factored variant, for dp_step_ratio
+    cfg, tcfg, params, asi, loss_fn, data = _world("wasi")
+    s1 = make_train_state(jax.random.PRNGKey(0), params, cfg, tcfg,
+                          asi_states=asi)
+    single_us = time_call(jax.jit(make_train_step(loss_fn, cfg, tcfg)),
+                          s1, data.batch(0))
+
+    derived = ";".join([
+        f"train_comm_dense_bytes={dense_b}",
+        f"train_comm_factor_bytes={factor_b}",
+        f"train_comm_powersgd_bytes={psgd_b}",
+        f"factor_over_dense_bytes={factor_b / dense_b:.4f}",
+        f"powersgd_over_dense_bytes={psgd_b / dense_b:.4f}",
+        f"dp_step_ratio={factor_us / single_us:.3f}",
+        f"mesh_devices={N_DEV}",
+    ])
+    return [csv_row(ROW, factor_us, derived)]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="", help="write stable-schema JSON")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    records = []
+    for row in run():
+        print(row)
+        records.append(row_to_record(row))
+    if args.json:
+        write_json(args.json, records)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,14 @@
 #!/usr/bin/env python
-"""Trend gate over serve-benchmark JSON (schema v3, benchmarks/common.py).
+"""Trend gate over benchmark JSON (schema v3, benchmarks/common.py).
 
 ``python scripts/bench_gate.py NEW.json [--baseline BENCH_serve.json]``
+``python scripts/bench_gate.py BENCH_train_new.json --suite train``
 
-Fails LOUDLY (non-zero exit, one line per violation) when a serving
-latency metric regresses beyond tolerance. Two kinds of checks:
+Two suites share the machinery: ``serve`` (tab2_latency.py vs
+BENCH_serve.json, the default) and ``train`` (fig_comm.py vs
+BENCH_train.json — DP collective bytes, where MORE bytes is the harmful
+direction). Fails LOUDLY (non-zero exit, one line per violation) when a
+gated metric regresses beyond tolerance. Two kinds of checks:
 
 * ABSOLUTE bars on host-load-invariant RATIOS — the acceptance criteria
   themselves, checked on every run regardless of baseline:
@@ -60,10 +64,36 @@ RELATIVE_KEYS = [
 ]
 RELATIVE_TOLERANCE = 1.35
 
+# -- train suite (benchmarks/fig_comm.py -> BENCH_train.json) --------------
+# The acceptance criterion itself, as an absolute bar: MEASURED factor-only
+# collective bytes strictly below the dense all-reduce (< 1, with margin so
+# a rounding artifact cannot sneak a ~1.0 through), ditto PowerSGD.
+_COMM_ROW = "comm/train_dp8_qwen2-0.5b_smoke"
+ABSOLUTE_BARS_TRAIN = [
+    (_COMM_ROW, "factor_over_dense_bytes", "max", 0.999),
+    (_COMM_ROW, "powersgd_over_dense_bytes", "max", 0.999),
+]
+RELATIVE_KEYS_TRAIN = [
+    (_COMM_ROW, "train_comm_dense_bytes"),
+    (_COMM_ROW, "train_comm_factor_bytes"),
+    (_COMM_ROW, "train_comm_powersgd_bytes"),
+    (_COMM_ROW, "factor_over_dense_bytes"),
+    (_COMM_ROW, "dp_step_ratio"),
+]
+
 # keys where a LARGER value is the harmful direction (latency-style
-# ratios); everything else regresses by shrinking (throughput, acceptance)
+# ratios, and collective BYTE counts — extra traffic is the regression);
+# everything else regresses by shrinking (throughput, acceptance)
 REGRESS_UP_KEYS = {"tpot_p95_ratio", "spec_tpot_ratio",
-                   "mixed_over_solo_tpot"}
+                   "mixed_over_solo_tpot",
+                   "train_comm_dense_bytes", "train_comm_factor_bytes",
+                   "train_comm_powersgd_bytes", "factor_over_dense_bytes",
+                   "powersgd_over_dense_bytes", "dp_step_ratio"}
+
+SUITES = {
+    "serve": (ABSOLUTE_BARS, RELATIVE_KEYS, "BENCH_serve.json"),
+    "train": (ABSOLUTE_BARS_TRAIN, RELATIVE_KEYS_TRAIN, "BENCH_train.json"),
+}
 
 # rows deliberately deleted from the benchmark suite: a baseline row
 # missing from the current run fails the gate UNLESS listed here (or
@@ -83,15 +113,21 @@ def load(path: str) -> dict:
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("new", help="freshly produced benchmark JSON")
-    ap.add_argument("--baseline", default="BENCH_serve.json",
+    ap.add_argument("--suite", default="serve", choices=sorted(SUITES),
+                    help="which bar/drift table to apply (default: serve)")
+    ap.add_argument("--baseline", default=None,
                     help="committed baseline to diff ratio metrics against "
-                         "('' skips the relative checks)")
+                         "(default: the suite's committed BENCH_*.json; "
+                         "'' skips the relative checks)")
     ap.add_argument("--retire", default="",
                     help="comma-separated row names retired this run (on "
                          "top of RETIRED_ROWS) — missing-vs-baseline "
                          "failures are waived for them")
     args = ap.parse_args()
     retired = RETIRED_ROWS | {n for n in args.retire.split(",") if n}
+    bars, relative_keys, default_baseline = SUITES[args.suite]
+    if args.baseline is None:
+        args.baseline = default_baseline
 
     try:
         new = load(args.new)
@@ -100,7 +136,7 @@ def main() -> int:
         return 2
 
     bad = []
-    for name, key, op, bound in ABSOLUTE_BARS:
+    for name, key, op, bound in bars:
         rec = new.get(name)
         if rec is None or key not in rec:
             bad.append(f"MISSING {name}:{key} — the serve benchmark no "
@@ -127,7 +163,7 @@ def main() -> int:
                        f"{args.baseline} but the current run did not emit "
                        "it; retire it explicitly (--retire or "
                        "RETIRED_ROWS) if that is intended")
-        for name, key in RELATIVE_KEYS:
+        for name, key in relative_keys:
             if name in retired or name not in new or name not in base:
                 continue
             v, b = new[name].get(key), base[name].get(key)
@@ -146,9 +182,9 @@ def main() -> int:
         for line in bad:
             print(f"  {line}", file=sys.stderr)
         return 1
-    print("bench_gate: OK "
-          f"({len(ABSOLUTE_BARS)} absolute bars"
-          + (f", {len(RELATIVE_KEYS)} relative checks" if args.baseline
+    print(f"bench_gate: OK [{args.suite}] "
+          f"({len(bars)} absolute bars"
+          + (f", {len(relative_keys)} relative checks" if args.baseline
              else "") + ")")
     return 0
 

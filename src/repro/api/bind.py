@@ -396,3 +396,44 @@ def extract_project_factors(params):
 
     stripped = strip(params)
     return (stripped, factors) if factors else (params, {})
+
+
+def plan_param_specs(params, plan: SubspacePlan, policy=None, rules=None):
+    """Pytree of PartitionSpecs for ``params``, PLAN-DRIVEN: sites whose
+    spec carries a ``sharding`` stamp (SubspacePlan.with_sharding) use it
+    verbatim — the plan owns placement the same way it owns mode/rank —
+    and everything else (embeddings, norms, unstamped plans) falls back to
+    the distributed/sharding.py path-rule table. Stacked scan layers pad
+    leading replicated axes, exactly like spec_for_path."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.api.plan import LEAF_TO_SPEC
+    from repro.distributed.sharding import (
+        LM_RULES,
+        MeshPolicy,
+        _path_str,
+        spec_for_path,
+    )
+
+    policy = policy if policy is not None else MeshPolicy()
+    rules = rules if rules is not None else LM_RULES
+    stamped = {s.name: dict(s.sharding) for s in plan.specs
+               if s.sharding is not None}
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        parts = ps.split("/")
+        if len(parts) >= 2:
+            site = LEAF_TO_SPEC.get(parts[-2], (None, None))[0]
+            entries = stamped.get(site, {}).get(parts[-1])
+            if entries is not None:
+                e = tuple(entries)
+                nd = getattr(leaf, "ndim", len(e))
+                if nd > len(e):
+                    e = (None,) * (nd - len(e)) + e
+                elif nd < len(e):
+                    e = e[-nd:] if nd else ()
+                return P(*e)
+        return spec_for_path(ps, leaf, policy, rules)
+
+    return jax.tree_util.tree_map_with_path(one, params)

@@ -114,6 +114,16 @@ class LinearSpec:
     # Stamped by SubspacePlan.with_adapter(); orthogonal to mode/quant —
     # the base weights keep their layout, the delta rides NEXT TO them.
     adapter: int | None = None
+    # Mesh placement of this site's weight leaves: None (unstamped) or a
+    # PartitionSpec-shaped tuple of (leaf, entries) pairs, e.g.
+    # (("L", ("model", None)), ("R", (None, None))) — each entry a mesh
+    # axis name, None, or a tuple of axis names, exactly what
+    # jax.sharding.PartitionSpec(*entries) accepts. Stamped by
+    # SubspacePlan.with_sharding() from a MeshPolicy; like quant/draft it
+    # is a deployment decision that never changes math — consumers
+    # (bind.plan_param_specs) read it, unstamped plans fall back to the
+    # path-rule tables in distributed/sharding.py.
+    sharding: tuple[tuple[str, tuple], ...] | None = None
 
     @property
     def factored_params(self) -> bool:
@@ -128,6 +138,10 @@ class LinearSpec:
         d = dataclasses.asdict(self)
         if self.asi_ranks is not None:
             d["asi_ranks"] = list(self.asi_ranks)
+        if self.sharding is not None:
+            d["sharding"] = [[leaf, [list(e) if isinstance(e, tuple) else e
+                                     for e in entries]]
+                             for leaf, entries in self.sharding]
         return d
 
     @staticmethod
@@ -135,6 +149,11 @@ class LinearSpec:
         d = dict(d)
         if d.get("asi_ranks") is not None:
             d["asi_ranks"] = tuple(d["asi_ranks"])
+        if d.get("sharding") is not None:
+            d["sharding"] = tuple(
+                (leaf, tuple(tuple(e) if isinstance(e, list) else e
+                             for e in entries))
+                for leaf, entries in d["sharding"])
         return LinearSpec(**d)
 
 
@@ -318,6 +337,31 @@ class SubspacePlan:
             for s in self.specs)
         return dataclasses.replace(self, specs=specs)
 
+    def with_sharding(self, policy=None) -> "SubspacePlan":
+        """Stamp per-leaf mesh placement per site (distributed/sharding.py).
+
+        Resolves the LM path-rule table under ``policy`` (default
+        ``MeshPolicy()``) ONCE and freezes the result into each spec's
+        ``sharding`` field — the WASI tensor-parallel story made explicit:
+        an up-projection's L (O, K) shards O on the model axis while its R
+        stays replicated; a down-projection's R (K, I) shards I while its
+        L stays replicated (DESIGN.md §4). Adapter La/Ra pairs, when
+        stamped, are always replicated (per-tenant deltas ride the batch
+        axis, not the weight mesh). Like quant/draft/adapter this changes
+        placement only, never math, and it JSON round-trips with the plan
+        so a checkpoint manifest carries its own partitioning."""
+        from repro.distributed.sharding import MeshPolicy, site_sharding
+
+        policy = policy if policy is not None else MeshPolicy()
+        specs = tuple(
+            dataclasses.replace(s, sharding=site_sharding(s, policy))
+            for s in self.specs)
+        return dataclasses.replace(self, specs=specs)
+
+    @property
+    def is_sharded(self) -> bool:
+        return any(s.sharding is not None for s in self.specs)
+
     @property
     def has_adapters(self) -> bool:
         return any(s.adapter is not None for s in self.specs)
@@ -347,6 +391,10 @@ class SubspacePlan:
                 extra += f" draft={s.draft}"
             if s.adapter is not None:
                 extra += f" adapter={s.adapter}"
+            if s.sharding is not None:
+                extra += " shard=" + ",".join(
+                    f"{leaf}({'x'.join(str(e) for e in entries)})"
+                    for leaf, entries in s.sharding)
             lines.append(f"  {s.name:16s} {s.role:9s} "
                          f"({s.in_dim}->{s.out_dim}) {s.mode:8s}"
                          f" {s.kernel}{extra}")

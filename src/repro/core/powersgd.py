@@ -14,9 +14,18 @@ Protocol per matrix gradient G (O, I), rank q, warm-start Q (I, q):
 Error feedback: e <- G - G~ is added to the next step's gradient, making the
 compression unbiased in the long run (critical for convergence).
 
-The all-reduces are expressed with jax.lax.psum inside shard_map over the
-"data" (and "pod") mesh axes; see distributed/grad_compress.py for the
-mesh-aware wrapper. This module is the pure math + state handling.
+The all-reduces are expressed with jax.lax.pmean inside shard_map over the
+"data" (and "pod") mesh axes; distributed/grad_compress.py is the mesh-aware
+wrapper and train/step.py (make_train_step(..., mesh=...)) wires it into the
+DP train step. This module is the pure math + state handling.
+
+Under DP the error accumulator is PER-REPLICA state (each worker keeps the
+residual of its own local gradient, Vogels et al. §3): ``powersgd_init``
+with ``local_copies=D`` allocates the error with a leading device axis that
+the mesh step shards over the DP axes, while the warm-start ``q`` stays
+replicated. The transmitted update then depends only on cross-replica
+MEANS, so the decompressed sequence equals the single-device oracle run on
+the mean gradient — the parity tests/test_mesh_parity.py pins.
 """
 from __future__ import annotations
 
@@ -31,13 +40,18 @@ from repro.core.orthogonal import cholesky_qr
 class PowerSGDState(NamedTuple):
     q: jax.Array      # (I, rank) warm-start right factor
     error: jax.Array  # (O, I) error-feedback accumulator
+                      # ((D, O, I) per-replica under DP: local_copies=D)
 
 
 def powersgd_init(key: jax.Array, shape: tuple[int, int], rank: int,
-                  dtype=jnp.float32) -> PowerSGDState:
+                  dtype=jnp.float32, *, local_copies: int = 0) -> PowerSGDState:
+    """``local_copies=0`` (single device): error is (O, I). ``local_copies=D``
+    (DP over D replicas): error is (D, O, I) — one residual per replica,
+    sharded over the DP mesh axes by the train step; q stays replicated."""
     o, i = shape
     q = jax.random.normal(key, (i, rank), jnp.float32).astype(dtype)
-    return PowerSGDState(q=q, error=jnp.zeros((o, i), dtype))
+    eshape = (local_copies, o, i) if local_copies else (o, i)
+    return PowerSGDState(q=q, error=jnp.zeros(eshape, dtype))
 
 
 def compress_decompress(grad: jax.Array, state: PowerSGDState,

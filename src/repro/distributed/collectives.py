@@ -1,4 +1,16 @@
-"""Hand-scheduled collectives for the long-context serve path.
+"""Hand-scheduled collectives for the sharded train/serve hot paths.
+
+``shard_map`` — one compat alias every mesh consumer (train/step.py, the
+parity tests, this module) imports, so the jax.shard_map ->
+jax.experimental.shard_map rename difference across jax versions lives in
+exactly one place.
+
+``collective_bytes`` / ``measured_collective_bytes`` — the MEASURED side of
+the communication story: parse the post-SPMD HLO of a compiled executable
+and sum the result sizes of every collective op. ``launch/dryrun.py`` uses
+it for the planning matrix; ``distributed/grad_compress.py`` and
+``benchmarks/fig_comm.py`` use it to report the factor-only DP all-reduce
+bytes as an observation, not a formula.
 
 ``flash_decode`` — sequence-sharded single-token attention: the KV cache for
 a 500k-token context is sharded along the SEQUENCE dim across the ``data``
@@ -13,12 +25,68 @@ baseline it is hillclimbed against in EXPERIMENTS.md §Perf.
 from __future__ import annotations
 
 import functools
+import re
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+try:  # jax >= 0.5 exposes it at the top level
+    shard_map = jax.shard_map
+except AttributeError:  # 0.4.x
+    from jax.experimental.shard_map import shard_map
+
 NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Measured collective bytes (post-SPMD HLO)
+# ---------------------------------------------------------------------------
+
+DTYPE_RE = re.compile(
+    r"(f64|f32|bf16|f16|s32|u32|s64|u64|s16|u16|s8|u8|pred|c64|c128)"
+    r"\[([0-9,]*)\]")
+BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+         "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+         "pred": 1, "c64": 8, "c128": 16}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(m) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum RESULT sizes of collective ops in post-SPMD HLO (per device)."""
+    out = {c: 0 for c in COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        for c in COLLECTIVES:
+            # match op lines: "%x = TYPE[dims] all-reduce(...)" (incl. -start)
+            if re.search(rf"\b{c}(-start)?\(", ls):
+                m = DTYPE_RE.search(ls)
+                if m:
+                    out[c] += _shape_bytes(m)
+                    out["count"] += 1
+                break
+    out["total"] = sum(out[c] for c in COLLECTIVES)
+    return out
+
+
+def measured_collective_bytes(fn, *args) -> dict[str, int]:
+    """Compile ``fn(*args)`` and read its per-device collective bytes out of
+    the post-SPMD HLO. ``fn`` must already carry its mesh (a shard_map-
+    wrapped step, or a jit with explicit shardings); args are concrete
+    arrays or ShapeDtypeStructs."""
+    compiled = jax.jit(fn).lower(*args).compile()
+    return collective_bytes(compiled.as_text())
 
 
 def _local_partials(q, k, v, valid):
@@ -66,7 +134,7 @@ def make_flash_decode(mesh: Mesh, seq_axis: str = "data"):
             kpos = idx * sl + jnp.arange(sl)
             return flash_decode(qi, ki, vi, kpos <= posi, seq_axis)
 
-        return jax.shard_map(
+        return shard_map(
             local, mesh=mesh,
             in_specs=(P(), P(None, seq_axis, None, None),
                       P(None, seq_axis, None, None), P()),

@@ -3,7 +3,8 @@
 Applies core/powersgd to the DENSE 2D parameters' gradients; WASI-factored
 layers are skipped (their gradients are already rank-K). The cross-replica
 mean of the small P/Q factors runs as lax.pmean inside shard_map over the
-DP axes, which is exactly the collective the compression shrinks.
+DP axes — train/step.py (make_train_step(..., mesh=...)) is the wiring,
+and the pmean is exactly the collective the compression shrinks.
 
 On a single device (tests) the mean is an identity and the algorithm
 degenerates to plain low-rank gradient smoothing with error feedback.
@@ -17,12 +18,24 @@ import jax.numpy as jnp
 
 from repro.core.powersgd import PowerSGDState, compress_decompress, powersgd_init
 
+# leaf-name suffixes that are already low-rank factors or packing metadata:
+# WASI (L, R) pairs, tenancy adapter (La, Ra) delta pairs, and the int8
+# per-channel scale leaves quant/quantize.py stores next to packed weights.
+# None of these may enter the PowerSGD path — the factors are the
+# compression, and a scale/int8 leaf has no meaningful dense gradient.
+_FACTOR_SUFFIXES = ("/L", "/R", "/La", "/Ra", "/Lq", "/Rq",
+                    "/sL", "/sR", "/sW", "/sLa", "/sRa")
+
 
 def _is_compressible(path: str, leaf) -> bool:
     if getattr(leaf, "ndim", 0) != 2:
         return False
-    # dense 2D weights only; factored L/R and tiny tables excluded
-    if path.endswith("/L") or path.endswith("/R"):
+    # dense FLOAT 2D weights only; int8-packed leaves carry no gradient
+    dt = getattr(leaf, "dtype", None)
+    if dt is not None and not jnp.issubdtype(dt, jnp.floating):
+        return False
+    # factored L/R, adapter La/Ra, quant scale leaves and tiny tables excluded
+    if path.endswith(_FACTOR_SUFFIXES):
         return False
     return min(leaf.shape) >= 64
 
@@ -34,15 +47,20 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
-def init_compression(key, params, rank: int) -> dict[str, PowerSGDState]:
-    """State dict keyed by leaf path for every compressible gradient."""
+def init_compression(key, params, rank: int, *,
+                     local_copies: int = 0) -> dict[str, PowerSGDState]:
+    """State dict keyed by leaf path for every compressible gradient.
+
+    ``local_copies=D`` allocates per-replica error buffers (D, O, I) for a
+    D-way DP mesh (see powersgd_init); 0 keeps the single-device (O, I)."""
     states = {}
     flat = jax.tree_util.tree_flatten_with_path(params)[0]
     for i, (path, leaf) in enumerate(flat):
         ps = _path_str(path)
         if _is_compressible(ps, leaf):
             states[ps] = powersgd_init(jax.random.fold_in(key, i),
-                                       leaf.shape, rank)
+                                       leaf.shape, rank,
+                                       local_copies=local_copies)
     return states
 
 
@@ -64,8 +82,21 @@ def compress_gradients(grads, states: dict[str, PowerSGDState],
     return jax.tree_util.tree_unflatten(treedef, [x for x in out]), new_states
 
 
+def measured_collective_savings(step_fn, state, batch) -> dict[str, int]:
+    """MEASURED per-device collective bytes of one compiled train step.
+
+    ``step_fn`` is a mesh-carrying step (make_train_step(..., mesh=...));
+    the returned dict is collectives.collective_bytes of its post-SPMD HLO
+    — an observation of what actually crosses the DP axis, unlike the
+    analytic ``collective_savings`` below."""
+    from repro.distributed.collectives import measured_collective_bytes
+
+    return measured_collective_bytes(step_fn, state, batch)
+
+
 def collective_savings(params, states: dict[str, PowerSGDState]) -> dict:
-    """Bytes over the DP axis: dense all-reduce vs PowerSGD factors."""
+    """ANALYTIC bytes over the DP axis: dense all-reduce vs PowerSGD factors.
+    Prefer ``measured_collective_savings`` when a compiled step exists."""
     import numpy as np
 
     flat = jax.tree_util.tree_flatten_with_path(params)[0]

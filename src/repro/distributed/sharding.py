@@ -173,6 +173,39 @@ def spec_for_path(path_str: str, leaf, policy: MeshPolicy,
     return P()  # replicate by default (norms, scalars)
 
 
+class _Ndim:
+    def __init__(self, n: int):
+        self.ndim = n
+
+
+def site_sharding(spec, policy: MeshPolicy,
+                  rules=LM_RULES) -> tuple[tuple[str, tuple], ...]:
+    """Resolve one plan site (api.plan.LinearSpec) against the path-rule
+    table: ((leaf, PartitionSpec entries), ...) for every weight leaf the
+    site's mode implies — (L, R) for factored, w for dense/project, plus b
+    when biased and the (replicated) La/Ra pair when an adapter is stamped.
+    This is what SubspacePlan.with_sharding() freezes into the plan."""
+    nd = 3 if spec.role == "moe" else 2  # MoE banks carry the expert dim
+    # plan site names say "moe/..."; the param-tree paths the rule table
+    # matches say ".../experts/..." — translate before matching
+    site = spec.name.replace("moe/", "experts/")
+    leaves = ["L", "R"] if spec.mode == "factored" else ["w"]
+    if spec.bias:
+        leaves.append("b")
+    if spec.adapter is not None:
+        leaves += ["La", "Ra"]
+    out = []
+    for leaf in leaves:
+        if leaf in ("La", "Ra"):
+            p = P()  # per-tenant deltas are replicated, never mesh-sharded
+        else:
+            p = spec_for_path(f"{site}/{leaf}",
+                              _Ndim(1 if leaf == "b" else nd),
+                              policy, rules, scan_prefix=False)
+        out.append((leaf, tuple(p)))
+    return tuple(out)
+
+
 def param_specs(params, policy: MeshPolicy, rules=LM_RULES):
     """Pytree of PartitionSpecs matching ``params``."""
     return jax.tree_util.tree_map_with_path(

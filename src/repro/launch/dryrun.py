@@ -21,7 +21,6 @@ Usage:
 """
 import argparse
 import json
-import re
 import time
 
 import jax
@@ -30,42 +29,13 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 import repro.configs as configs
 from repro.config import SHAPES, ModelConfig, ShapeConfig, TrainConfig
+# the HLO collective-bytes parser moved to distributed/collectives.py once
+# the real train/serve paths started consuming it too (fig_comm.py,
+# grad_compress.measured_collective_savings); re-exported here for callers
+# that still import it from the dryrun module
+from repro.distributed.collectives import collective_bytes  # noqa: F401
 from repro.launch.mesh import make_policy, make_production_mesh
 from repro.launch import specs as S
-
-DTYPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s64|u64|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
-BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
-         "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
-         "pred": 1, "c64": 8, "c128": 16}
-COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-               "collective-permute")
-
-
-def _shape_bytes(m) -> int:
-    dt, dims = m.group(1), m.group(2)
-    n = 1
-    for d in dims.split(","):
-        if d:
-            n *= int(d)
-    return n * BYTES[dt]
-
-
-def collective_bytes(hlo_text: str) -> dict[str, int]:
-    """Sum RESULT sizes of collective ops in post-SPMD HLO (per device)."""
-    out = {c: 0 for c in COLLECTIVES}
-    out["count"] = 0
-    for line in hlo_text.splitlines():
-        ls = line.strip()
-        for c in COLLECTIVES:
-            # match op lines: "%x = TYPE[dims] all-reduce(...)" (incl. -start)
-            if re.search(rf"\b{c}(-start)?\(", ls):
-                m = DTYPE_RE.search(ls)
-                if m:
-                    out[c] += _shape_bytes(m)
-                    out["count"] += 1
-                break
-    out["total"] = sum(out[c] for c in COLLECTIVES)
-    return out
 
 
 # ---------------------------------------------------------------------------

@@ -11,6 +11,20 @@ import jax
 from repro.distributed.sharding import MeshPolicy
 
 
+def make_host_mesh(n: int | None = None, axis: str = "data"):
+    """1-D data-parallel mesh over the visible devices — the mesh the DP
+    train step (train/step.py) and mesh ServeEngine actually run on. Under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` this is N
+    simulated host devices (tests/test_mesh_parity.py, CI multidevice
+    job); on a real slice it is the local accelerators. ``n`` takes the
+    first n devices (default: all of them)."""
+    count = len(jax.devices()) if n is None else n
+    if count > len(jax.devices()):
+        raise ValueError(f"asked for a {count}-device mesh but only "
+                         f"{len(jax.devices())} devices are visible")
+    return jax.sharding.Mesh(jax.devices()[:count], (axis,))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

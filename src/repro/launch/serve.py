@@ -168,6 +168,11 @@ def main():
                     help="device-resident adapter LRU capacity "
                          "(tenant churn past it swaps bank rows, never "
                          "re-jits)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="shard the dense slot pool across an N-device "
+                         "mesh (weights replicate, KV slots shard on the "
+                         "batch axis; 0 = single device). Excludes "
+                         "--paged/--spec-k/--adapters")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -189,6 +194,9 @@ def main():
                         prefill_chunk=args.prefill_chunk or None,
                         prefill_every=args.prefill_every,
                         prefix_cache=not args.no_prefix_cache)
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+        paged_kw.update(mesh=make_host_mesh(args.mesh))
     if args.ckpt:
         params, plan, _ = api.convert.load_checkpoint(args.ckpt)
         if plan is None:
@@ -239,6 +247,10 @@ def main():
         ptag = (f" paged pg={s['page_size']} pages={s['total_pages']} "
                 f"chunks={s['prefill_chunks']} "
                 f"prefix_hits={s['prefix_hit_tokens']}")
+    if args.mesh:
+        ptag += (f" mesh={s['mesh_devices']}dev "
+                 f"({s['slots_per_device']} slots, "
+                 f"{s['cache_bytes_per_device'] / 2**20:.2f}MiB KV each)")
     print(f"[serve] arch={cfg.name} wasi={cfg.wasi.method}{qtag}{stag} "
           f"sched={s['scheduler']} slots={slots} requests={args.batch} "
           f"wall={dt:.2f}s weights={s['weight_mib']:.2f}MiB "

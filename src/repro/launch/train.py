@@ -23,17 +23,29 @@ from repro.checkpoint import CheckpointManager
 from repro.config import TrainConfig
 from repro.data.synthetic import SyntheticAudio, SyntheticLM
 from repro.train.loop import train_loop
-from repro.train.step import make_train_state, make_train_step
+from repro.train.step import (
+    dp_batch_sharding,
+    dp_state_shardings,
+    make_train_state,
+    make_train_step,
+)
 
 
 def build(arch: str, *, smoke: bool, batch: int, seq: int, wasi: str | None,
-          tcfg: TrainConfig):
+          tcfg: TrainConfig, mesh=None):
+    """``mesh`` (a 1-D DP mesh, launch.mesh.make_host_mesh) switches the
+    returned step to the shard_map data-parallel path with factor-only
+    gradient collectives; the state is built per-replica-aware
+    (dp_degree) and pre-placed, and the plan carries its sharding stamp."""
     cfg = configs.get_smoke(arch) if smoke else configs.get(arch)
     if wasi is not None:
         cfg = cfg.replace(wasi=dataclasses.replace(cfg.wasi, method=wasi))
     # resolve the subspace plan ONCE (with the training activation-shape
     # hint) and install it — every linear below reads this plan
-    plan = api.install(api.resolve(cfg, batch=batch, seq=seq))
+    plan = api.resolve(cfg, batch=batch, seq=seq)
+    if mesh is not None:
+        plan = plan.with_sharding()
+    plan = api.install(plan)
     key = jax.random.PRNGKey(tcfg.seed)
     dtype = jnp.dtype(cfg.dtype)
     if cfg.family == "encdec":
@@ -53,8 +65,15 @@ def build(arch: str, *, smoke: bool, batch: int, seq: int, wasi: str | None,
         loss_fn = lm_loss
         data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=seq,
                            global_batch=batch, seed=tcfg.seed)
-    state = make_train_state(key, params, cfg, tcfg, asi_states=asi)
-    step = make_train_step(loss_fn, cfg, tcfg)
+    dp = mesh.devices.size if mesh is not None else 0
+    state = make_train_state(key, params, cfg, tcfg, asi_states=asi,
+                             dp_degree=dp)
+    step = make_train_step(loss_fn, cfg, tcfg, mesh=mesh)
+    if mesh is not None:
+        if batch % dp:
+            raise ValueError(f"--batch {batch} must divide across the "
+                             f"{dp}-device mesh")
+        state = jax.device_put(state, dp_state_shardings(state, mesh))
     return cfg, plan, state, step, data
 
 
@@ -73,6 +92,9 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--memprof", action="store_true",
                     help="log measured memory columns (utils/memprof.py)")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="data-parallel over an N-device mesh (factor-only "
+                         "gradient collectives; N=0 single device)")
     ap.add_argument("--print-plan", action="store_true",
                     help="print the resolved SubspacePlan and exit")
     args = ap.parse_args()
@@ -89,18 +111,34 @@ def main():
                 wasi=dataclasses.replace(cfg.wasi, method=args.wasi))
         print(api.resolve(cfg, batch=args.batch, seq=args.seq).summary())
         return
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(args.mesh)
     cfg, plan, state, step, data = build(args.arch, smoke=not args.full,
                                          batch=args.batch, seq=args.seq,
-                                         wasi=args.wasi, tcfg=tcfg)
+                                         wasi=args.wasi, tcfg=tcfg, mesh=mesh)
     print(f"[train] arch={cfg.name} wasi={cfg.wasi.method} "
           f"params={sum(x.size for x in jax.tree.leaves(state.params)):,}")
+    batch_sharding = None
+    if mesh is not None:
+        batch_sharding = dp_batch_sharding(mesh)
+        # MEASURED per-step collective bytes of the compiled DP step — the
+        # factor-only communication story as an observation, not a formula
+        from repro.distributed.collectives import measured_collective_bytes
+        cb = measured_collective_bytes(
+            step, state, jax.device_put(data.batch(0), batch_sharding))
+        print(f"[train] mesh={mesh.devices.size}dev per-step collective "
+              f"bytes: total={cb['total']:,} "
+              f"(all-reduce={cb['all-reduce']:,} over {cb['count']} ops)")
     # plan-bearing checkpoints: the manifest carries the resolved plan, so
     # the checkpoint restores for serving / dense export with no config
     ckpt = CheckpointManager(tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints,
                              plan=plan, label="train_state") \
         if args.ckpt_dir else None
     state, hist = train_loop(state, step, lambda s: data.batch(s), tcfg,
-                             ckpt=ckpt, memprof=args.memprof)
+                             ckpt=ckpt, memprof=args.memprof,
+                             batch_sharding=batch_sharding)
     print(f"[train] done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
     if args.memprof:
         print(f"[train] live-bytes watermark: "

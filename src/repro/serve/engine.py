@@ -37,6 +37,16 @@ Design (the TrainDeeploy lesson: kernel and serving loop co-designed):
   never read back; paged dead rows carry an all-zero page-table row, so
   their writes land on the reserved trash page.
 
+* MESH mode (`mesh=...`): the dense engine sharded over a device mesh —
+  weights (f32 or int8 factors) replicated on every device, the KV slot
+  pool sharded across devices on the cache BATCH axis, so `max_slots`
+  scales with the mesh while every executable stays
+  one-per-bucket. Each slot's decode math is row-independent, so mesh
+  generations are bitwise-identical to the single-device dense engine
+  (tests/test_mesh_parity.py pins this, f32 and int8). Paged pools,
+  speculative decoding and tenant adapters keep their single-device
+  engines for now — mesh serves the dense oracle path.
+
 * Sampling is DEVICE-SIDE (`serve/sampling.py`): per-slot temperature /
   top-k / top-p / RNG key arrays ride into the jitted prefill and decode
   steps, which return sampled int32 tokens — the host never round-trips
@@ -64,6 +74,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.api.plan import SubspacePlan, install, installed, plan_of
 from repro.config import ModelConfig
@@ -115,7 +126,8 @@ class ServeEngine:
                  spec_k: int = 0,
                  draft: str = "int8",
                  adapters=None,
-                 adapter_slots: int = 4):
+                 adapter_slots: int = 4,
+                 mesh: Mesh | None = None):
         if cfg is None:
             if plan is None:
                 raise ValueError("ServeEngine needs a ModelConfig or a "
@@ -231,6 +243,33 @@ class ServeEngine:
                 "(sliding-window or recurrent state); serve it dense or use "
                 "paged='auto'")
         self.paged = bool(paged)
+
+        # -- mesh mode: dense slots sharded across devices -----------------
+        self.mesh = mesh
+        if mesh is not None:
+            n = mesh.devices.size
+            if self.paged:
+                raise ValueError(
+                    "mesh serving shards the DENSE slot pool on the cache "
+                    "batch axis; the paged pool's page tables are "
+                    "single-device — serve paged without a mesh")
+            if self.spec_k:
+                raise ValueError("speculative decoding is single-device; "
+                                 "drop spec_k or the mesh")
+            if self.adapters is not None:
+                raise ValueError("tenant adapter banks are single-device; "
+                                 "drop adapters or the mesh")
+            if max_slots % n:
+                raise ValueError(
+                    f"max_slots ({max_slots}) must divide evenly across the "
+                    f"{n}-device mesh — every device holds max_slots/{n} "
+                    "cache rows")
+            # weights replicate; KV shards on the batch (slot) axis — cache
+            # leaves are (repeat, B, ...), batch at axis 1 for every layout
+            self._repl = NamedSharding(mesh, P())
+            self._cache_shard = NamedSharding(
+                mesh, P(None, tuple(mesh.axis_names)))
+            self.params = params = jax.device_put(params, self._repl)
         dtype = jnp.dtype(cfg.dtype)
         if self.paged:
             self.page_size = int(page_size)
@@ -268,6 +307,8 @@ class ServeEngine:
             self.pool = self.radix = None
             self.caches = init_lm_cache(cfg, max_slots, max_cache,
                                         dtype=dtype)
+            if mesh is not None:
+                self.caches = jax.device_put(self.caches, self._cache_shard)
         self.slots: list[Request | None] = [None] * max_slots
         # per-slot decode state, row-aligned with the cache batch axis:
         # position / next input token, plus the device-side sampling
@@ -291,6 +332,16 @@ class ServeEngine:
                       "spec_accepted_tokens": 0, "spec_page_shrinks": 0,
                       "adapter_evictions": 0}
 
+        def _pin(caches):
+            # mesh mode: keep the returned cache pytree sharded on the slot
+            # axis — without the constraint the row gather/scatter in
+            # prefill can make XLA fall back to a replicated layout
+            if mesh is None:
+                return caches
+            return jax.tree.map(
+                lambda c: jax.lax.with_sharding_constraint(
+                    c, self._cache_shard), caches)
+
         def _merged(params_, banks, aix):
             # trace-time branch: a no-adapter engine passes banks=None and
             # compiles the EXACT pre-tenancy computation; an adapter
@@ -309,7 +360,7 @@ class ServeEngine:
                                             toks, caches, pos, cfg,
                                             page_table=table)
             nxt = sample_tokens(logits, temp, tk, tp, seeds, counts)
-            return nxt, caches
+            return nxt, _pin(caches)
 
         def _prefill(params_, banks, aix, toks, caches, valid_len, rows,
                      temp, tk, tp, seeds):
@@ -323,7 +374,7 @@ class ServeEngine:
             new = jax.tree.map(lambda g, l: g.at[:, rows].set(l), caches, sub)
             first = sample_tokens(logits[:, 0], temp, tk, tp, seeds,
                                   jnp.zeros_like(seeds, jnp.int32))
-            return first, new
+            return first, _pin(new)
 
         def _prefill_chunk(params_, banks, aix, toks, caches, offset,
                            valid_len, table, temp, tk, tp, seeds):
@@ -485,9 +536,25 @@ class ServeEngine:
         return self.radix.clear() if self.radix is not None else 0
 
     def check_invariants(self) -> None:
-        """Audit the paged bookkeeping (no-op in dense mode): pool
+        """Audit the paged bookkeeping (no-op in plain dense mode): pool
         structure is sound and every page's refcount equals its holder
-        count (slots holding it in their table + radix nodes)."""
+        count (slots holding it in their table + radix nodes). Mesh
+        engines additionally audit the cache placement: every leaf still
+        sharded over the full mesh on the slot axis, one equal-size shard
+        per device (a silent fallback to replicated layout would be a
+        correctness-preserving but capacity-destroying regression)."""
+        if self.mesh is not None:
+            n = self.mesh.devices.size
+            for leaf in jax.tree.leaves(self.caches):
+                shards = leaf.addressable_shards
+                if len(shards) != n:
+                    raise AssertionError(
+                        f"cache leaf lost mesh sharding: {len(shards)} "
+                        f"shards for a {n}-device mesh")
+                if shards[0].data.shape[1] * n != leaf.shape[1]:
+                    raise AssertionError(
+                        f"cache leaf not sharded on the slot axis: local "
+                        f"{shards[0].data.shape} vs global {leaf.shape}")
         if not self.paged:
             return
         self.pool.check()
@@ -1019,6 +1086,12 @@ class ServeEngine:
         s["scheduler"] = getattr(self.sched, "name", type(self.sched).__name__)
         s["paged"] = self.paged
         s["cache_bytes"] = self.cache_bytes()
+        if self.mesh is not None:
+            s["mesh_devices"] = int(self.mesh.devices.size)
+            s["slots_per_device"] = self.max_slots // int(
+                self.mesh.devices.size)
+            s["cache_bytes_per_device"] = (s["cache_bytes"]
+                                           // int(self.mesh.devices.size))
         if self.paged:
             s["page_size"] = self.page_size
             s["total_pages"] = self.pool.total_pages

@@ -21,9 +21,14 @@ def train_loop(state: TrainState, step_fn, batch_fn: Callable[[int], dict],
                tcfg: TrainConfig, *, log_every: int = 10,
                ckpt: CheckpointManager | None = None,
                max_steps: int | None = None, memprof: bool = False,
+               batch_sharding=None,
                log_fn=print) -> tuple[TrainState, list[dict]]:
     """Runs up to ``max_steps or tcfg.steps``; resumes from the latest
     checkpoint if ``ckpt`` has one. Returns (final_state, metrics_history).
+
+    ``batch_sharding`` (a NamedSharding from train.step.dp_batch_sharding)
+    places each host batch across the DP mesh before the step — required
+    when ``step_fn`` came from make_train_step(..., mesh=...).
 
     ``memprof`` adds MEASURED memory columns to every logged step: live
     jax-array bytes at the step boundary and the watermark across the run
@@ -46,6 +51,8 @@ def train_loop(state: TrainState, step_fn, batch_fn: Callable[[int], dict],
     for step in range(start, total):
         timer.start()
         batch = batch_fn(step)
+        if batch_sharding is not None:
+            batch = jax.device_put(batch, batch_sharding)
         state, metrics = jit_step(state, batch)
         if watermark is not None:
             jax.block_until_ready(metrics)

@@ -5,6 +5,18 @@ One jittable pure function over a single TrainState pytree, so the same
 step lowers for the single-pod (16x16) and multi-pod (2x16x16) meshes in
 launch/dryrun.py and runs eagerly in CPU tests.
 
+``make_train_step(..., mesh=...)`` wraps that same function in shard_map
+over the policy's DP axes with FACTOR-ONLY gradient communication:
+WASI-factored sites all-reduce their rank-K dL/dR directly (the factors
+ARE the compressor — K(O+I) bytes instead of O*I), and the remaining
+dense 2D sites go through the distributed/grad_compress.py PowerSGD path
+whose small P/Q factors are the only thing that crosses the mesh. Every
+non-gradient collective is a scalar (loss/metric pmeans). State stays
+replicated except the PER-REPLICA buffers — PowerSGD error feedback and
+ASI activation-subspace warm-starts — which carry a leading device axis
+sharded over DP (each worker tracks its own local statistics; no sync
+collective, see core/powersgd.py).
+
 WASI maintenance per update mode:
 * factored — every ``refresh_every`` steps, re-orthogonalize each (L, R)
   pair (wsi_refresh_factored: one fused CholeskyQR per pair). The refresh
@@ -16,11 +28,11 @@ WASI maintenance per update mode:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.api.bind import extract_project_factors, map_factored
 from repro.config import ModelConfig, TrainConfig
@@ -29,6 +41,7 @@ from repro.core.project import (
     project_forward_params,
     update_project_states,
 )
+from repro.core.powersgd import PowerSGDState
 from repro.core.wsi import wsi_refresh_factored
 from repro.distributed.grad_compress import compress_gradients, init_compression
 from repro.distributed.sharding import MeshPolicy
@@ -50,7 +63,10 @@ class TrainState(NamedTuple):
 
 
 def make_train_state(key, params, cfg: ModelConfig, tcfg: TrainConfig, *,
-                     asi_states=None, use_epsilon_ranks: bool = False) -> TrainState:
+                     asi_states=None, use_epsilon_ranks: bool = False,
+                     dp_degree: int = 0) -> TrainState:
+    """``dp_degree=D`` sizes the PowerSGD error buffers for a D-way DP mesh
+    (per-replica error feedback, leading device axis); 0 = single device."""
     wsi = None
     if cfg.wasi.project:
         # converted checkpoints (api.convert.factorize, project mode) carry
@@ -61,20 +77,95 @@ def make_train_state(key, params, cfg: ModelConfig, tcfg: TrainConfig, *,
                                   warm=warm)
     psgd = None
     if tcfg.powersgd_rank > 0:
-        psgd = init_compression(key, params, tcfg.powersgd_rank)
+        psgd = init_compression(key, params, tcfg.powersgd_rank,
+                                local_copies=dp_degree)
+    if dp_degree and asi_states is not None:
+        # ASI warm-starts are per-worker statistics (each replica tracks its
+        # own local activation subspace — no sync collective): give every
+        # leaf a leading device axis the DP step shards, like psgd.error.
+        asi_states = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (dp_degree,) + x.shape),
+            asi_states)
     return TrainState(params=params, opt=init_optimizer(params, tcfg),
                       asi=asi_states, wsi=wsi, psgd=psgd,
                       step=jnp.zeros((), jnp.int32))
 
 
 def make_train_step(loss_fn, cfg: ModelConfig, tcfg: TrainConfig, *,
-                    policy: MeshPolicy | None = None, mean_fn=None):
+                    policy: MeshPolicy | None = None, mean_fn=None,
+                    mesh: Mesh | None = None):
     """loss_fn(params, batch, cfg, states=..., policy=...) -> (loss, (ns, metrics)).
 
     Returns step(state, batch) -> (state, metrics).
+
+    With ``mesh`` the step is shard_map'd data-parallel over the policy's
+    batch axes (default ("data",)): the batch arrives sharded on its leading
+    dim, cross-replica averaging is lax.pmean — rank-K dL/dR for factored
+    sites, PowerSGD P/Q factors for dense sites when tcfg.powersgd_rank>0.
+    The state must then come from ``make_train_state(..., dp_degree=D)``
+    placed with :func:`dp_state_shardings`; batches with
+    :func:`dp_batch_sharding`. ``mean_fn`` must be None when mesh is given.
     """
     schedule = make_schedule(tcfg)
 
+    def build(mean_fn):
+        return _build_step(loss_fn, cfg, tcfg, policy, mean_fn, schedule)
+
+    if mesh is None:
+        return build(mean_fn)
+
+    if mean_fn is not None:
+        raise ValueError("pass either mesh or mean_fn, not both")
+    dp = _dp_axes(policy)
+    for ax in dp:
+        if ax not in mesh.axis_names:
+            raise ValueError(f"policy batch axis {ax!r} not in mesh "
+                             f"{mesh.axis_names}")
+
+    def pmean(x):
+        return jax.lax.pmean(x, dp)
+
+    inner = build(pmean)
+
+    def local_step(state: TrainState, batch):
+        # per-replica state (PowerSGD error, ASI warm-starts) arrives as a
+        # (1, ...) local shard of the (D, ...) buffer; the math runs on the
+        # squeezed view and the device axis is restored on the way out.
+        if state.psgd is not None:
+            state = state._replace(psgd={
+                k: s._replace(error=s.error[0])
+                for k, s in state.psgd.items()})
+        if state.asi is not None:
+            state = state._replace(asi=jax.tree.map(lambda x: x[0],
+                                                    state.asi))
+        new_state, metrics = inner(state, batch)
+        if new_state.psgd is not None:
+            new_state = new_state._replace(psgd={
+                k: s._replace(error=s.error[None])
+                for k, s in new_state.psgd.items()})
+        if new_state.asi is not None:
+            new_state = new_state._replace(asi=jax.tree.map(
+                lambda x: x[None], new_state.asi))
+        # only the loss/metric scalars cross the mesh beyond the gradient
+        # factors — pmean so every replica reports the global numbers
+        metrics = jax.tree.map(pmean, metrics)
+        return new_state, metrics
+
+    from repro.distributed.collectives import shard_map
+
+    def dp_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        sspecs = dp_state_specs(state, policy)
+        bspecs = jax.tree.map(lambda _: P(dp), batch)
+        return shard_map(local_step, mesh=mesh,
+                         in_specs=(sspecs, bspecs),
+                         out_specs=(sspecs, P()),
+                         check_rep=False)(state, batch)
+
+    return dp_step
+
+
+def _build_step(loss_fn, cfg: ModelConfig, tcfg: TrainConfig,
+                policy, mean_fn, schedule):
     def step(state: TrainState, batch) -> tuple[TrainState, dict]:
         params = state.params
         fwd_params = params
@@ -149,6 +240,37 @@ def make_train_step(loss_fn, cfg: ModelConfig, tcfg: TrainConfig, *,
                           step=state.step + 1), metrics
 
     return step
+
+
+def _dp_axes(policy: MeshPolicy | None) -> tuple[str, ...]:
+    return tuple(policy.batch) if policy is not None else ("data",)
+
+
+def dp_state_specs(state: TrainState, policy: MeshPolicy | None = None):
+    """PartitionSpecs for a DP TrainState: everything replicated except the
+    per-replica buffers — PowerSGD error feedback and ASI warm-starts —
+    whose leading device axis shards over the DP mesh axes."""
+    dp = _dp_axes(policy)
+    rep = jax.tree.map(lambda _: P(), state)
+    if state.psgd is not None:
+        rep = rep._replace(psgd={
+            k: PowerSGDState(q=P(), error=P(dp)) for k in state.psgd})
+    if state.asi is not None:
+        rep = rep._replace(asi=jax.tree.map(lambda _: P(dp), state.asi))
+    return rep
+
+
+def dp_state_shardings(state: TrainState, mesh: Mesh,
+                       policy: MeshPolicy | None = None):
+    """NamedShardings for jax.device_put of a DP TrainState."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        dp_state_specs(state, policy),
+                        is_leaf=lambda t: isinstance(t, P))
+
+
+def dp_batch_sharding(mesh: Mesh, policy: MeshPolicy | None = None):
+    """NamedSharding placing a batch's leading dim across the DP axes."""
+    return NamedSharding(mesh, P(_dp_axes(policy)))
 
 
 def _strip_lr(grads, params_template):

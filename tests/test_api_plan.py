@@ -89,6 +89,39 @@ def test_plan_json_roundtrip():
     assert back.batch == 2 and back.seq == 8
 
 
+def test_plan_sharding_stamp_roundtrips_and_summarizes():
+    """with_sharding stamps every spec with per-leaf PartitionSpec entries
+    that survive dumps/loads EXACTLY (tuples, not JSON lists) and show up
+    in the summary — a checkpointed plan replays onto a mesh unchanged."""
+    cfg = configs.get_smoke("qwen2-0.5b")
+    plan = api.resolve(cfg, batch=2, seq=8)
+    assert not plan.is_sharded
+    sp = plan.with_sharding()
+    assert sp.is_sharded and all(s.sharding for s in sp.specs)
+    for s in sp.specs:
+        if s.mode != "factored":
+            continue
+        leaves = dict(s.sharding)
+        assert set(leaves) >= {"L", "R"}
+        # the K-dim (L's dim 1, R's dim 0) is NEVER mesh-sharded — it is
+        # exactly the rank-K payload the factor-only collectives move
+        lL, lR = leaves["L"], leaves["R"]
+        assert len(lL) < 2 or lL[1] is None, (s.name, lL)
+        assert len(lR) < 1 or lR[0] is None, (s.name, lR)
+    # TP actually engages somewhere: some leaf lands on the model axis
+    assert any("model" in dict(s.sharding).get("L", ())
+               or "model" in dict(s.sharding).get("R", ())
+               or "model" in dict(s.sharding).get("w", ())
+               for s in sp.specs)
+    back = SubspacePlan.loads(sp.dumps())
+    assert back.specs == sp.specs          # sharding tuples bit-identical
+    assert back.is_sharded
+    assert "shard=" in sp.summary()
+    # unstamped plan round-trips to unstamped (None, not empty tuple)
+    back0 = SubspacePlan.loads(plan.dumps())
+    assert not back0.is_sharded
+
+
 def test_plan_of_memoizes_and_install_overrides():
     cfg = configs.get_smoke("qwen2-0.5b")
     assert plan_of(cfg) is plan_of(cfg)

@@ -71,3 +71,49 @@ def test_grad_compress_wrapper_skips_factored_params():
     assert not any("/L" in k or "/R" in k for k in states)
     sav = collective_savings(params, states)
     assert sav["ratio"] > 1.0
+
+
+def test_grad_compress_skips_int8_and_scale_leaves():
+    """int8-packed weights carry no dense gradient and per-channel scale
+    leaves are metadata: neither may get a PowerSGD state even when 2-D."""
+    from repro.distributed.grad_compress import init_compression
+
+    params = {"q": {"Lq": jnp.zeros((128, 96), jnp.int8),
+                    "Rq": jnp.zeros((96, 128), jnp.int8),
+                    "sL": jnp.zeros((128, 64)),     # clears the size floor
+                    "sR": jnp.zeros((96, 64)),
+                    "sW": jnp.zeros((128, 128)),
+                    "w": jnp.zeros((128, 128))}}
+    assert list(init_compression(KEY, params, 4)) == ["q/w"]
+
+
+def test_grad_compress_skips_adapter_leaves_on_full_plan_tree():
+    """Regression for the compressibility filter: on a FULL-config
+    adapter-stamped plan the per-tenant adapter rank (~224 for
+    qwen2-0.5b's large sites) clears the min-dim >= 64 size floor, so a
+    size-only filter handed 2-D La/Ra delta factors to PowerSGD — double
+    compression, and DP all-reduces their rank-r factors redundantly. The
+    smoke configs (adapter rank ~16) never trip this, hence the full
+    config under eval_shape (no large allocations)."""
+    import repro.configs as configs
+    from repro import api
+    from repro.distributed.grad_compress import init_compression
+    from repro.models.lm import init_lm
+    from repro.tenancy import init_adapters, merge_adapters
+
+    cfg = configs.get("qwen2-0.5b")
+    api.uninstall(cfg)
+    plan = api.install(api.resolve(cfg).with_adapter(0.25))
+    try:
+        ka = max(s.adapter for s in plan.specs if s.adapter is not None)
+        assert ka >= 64, f"adapter rank {ka} would not trip the size floor"
+        params = jax.eval_shape(lambda k: init_lm(k, cfg), KEY)
+        ads = jax.eval_shape(lambda k: init_adapters(k, params, plan), KEY)
+        merged = merge_adapters(params, ads)
+        paths = list(init_compression(KEY, merged, 4))
+        assert paths, "full tree has dense 2-D sites; filter went blind"
+        bad = [p for p in paths
+               if p.endswith(("/L", "/R", "/La", "/Ra", "/sLa", "/sRa"))]
+        assert not bad, f"factor/adapter leaves got PowerSGD states: {bad}"
+    finally:
+        api.uninstall(cfg)

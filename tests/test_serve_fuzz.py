@@ -337,6 +337,38 @@ def _run_tenant_scenario(world, tz, eng, seed, n_requests=4):
         assert gen == oracle[t][i][:len(gen)], (h.rid, t, gen, oracle[t][i])
 
 
+# -- sharded-engine interleavings ------------------------------------------
+
+@pytest.mark.multidevice
+@pytest.mark.parametrize("sched", ["fcfs", "spf", "priority"])
+def test_fuzz_sharded_interleavings(world, sched):
+    """The mesh engine — KV slots sharded over a 2-device sub-mesh of the
+    forced 8 — through the same seeded cancel / deadline-evict / admission
+    interleavings, judged against the single-device dense oracle. Every
+    drain additionally audits per-shard state: each device holds exactly
+    max_slots/2 cache rows and the sharding survived the scenario churn
+    (a dropped with_sharding_constraint would silently gather the cache
+    onto one device and pass the token checks)."""
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(2)
+    eng = ServeEngine(world["params"], world["cfg"], max_slots=2,
+                      max_cache=MAX_CACHE, buckets=(4, 8, 16),
+                      scheduler=sched, mesh=mesh)
+    base = {"fcfs": 0, "spf": 1000, "priority": 2000}[sched]
+    for seed in range(12):
+        _run_scenario(world, eng, sched, 400_000 + base + seed)
+        # drained-state audit, every shard, every scenario
+        eng.check_invariants()
+        for leaf in jax.tree.leaves(eng.caches):
+            shards = leaf.addressable_shards
+            assert len(shards) == mesh.devices.size
+            assert all(s.data.shape[1] == eng.max_slots // mesh.devices.size
+                       for s in shards)
+    assert eng.stats["completed"] + eng.stats["cancelled"] \
+        + eng.stats["evicted"] == 12 * 4
+
+
 @pytest.mark.parametrize("mode", ["dense", "paged"])
 def test_fuzz_tenant_interleavings(world, tenancy, mode):
     """Mixed adapter-vs-no-adapter batches under churn: a 2-row bank
