@@ -1,0 +1,150 @@
+"""Input-pipeline throughput: tokenize/pack/prefetch tokens/s and the
+measured prefetch stall fraction under an overlapped training run.
+
+MEASURED, not analytic — both numbers come out of the pipeline's own
+telemetry (``DeviceIterator.stats()``, data/pipeline.py):
+
+* ``train_input_tok_s`` — tokens/s the tokenize -> pack -> shuffle ->
+  ``device_put`` pipeline sustains on its own (no model in the loop): the
+  ceiling the input side offers the trainer;
+* ``train_input_stall_frac`` — fraction of wall time the TRAIN loop spent
+  blocked waiting on the host pipeline while actually training the smoke
+  LM on streamed text (warmed up past jit compile, then measured). The
+  acceptance criterion: < 0.15 — the background prefetcher must hide the
+  host work behind the device step, or streaming text would tax every
+  training run that uses it.
+
+Emits a BENCH_train.json row (schema v3, benchmarks/common.py), gated by
+``scripts/bench_gate.py --suite train`` (stall fraction regresses UP).
+Like fig_comm.py this module owns its process and is NOT in run.py —
+``--json`` MERGES its row into an existing records file (fig_comm's
+output) rather than clobbering it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import jax
+
+import repro.configs as configs
+from benchmarks.common import (SCHEMA_VERSION, csv_row, row_to_record,
+                               write_json)
+from repro.config import TrainConfig
+
+B, S = 8, 64
+ARCH = "qwen2-0.5b"
+ROW = f"input/train_stream_{ARCH}_smoke"
+PIPE_BATCHES = 48       # pipeline-only measurement window
+TRAIN_WARMUP = 3        # steps before the stall window opens (jit compile)
+TRAIN_STEPS = 16        # measured overlapped steps
+
+
+def _corpus() -> str:
+    from repro.data.source import write_corpus
+    root = os.path.join(tempfile.gettempdir(), "repro_bench_corpus")
+    if not os.path.isdir(root) or not os.listdir(root):
+        write_corpus(root, n_shards=4, docs_per_shard=256, seed=0)
+    return root
+
+
+def _dataset():
+    from repro.data.registry import TextDataset
+    return TextDataset(os.path.join(_corpus(), "*.txt"), seq_len=S,
+                       global_batch=B, seed=0)
+
+
+def _pipeline_only() -> tuple[float, float]:
+    """(tok/s, us per batch) of the bare pipeline — no model consuming."""
+    it = _dataset().iterator(prefetch=2)
+    try:
+        for _ in range(4):                  # shuffle-buffer fill + warmup
+            it.next_batch()
+        it.reset_stats()
+        t0 = time.perf_counter()
+        for _ in range(PIPE_BATCHES):
+            it.next_batch()
+        wall = time.perf_counter() - t0
+        tok_s = it.stats()["tok_s"]
+    finally:
+        it.close()
+    return tok_s, wall / PIPE_BATCHES * 1e6
+
+
+def _overlapped_stall() -> float:
+    """Stall fraction while the smoke LM actually trains on the stream."""
+    from repro.models.lm import init_lm, lm_loss
+    from repro.train.step import make_train_state, make_train_step
+
+    ds = _dataset()
+    cfg = configs.get_smoke(ARCH)
+    if ds.vocab_size > cfg.vocab_size:
+        cfg = cfg.replace(vocab_size=ds.vocab_size)
+    from repro import api
+    api.install(api.resolve(cfg, batch=B, seq=S))
+    tcfg = TrainConfig(optimizer="sgd", lr=0.1, checkpoint_every=0)
+    key = jax.random.PRNGKey(0)
+    state = make_train_state(key, init_lm(key, cfg), cfg, tcfg)
+    step = jax.jit(make_train_step(lm_loss, cfg, tcfg), donate_argnums=0)
+    it = ds.iterator(prefetch=2)
+    try:
+        for _ in range(TRAIN_WARMUP):
+            state, m = step(state, it.next_batch())
+        jax.block_until_ready(m)
+        it.reset_stats()
+        for _ in range(TRAIN_STEPS):
+            state, m = step(state, it.next_batch())
+        jax.block_until_ready(m)
+        stall = it.stats()["stall_frac"]
+    finally:
+        it.close()
+    return stall
+
+
+def run() -> list[str]:
+    tok_s, us = _pipeline_only()
+    stall = _overlapped_stall()
+    derived = ";".join([
+        f"train_input_tok_s={tok_s:.0f}",
+        f"train_input_stall_frac={stall:.4f}",
+        f"batch={B}", f"seq={S}", f"prefetch=2",
+    ])
+    return [csv_row(ROW, us, derived)]
+
+
+def merge_json(path: str, records: list[dict]) -> None:
+    """Merge records into ``path`` by row name (fig_comm's rows survive)."""
+    existing: list[dict] = []
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+        if payload.get("schema_version") != SCHEMA_VERSION:
+            raise SystemExit(f"bench_input: {path} is schema "
+                             f"{payload.get('schema_version')}, expected "
+                             f"{SCHEMA_VERSION} — refusing to merge")
+        new_names = {r["name"] for r in records}
+        existing = [r for r in payload.get("records", [])
+                    if r["name"] not in new_names]
+    write_json(path, sorted(existing + records, key=lambda r: r["name"]))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="merge this row into a stable-schema JSON file "
+                         "(creates it if absent)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    records = []
+    for row in run():
+        print(row)
+        records.append(row_to_record(row))
+    if args.json:
+        merge_json(args.json, records)
+
+
+if __name__ == "__main__":
+    main()

@@ -3,6 +3,7 @@ from repro.checkpoint.ckpt import (
     latest_step,
     load_manifest,
     restore_checkpoint,
+    restore_extra,
     restore_untyped,
     save_checkpoint,
     sweep_stale_tmp,

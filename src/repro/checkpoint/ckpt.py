@@ -93,12 +93,19 @@ def _build_from_spec(spec: dict, leaves: list):
 
 def save_checkpoint(ckpt_dir: str, step: int, tree, *,
                     process_index: int = 0, plan=None,
-                    label: str | None = None) -> str:
+                    label: str | None = None,
+                    extra: dict[str, Any] | None = None) -> str:
     """Synchronous sharded save. Returns the final directory path.
 
     ``plan`` (a SubspacePlan, or anything with ``to_json()``) and ``label``
     (e.g. "train_state" vs "params") ride in the manifest so the checkpoint
-    is loadable without a matching config in hand (api/convert.py)."""
+    is loadable without a matching config in hand (api/convert.py).
+
+    ``extra`` saves named side trees NEXT TO the main one — e.g. the data
+    pipeline's reader state (``{"reader": it.state()}``) — under their own
+    structural specs, restored template-free by :func:`restore_extra`. A
+    checkpoint without a given extra simply restores ``None`` for it, so
+    old checkpoints stay loadable."""
     final = os.path.join(ckpt_dir, f"step_{step}")
     tmp = final + f".tmp{process_index}"
     os.makedirs(tmp, exist_ok=True)
@@ -119,6 +126,25 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, *,
         manifest["label"] = label
     if plan is not None:
         manifest["plan"] = plan.to_json() if hasattr(plan, "to_json") else plan
+    if extra:
+        manifest["extras"] = {}
+        for name, ext_tree in extra.items():
+            if not re.fullmatch(r"[A-Za-z0-9_.-]+", name):
+                raise ValueError(f"extra name {name!r} must be a plain "
+                                 "filename token")
+            ext_leaves, _ = _leaf_paths(ext_tree)
+            ecounter = [0]
+            espec = _tree_spec(ext_tree, ecounter)
+            if espec is None or ecounter[0] != len(ext_leaves):
+                raise ValueError(
+                    f"extra {name!r} is not a plain dict/list/tuple tree "
+                    "of arrays — extras must restore template-free")
+            for i, leaf in enumerate(ext_leaves):
+                np.save(os.path.join(
+                    tmp, f"proc{process_index}_{name}_{i}.npy"),
+                    np.asarray(jax.device_get(leaf)))
+            manifest["extras"][name] = {"tree": espec,
+                                        "n_leaves": len(ext_leaves)}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -194,6 +220,21 @@ def restore_checkpoint(ckpt_dir: str, step: int, template, *,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def restore_extra(ckpt_dir: str, step: int, name: str, *,
+                  process_index: int = 0):
+    """Restore a named side tree saved via ``save_checkpoint(extra=...)``
+    (template-free, from its structural spec). Returns ``None`` when the
+    checkpoint predates the extra — callers decide whether that's fatal."""
+    m = load_manifest(ckpt_dir, step)
+    ext = (m.get("extras") or {}).get(name)
+    if ext is None:
+        return None
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    leaves = [np.load(os.path.join(d, f"proc{process_index}_{name}_{i}.npy"))
+              for i in range(ext["n_leaves"])]
+    return _build_from_spec(ext["tree"], leaves)
+
+
 def restore_untyped(ckpt_dir: str, step: int, *, process_index: int = 0):
     """Template-free restore from the manifest's structural tree spec:
     nested dicts/lists/tuples of numpy arrays (NamedTuple classes degrade
@@ -232,25 +273,31 @@ class CheckpointManager:
             self._thread.join()
             self._thread = None
 
-    def save_async(self, step: int, tree):
+    def save_async(self, step: int, tree, extra: dict | None = None):
         self.wait()
-        # snapshot on caller thread (device->host), write on background thread
-        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        # snapshot on caller thread (device->host), write on background
+        # thread — extras too: the reader state must be the one current AT
+        # the save point, not whenever the filesystem phase runs
+        snap = lambda t: jax.tree.map(
+            lambda x: np.asarray(jax.device_get(x)), t)
+        host_tree = snap(tree)
+        host_extra = {k: snap(v) for k, v in extra.items()} if extra else None
 
         def _write():
             save_checkpoint(self.dir, step, host_tree,
                             process_index=self.process_index,
-                            plan=self.plan, label=self.label)
+                            plan=self.plan, label=self.label,
+                            extra=host_extra)
             self._gc()
 
         self._thread = threading.Thread(target=_write, daemon=True)
         self._thread.start()
 
-    def save(self, step: int, tree):
+    def save(self, step: int, tree, extra: dict | None = None):
         self.wait()
         save_checkpoint(self.dir, step, tree,
                         process_index=self.process_index,
-                        plan=self.plan, label=self.label)
+                        plan=self.plan, label=self.label, extra=extra)
         self._gc()
 
     def restore_latest(self, template):
@@ -260,6 +307,12 @@ class CheckpointManager:
             return None, None
         return step, restore_checkpoint(self.dir, step, template,
                                         process_index=self.process_index)
+
+    def restore_extra(self, step: int, name: str):
+        """Named side tree of a published step (None when absent)."""
+        self.wait()
+        return restore_extra(self.dir, step, name,
+                             process_index=self.process_index)
 
     def _gc(self):
         steps = _published_steps(self.dir)

@@ -1,1 +1,6 @@
-from repro.data.synthetic import SyntheticLM, SyntheticVision, SyntheticAudio
+from repro.data.synthetic import (SyntheticLM, SyntheticVision,
+                                  SyntheticAudio, host_shard)
+from repro.data.tokenizer import ByteTokenizer, BpeTokenizer, get_tokenizer
+from repro.data.source import ShardedTextSource, write_corpus
+from repro.data.pipeline import DataIterator, DeviceIterator, PackedStream
+from repro.data.registry import TextDataset, make_dataset, DATA_REGISTRY

@@ -1,0 +1,292 @@
+"""Streaming tokenized input pipeline: windowing + document packing,
+shard interleaving, a seeded shuffle buffer, and a double-buffered
+background host->device prefetcher.
+
+Design contract (what the rest of the system relies on):
+
+* **Reader state is an explicit, fixed-shape pytree** — integer cursors
+  (per-shard doc index, interleave position, intra-doc token offset,
+  epoch, RNG draw counter) plus the shuffle-buffer contents. Every array
+  has the same shape at every step, so it checkpoints through the
+  plan-bearing ``CheckpointManager`` (an "extras" tree next to the train
+  state) and restores with shape validation.
+* **Generation is a pure function of (static corpus, state)** — given the
+  same shard files, tokenizer, and a restored state, the stream replays
+  elementwise identically. RNG draws are counter-keyed
+  (``default_rng((seed, draw_index))``), never hidden generator objects,
+  which is what makes the shuffle buffer checkpointable at all. This is
+  the property ``data/synthetic.py`` got for free from pure
+  ``(seed, step)`` batches, preserved across the move to stateful file
+  readers.
+* **Packing** concatenates documents (each terminated by EOS) into
+  ``seq_len + 1`` windows with NO padding — a window may span document
+  boundaries; the EOS token is the boundary marker the LM learns.
+  Windows interleave round-robin across this host's shards at document
+  granularity.
+* **The prefetcher overlaps host work with the device step**: a
+  background thread tokenizes/packs the next batches and ``device_put``\\ s
+  them (onto ``dp_batch_sharding`` when a mesh is live) while the device
+  runs the current step; the train loop only ever blocks when the host
+  falls behind, and that stall time is MEASURED (``stats()`` →
+  ``stall_frac``), benchmarked (``benchmarks/bench_input.py``) and gated.
+
+Resume correctness with prefetch: the producer runs AHEAD of the consumer,
+so the producer's cursor is the wrong thing to checkpoint. Each prefetched
+batch therefore carries the reader state valid for resuming AFTER it, and
+``DeviceIterator.state()`` returns the state attached to the most recently
+CONSUMED batch — save it at step N and the restored stream's first batch
+is exactly batch N.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class DataIterator(Protocol):
+    """What ``train_loop`` accepts alongside a plain ``batch_fn``: a
+    stateful stream with checkpointable reader state."""
+
+    def next_batch(self, step: int | None = None) -> dict: ...
+    def state(self) -> dict: ...
+    def restore(self, state: dict) -> None: ...
+
+
+class PackedStream:
+    """Deterministic doc -> token -> packed-window -> batch stream.
+
+    ``provider`` supplies this host's already-tokenized documents:
+    ``provider.n_owned`` shards, ``provider.token_docs(i)`` -> list of
+    int32 arrays (each INCLUDING its trailing EOS). Tokenization is the
+    provider's concern (cached per shard) so the stream's hot loop is
+    pure array slicing.
+    """
+
+    def __init__(self, provider, *, seq_len: int, batch_size: int,
+                 shuffle: int = 64, seed: int = 0):
+        if shuffle < 0:
+            raise ValueError(f"shuffle buffer size must be >= 0, got {shuffle}")
+        self.provider = provider
+        self.seq_len = int(seq_len)
+        self.batch_size = int(batch_size)
+        self.shuffle = int(shuffle)
+        self.seed = int(seed)
+        self._W = self.seq_len + 1
+        n = provider.n_owned
+        if n == 0:
+            raise ValueError("provider owns no shards")
+        self._n_docs = [len(provider.token_docs(i)) for i in range(n)]
+        if sum(self._n_docs) == 0:
+            raise ValueError("no documents in any owned shard "
+                             "(over-aggressive tenant filter?)")
+        self._st = self._init_state(n)
+
+    def _init_state(self, n_shards: int) -> dict:
+        return {
+            "doc_cursor": np.zeros((n_shards,), np.int64),
+            "shard_pos": np.zeros((), np.int64),
+            "tok_off": np.zeros((), np.int64),
+            "epoch": np.zeros((), np.int64),
+            "rng_calls": np.zeros((), np.int64),
+            "buf": np.zeros((max(self.shuffle, 1), self._W), np.int32),
+            "buf_fill": np.zeros((), np.int64),
+        }
+
+    # -- checkpointable state ------------------------------------------------
+    def state(self) -> dict:
+        return {k: v.copy() for k, v in self._st.items()}
+
+    def load_state(self, state: dict) -> None:
+        for k, tmpl in self._st.items():
+            v = np.asarray(state[k])
+            if v.shape != tmpl.shape:
+                raise ValueError(
+                    f"reader state leaf {k!r}: shape {v.shape} != "
+                    f"{tmpl.shape} — state from a different corpus/"
+                    "shuffle/seq_len configuration")
+            self._st[k] = v.astype(tmpl.dtype).copy()
+
+    # -- deterministic generation -------------------------------------------
+    def _draw(self, bound: int) -> int:
+        """Counter-keyed RNG: the draw index IS the state."""
+        i = int(self._st["rng_calls"])
+        self._st["rng_calls"] += 1
+        return int(np.random.default_rng((self.seed, 0x5B, i)).integers(bound))
+
+    def _next_doc_run(self, need: int) -> np.ndarray:
+        """Up to ``need`` tokens from the active document; advances the
+        (shard_pos, doc_cursor, tok_off) cursor, wrapping epochs."""
+        st = self._st
+        n = self.provider.n_owned
+        for _ in range(2 * n + 2):           # skip exhausted/empty shards
+            s = int(st["shard_pos"])
+            if int(st["doc_cursor"][s]) < self._n_docs[s]:
+                break
+            st["shard_pos"] = np.int64((s + 1) % n)
+            st["tok_off"] = np.int64(0)
+            if int(st["shard_pos"]) == 0 and \
+                    all(int(c) >= m for c, m in zip(st["doc_cursor"],
+                                                    self._n_docs)):
+                st["epoch"] += 1
+                st["doc_cursor"][:] = 0
+        else:
+            raise RuntimeError("no consumable document found — corpus empty?")
+        s = int(st["shard_pos"])
+        doc = self.provider.token_docs(s)[int(st["doc_cursor"][s])]
+        off = int(st["tok_off"])
+        run = doc[off:off + need]
+        if off + len(run) >= len(doc):       # document exhausted
+            st["doc_cursor"][s] += 1
+            st["tok_off"] = np.int64(0)
+            st["shard_pos"] = np.int64((s + 1) % n)   # interleave shards
+        else:
+            st["tok_off"] = np.int64(off + len(run))
+        return run
+
+    def _next_window(self) -> np.ndarray:
+        parts, have = [], 0
+        while have < self._W:
+            run = self._next_doc_run(self._W - have)
+            parts.append(run)
+            have += len(run)
+        return np.concatenate(parts).astype(np.int32)
+
+    def next_row(self) -> np.ndarray:
+        """One packed ``seq_len + 1`` row, through the shuffle buffer."""
+        st = self._st
+        if self.shuffle == 0:
+            return self._next_window()
+        while int(st["buf_fill"]) < self.shuffle:
+            st["buf"][int(st["buf_fill"])] = self._next_window()
+            st["buf_fill"] += 1
+        j = self._draw(self.shuffle)
+        out = st["buf"][j].copy()
+        st["buf"][j] = self._next_window()
+        return out
+
+    def next_batch(self, step: int | None = None) -> dict:
+        rows = np.stack([self.next_row() for _ in range(self.batch_size)])
+        return {"tokens": rows[:, :-1].astype(np.int32),
+                "labels": rows[:, 1:].astype(np.int32)}
+
+    # PackedStream itself satisfies DataIterator (synchronous flavor)
+    def restore(self, state: dict) -> None:
+        self.load_state(state)
+
+
+class DeviceIterator:
+    """Double-buffered background prefetcher over a :class:`PackedStream`.
+
+    A producer thread packs the next ``prefetch`` batches and places them
+    on device (``jax.device_put``; onto ``sharding`` when given, so a DP
+    mesh sees its batch pre-placed exactly like the synchronous
+    ``dp_batch_sharding`` path). ``next_batch`` pops the queue and records
+    how long it waited — ``stats()["stall_frac"]`` is the fraction of
+    wall time the consumer spent blocked on the host pipeline.
+    """
+
+    def __init__(self, stream: PackedStream, *, prefetch: int = 2,
+                 sharding=None, place: bool = True):
+        if prefetch < 1:
+            raise ValueError(f"prefetch depth must be >= 1, got {prefetch}")
+        self.stream = stream
+        self.prefetch = prefetch
+        self.sharding = sharding
+        self.place = place
+        self._err: BaseException | None = None
+        self.reset_stats()
+        self._start()
+
+    # -- producer ------------------------------------------------------------
+    def _start(self) -> None:
+        self._q: queue.Queue = queue.Queue(maxsize=self.prefetch)
+        self._stop = threading.Event()
+        self._resume_state = self.stream.state()
+        self._thread = threading.Thread(target=self._produce, daemon=True)
+        self._thread.start()
+
+    def _produce(self) -> None:
+        try:
+            while not self._stop.is_set():
+                batch = self.stream.next_batch()
+                after = self.stream.state()   # resume point AFTER this batch
+                if self.place:
+                    import jax
+                    batch = jax.device_put(batch, self.sharding) \
+                        if self.sharding is not None else \
+                        jax.device_put(batch)
+                while not self._stop.is_set():
+                    try:
+                        self._q.put((batch, after), timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
+        except BaseException as e:          # surfaced on the consumer side
+            self._err = e
+
+    # -- consumer ------------------------------------------------------------
+    def next_batch(self, step: int | None = None) -> dict:
+        t0 = time.perf_counter()
+        while True:
+            try:
+                batch, after = self._q.get(timeout=0.1)
+                break
+            except queue.Empty:
+                if self._err is not None:
+                    raise RuntimeError("input pipeline producer died") \
+                        from self._err
+        now = time.perf_counter()
+        if self._t0 is None:
+            self._t0 = t0
+        self._stall += now - t0
+        self._t_last = now
+        self._batches += 1
+        self._tokens += int(np.prod(batch["tokens"].shape))
+        self._resume_state = after
+        return batch
+
+    # -- checkpointable state ------------------------------------------------
+    def state(self) -> dict:
+        """Reader state as of the last CONSUMED batch — what to save."""
+        return self._resume_state
+
+    def restore(self, state: dict) -> None:
+        self._halt()
+        self.stream.load_state(state)
+        self._start()
+
+    def close(self) -> None:
+        self._halt()
+
+    def _halt(self) -> None:
+        self._stop.set()
+        while True:                          # unblock a producer mid-put
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5.0)
+
+    # -- measured input telemetry --------------------------------------------
+    def reset_stats(self) -> None:
+        self._t0 = None
+        self._t_last = 0.0
+        self._stall = 0.0
+        self._batches = 0
+        self._tokens = 0
+
+    def stats(self) -> dict:
+        """``tok_s`` (tokens consumed / wall), ``stall_frac`` (fraction of
+        wall the consumer waited on the host pipeline), over the window
+        since construction or the last ``reset_stats``."""
+        if self._t0 is None or self._t_last <= self._t0:
+            return {"tok_s": 0.0, "stall_frac": 0.0, "batches": 0}
+        wall = self._t_last - self._t0
+        return {"tok_s": self._tokens / wall,
+                "stall_frac": min(self._stall / wall, 1.0),
+                "batches": self._batches}

@@ -1,0 +1,211 @@
+"""Dataset registry: ONE construction path for ``--data`` and programmatic
+callers.
+
+``make_dataset("synthetic", cfg, ...)`` builds the family-matched
+procedural dataset (``data/synthetic.py``); ``make_dataset("text:<glob>",
+cfg, ...)`` builds a :class:`TextDataset` streaming real shard files
+through the tokenize/pack/prefetch pipeline (``data/pipeline.py``).
+Launchers (``launch/train.py --data``, ``launch/finetune_user.py``) and
+library callers share this table — adding a dataset means registering a
+builder here, not editing every CLI.
+
+:class:`TextDataset` is the text twin of ``SyntheticLM``: same
+``.batch(step, batch_size)`` random-access surface (a pure function of
+``(seed, step)`` — used by fine-tuning, eval, and the collective-bytes
+probe) and the same ``.for_tenant(uid)`` seam (a deterministic per-tenant
+CORPUS FILTER: the tenant's favorite topic bucket plus an ``offmix``
+fraction of everything else), PLUS ``.iterator(...)`` — the streaming,
+checkpointable, prefetching path ``train_loop`` consumes.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Callable
+
+import numpy as np
+
+from repro.data.pipeline import DeviceIterator, PackedStream
+from repro.data.source import ShardedTextSource, doc_topic
+from repro.data.tokenizer import get_tokenizer
+
+
+class TextDataset:
+    """Sharded text corpus -> tokenized/packed batches, two access modes.
+
+    Tenant clones (``for_tenant``) share the host-side token cache with
+    their parent — the corpus is tokenized once per (shard, tokenizer)
+    regardless of how many tenants filter it.
+    """
+
+    def __init__(self, shards, *, seq_len: int, global_batch: int,
+                 seed: int = 0, tokenizer="byte", shuffle: int = 64,
+                 process_index: int = 0, process_count: int = 1,
+                 tenant: str | None = None, tenant_offmix: float = 0.15,
+                 tenant_topics: int = 8, _tok_cache: dict | None = None):
+        if isinstance(shards, str):
+            self.source = ShardedTextSource.from_glob(
+                shards, process_index, process_count)
+        else:
+            self.source = ShardedTextSource(shards, process_index,
+                                            process_count)
+        self.tokenizer = get_tokenizer(tokenizer) \
+            if isinstance(tokenizer, str) else tokenizer
+        self.seq_len = int(seq_len)
+        self.global_batch = int(global_batch)
+        self.seed = int(seed)
+        self.shuffle = int(shuffle)
+        self.tenant = tenant
+        self.tenant_offmix = float(tenant_offmix)
+        self.tenant_topics = int(tenant_topics)
+        # token cache: {owned_ix: [int32 doc tokens + EOS, ...]}, shared
+        # across tenant clones (same shards, same tokenizer)
+        self._tok_cache: dict[int, list[np.ndarray]] = \
+            _tok_cache if _tok_cache is not None else {}
+        self._filtered: dict[int, list[np.ndarray]] = {}
+
+    @property
+    def vocab_size(self) -> int:
+        return self.tokenizer.vocab_size
+
+    def for_tenant(self, uid: str | None) -> "TextDataset":
+        """This corpus filtered to tenant ``uid``'s sub-corpus: documents
+        in the tenant's favorite topic bucket, plus a deterministic
+        ``tenant_offmix`` fraction of off-topic documents (pure function
+        of (seed, uid, shard, doc) — no hidden RNG)."""
+        ds = TextDataset.__new__(TextDataset)
+        ds.__dict__.update(self.__dict__)
+        ds.tenant = uid
+        ds._filtered = {}
+        return ds
+
+    # -- tokenize + tenant filter (cached) -----------------------------------
+    def _raw_docs(self, owned_ix: int) -> list[np.ndarray]:
+        if owned_ix not in self._tok_cache:
+            eos = self.tokenizer.eos_id
+            self._tok_cache[owned_ix] = [
+                np.asarray(self.tokenizer.encode(d) + [eos], np.int32)
+                for d in self.source.docs(owned_ix)]
+        return self._tok_cache[owned_ix]
+
+    def _keep_doc(self, owned_ix: int, doc_ix: int, text: str) -> bool:
+        if self.tenant is None:
+            return True
+        fav = zlib.crc32(self.tenant.encode()) % self.tenant_topics
+        if doc_topic(text, self.tenant_topics) == fav:
+            return True
+        u = np.random.default_rng(
+            (self.seed, 0x7E, zlib.crc32(self.tenant.encode()),
+             owned_ix, doc_ix)).uniform()
+        return bool(u < self.tenant_offmix)
+
+    def token_docs(self, owned_ix: int) -> list[np.ndarray]:
+        """This shard's (tenant-filtered) tokenized documents."""
+        if owned_ix not in self._filtered:
+            raw = self._raw_docs(owned_ix)
+            texts = self.source.docs(owned_ix)
+            self._filtered[owned_ix] = [
+                t for i, (t, txt) in enumerate(zip(raw, texts))
+                if self._keep_doc(owned_ix, i, txt)]
+        return self._filtered[owned_ix]
+
+    @property
+    def n_owned(self) -> int:
+        return self.source.n_owned
+
+    # -- streaming path (train_loop) -----------------------------------------
+    def stream(self, *, batch_size: int | None = None) -> PackedStream:
+        return PackedStream(self, seq_len=self.seq_len,
+                            batch_size=batch_size or self.global_batch,
+                            shuffle=self.shuffle, seed=self.seed)
+
+    def iterator(self, *, batch_size: int | None = None, prefetch: int = 2,
+                 sharding=None, place: bool = True) -> DeviceIterator:
+        """The checkpointable prefetching iterator ``train_loop`` consumes
+        (``sharding``: a ``dp_batch_sharding`` when a mesh is live)."""
+        return DeviceIterator(self.stream(batch_size=batch_size),
+                              prefetch=prefetch, sharding=sharding,
+                              place=place)
+
+    # -- random-access path (finetune / eval / probes) -----------------------
+    def batch(self, step: int, batch_size: int | None = None) -> dict:
+        """A packed batch as a PURE function of ``(seed, step)`` — the
+        ``SyntheticLM.batch`` contract, kept so fine-tuning, held-out eval
+        (``tenancy.eval_ce``'s step-offset holdout) and one-shot probes
+        work unchanged on text. Rows start at a step-keyed random document
+        and pack forward (wrapping) exactly like the streaming path."""
+        b = batch_size or self.global_batch
+        docs = [d for i in range(self.n_owned) for d in self.token_docs(i)]
+        if not docs:
+            raise ValueError("tenant filter removed every document")
+        W = self.seq_len + 1
+        rng = np.random.default_rng((self.seed, 0xA7, step))
+        starts = rng.integers(len(docs), size=b)
+        rows = np.empty((b, W), np.int32)
+        for r, s0 in enumerate(starts):
+            parts, have, j = [], 0, int(s0)
+            while have < W:
+                parts.append(docs[j % len(docs)])
+                have += len(parts[-1])
+                j += 1
+            rows[r] = np.concatenate(parts)[:W]
+        return {"tokens": rows[:, :-1], "labels": rows[:, 1:]}
+
+
+# -- the registry ------------------------------------------------------------
+
+DATA_REGISTRY: dict[str, Callable] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        DATA_REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+@register("synthetic")
+def _build_synthetic(arg: str, cfg, *, batch: int, seq: int, seed: int = 0,
+                     **kw):
+    from repro.data.synthetic import (SyntheticAudio, SyntheticLM,
+                                      SyntheticVision)
+    if cfg.family == "encdec":
+        return SyntheticAudio(vocab_size=cfg.vocab_size, enc_seq=cfg.enc_seq,
+                              d_model=cfg.d_model, seq_len=seq,
+                              global_batch=batch, seed=seed)
+    if cfg.family == "vit":
+        # vision data shapes are not in ModelConfig — drivers pass them
+        return SyntheticVision(n_classes=kw["n_classes"],
+                               n_patches=kw["n_patches"],
+                               patch_dim=kw["patch_dim"], global_batch=batch,
+                               seed=seed)
+    return SyntheticLM(vocab_size=cfg.vocab_size, seq_len=seq,
+                       global_batch=batch, seed=seed)
+
+
+@register("text")
+def _build_text(arg: str, cfg, *, batch: int, seq: int, seed: int = 0,
+                tokenizer="byte", shuffle: int = 64, process_index: int = 0,
+                process_count: int = 1):
+    if not arg:
+        raise ValueError("text dataset needs a shard glob: --data "
+                         "'text:/path/to/corpus/*.txt'")
+    if cfg is not None and cfg.family != "lm":
+        raise ValueError(f"text streaming drives LM families only, "
+                         f"not {cfg.family!r}")
+    return TextDataset(arg, seq_len=seq, global_batch=batch, seed=seed,
+                       tokenizer=tokenizer, shuffle=shuffle,
+                       process_index=process_index,
+                       process_count=process_count)
+
+
+def make_dataset(spec: str, cfg, *, batch: int, seq: int, seed: int = 0,
+                 **kw):
+    """Resolve a ``--data`` spec (``synthetic`` | ``text:<glob>``) through
+    the registry. ``cfg`` is the ModelConfig (family/vocab hints); extra
+    keyword args flow to the builder."""
+    name, _, arg = spec.partition(":")
+    if name not in DATA_REGISTRY:
+        raise ValueError(f"unknown dataset {name!r}; registered: "
+                         f"{sorted(DATA_REGISTRY)}")
+    return DATA_REGISTRY[name](arg, cfg, batch=batch, seq=seq, seed=seed,
+                               **kw)

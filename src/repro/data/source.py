@@ -1,0 +1,135 @@
+"""Sharded text sources: local shard files + per-host shard assignment,
+plus a corpus writer so the offline container and CI have REAL files to
+stream (the container has no network, so "real text" means reproducibly
+materialized text with learnable structure, not iid noise).
+
+Layout convention: a corpus is a directory of ``shard_NNNNN.txt`` files,
+ONE DOCUMENT PER LINE, written by :func:`write_corpus`. Documents are
+topical — each line starts with its ``topic<t>`` tag and draws words from
+a topic-skewed Zipfian vocabulary over a shared backbone, so a model's CE
+measurably falls below log(V) when it learns the word structure, and the
+tenancy layer can carve per-tenant sub-corpora by topic
+(``data/registry.py::TextDataset.for_tenant``).
+
+Multi-host: :class:`ShardedTextSource` assigns shard files round-robin by
+``process_index`` (shard i belongs to host ``i % process_count``) — each
+host streams only its own files, no distributed filesystem coordination
+needed. Document iteration order inside a host is fully determined by
+(assignment, file order, line order), which is what makes the reader
+state in ``data/pipeline.py`` a handful of integer cursors.
+"""
+from __future__ import annotations
+
+import glob as _glob
+import os
+import re
+
+import numpy as np
+
+_SHARD_FMT = "shard_{:05d}.txt"
+_TOPIC_RE = re.compile(r"^topic(\d+)\b")
+
+# deterministic syllable inventory for the procedural corpus
+_ONSETS = ["b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z"]
+_NUCLEI = ["a", "e", "i", "o", "u", "ai", "ou"]
+
+
+def _word(rng: np.random.Generator) -> str:
+    return "".join(_ONSETS[rng.integers(len(_ONSETS))]
+                   + _NUCLEI[rng.integers(len(_NUCLEI))]
+                   for _ in range(int(rng.integers(1, 4))))
+
+
+def write_corpus(root: str, *, n_shards: int = 4, docs_per_shard: int = 128,
+                 seed: int = 0, n_topics: int = 8, vocab_words: int = 96,
+                 words_per_doc: tuple[int, int] = (6, 32)) -> list[str]:
+    """Materialize a reproducible multi-shard text corpus under ``root``.
+
+    Same arguments => byte-identical files (the writer is a pure function
+    of its parameters). Each document is ``topic<t> w1 w2 ...`` where the
+    words are Zipf-sampled from a topic-rotated slice of a shared word
+    list — enough bigram structure to learn, enough per-topic skew for
+    per-tenant corpus filters to mean something. Returns the shard paths.
+    """
+    os.makedirs(root, exist_ok=True)
+    base = np.random.default_rng((seed, 0xC0))
+    words = sorted({_word(base) for _ in range(vocab_words * 2)})[:vocab_words]
+    if len(words) < n_topics:
+        raise ValueError(f"vocab_words={vocab_words} too small for "
+                         f"{n_topics} topics")
+    paths = []
+    for s in range(n_shards):
+        rng = np.random.default_rng((seed, 1, s))
+        lines = []
+        for _ in range(docs_per_shard):
+            topic = int(rng.integers(n_topics))
+            # topic-rotated slice: each topic favors its own word window
+            lo = (topic * len(words)) // n_topics
+            n_w = int(rng.integers(words_per_doc[0], words_per_doc[1] + 1))
+            zipf = np.minimum(rng.zipf(1.6, size=n_w) - 1, len(words) - 1)
+            doc = " ".join(words[(lo + int(z)) % len(words)] for z in zipf)
+            lines.append(f"topic{topic} {doc}")
+        path = os.path.join(root, _SHARD_FMT.format(s))
+        with open(path, "w") as f:
+            f.write("\n".join(lines) + "\n")
+        paths.append(path)
+    return paths
+
+
+def doc_topic(text: str, n_topics: int = 8) -> int:
+    """Topic bucket of a document: its ``topic<t>`` tag when present,
+    else a stable content hash — so arbitrary (non-generated) corpora
+    still partition deterministically across tenants."""
+    m = _TOPIC_RE.match(text)
+    if m:
+        return int(m.group(1)) % n_topics
+    import zlib
+    return zlib.crc32(text.encode("utf-8")) % n_topics
+
+
+class ShardedTextSource:
+    """Shard files + per-host round-robin assignment keyed by process_index.
+
+    ``owned`` is this host's stable sub-list of the GLOBAL sorted shard
+    list; :meth:`docs` reads (and caches) one shard's documents. All
+    downstream cursor state indexes into ``owned``/``docs`` order, so a
+    restart on the same (shards, process_index, process_count) resumes
+    the identical stream.
+    """
+
+    def __init__(self, shards, process_index: int = 0, process_count: int = 1):
+        shards = sorted(shards)
+        if not shards:
+            raise ValueError("no shard files given")
+        if not 0 <= process_index < process_count:
+            raise ValueError(f"process_index {process_index} outside "
+                             f"process_count {process_count}")
+        if len(shards) < process_count:
+            raise ValueError(
+                f"{len(shards)} shard file(s) cannot feed {process_count} "
+                f"hosts round-robin — write at least one shard per host")
+        self.all_shards = list(shards)
+        self.process_index = process_index
+        self.process_count = process_count
+        self.owned = shards[process_index::process_count]
+        self._docs: dict[int, list[str]] = {}
+
+    @classmethod
+    def from_glob(cls, pattern: str, process_index: int = 0,
+                  process_count: int = 1) -> "ShardedTextSource":
+        paths = _glob.glob(pattern)
+        if not paths:
+            raise FileNotFoundError(f"no shard files match {pattern!r}")
+        return cls(paths, process_index, process_count)
+
+    @property
+    def n_owned(self) -> int:
+        return len(self.owned)
+
+    def docs(self, owned_ix: int) -> list[str]:
+        """Documents (one per line, blanks dropped) of owned shard i."""
+        if owned_ix not in self._docs:
+            with open(self.owned[owned_ix]) as f:
+                self._docs[owned_ix] = [ln.rstrip("\n") for ln in f
+                                        if ln.strip()]
+        return self._docs[owned_ix]

@@ -130,8 +130,18 @@ class SyntheticAudio:
 
 
 def host_shard(batch: dict, process_index: int, process_count: int) -> dict:
-    """Slice this host's rows (row-contiguous sharding over the batch dim)."""
+    """Slice this host's rows (row-contiguous sharding over the batch dim).
+
+    The batch dim must divide evenly: a silent floor-division here would
+    DROP the remainder rows on every host — data loss that surfaces only
+    as a mysteriously-smaller effective batch."""
     def slc(x):
+        if x.shape[0] % process_count:
+            raise ValueError(
+                f"batch dim {x.shape[0]} (shape {tuple(x.shape)}) is not "
+                f"divisible by process_count={process_count}: "
+                f"{x.shape[0] % process_count} row(s) would be silently "
+                "dropped — pick a global batch that divides across hosts")
         per = x.shape[0] // process_count
         return x[process_index * per:(process_index + 1) * per]
     return jax.tree.map(slc, batch)

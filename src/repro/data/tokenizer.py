@@ -1,0 +1,134 @@
+"""Deterministic, fully offline tokenizers for the streaming text pipeline.
+
+Two implementations share one duck-typed surface (``encode`` / ``decode`` /
+``vocab_size`` / ``eos_id`` / ``key``):
+
+* ``ByteTokenizer`` — UTF-8 bytes as ids 0..255 plus EOS. Zero training,
+  zero files, bijective on any text; the default for smoke/CI runs where
+  the container has no pretrained vocab.
+* ``BpeTokenizer`` — a BPE-lite vocab TRAINED offline on the corpus
+  itself: greedy highest-count pair merges over the byte stream, ids
+  appended after EOS. Deterministic (count then lexicographic tie-break),
+  JSON round-trip via ``save``/``load``; ``train`` is the only entry that
+  looks at data.
+
+``key`` is a stable fingerprint (algorithm + vocab content hash) used to
+key host-side token caches — two tokenizers with the same key MUST encode
+identically.
+"""
+from __future__ import annotations
+
+import collections
+import hashlib
+import json
+import os
+
+EOS_ID = 256          # first id past the 256 raw bytes
+BYTE_VOCAB = 257      # bytes + EOS
+
+
+class ByteTokenizer:
+    """UTF-8 byte-level: id = byte value, EOS appended by the pipeline."""
+
+    vocab_size = BYTE_VOCAB
+    eos_id = EOS_ID
+    key = f"byte:{BYTE_VOCAB}"
+
+    def encode(self, text: str) -> list[int]:
+        return list(text.encode("utf-8"))
+
+    def decode(self, ids) -> str:
+        return bytes(i for i in ids if 0 <= i < 256).decode(
+            "utf-8", errors="replace")
+
+
+class BpeTokenizer:
+    """BPE-lite over bytes: ``merges[i] = (a, b)`` creates id 257 + i.
+
+    Encoding applies merges in TRAINING order (rank order), which is the
+    classic deterministic BPE inference rule — no regex pre-splitting, so
+    the same code handles any byte stream.
+    """
+
+    def __init__(self, merges: list[tuple[int, int]]):
+        self.merges = [tuple(m) for m in merges]
+        self.vocab_size = BYTE_VOCAB + len(self.merges)
+        self.eos_id = EOS_ID
+        self._rank = {m: i for i, m in enumerate(self.merges)}
+        h = hashlib.sha256(json.dumps(self.merges).encode()).hexdigest()[:12]
+        self.key = f"bpe:{self.vocab_size}:{h}"
+        # expansion table for decode: id -> byte string
+        self._bytes: dict[int, bytes] = {i: bytes([i]) for i in range(256)}
+        for i, (a, b) in enumerate(self.merges):
+            self._bytes[BYTE_VOCAB + i] = self._bytes[a] + self._bytes[b]
+
+    @classmethod
+    def train(cls, texts, vocab_size: int = 512) -> "BpeTokenizer":
+        """Greedy pair merges until ``vocab_size`` ids exist (or no pair
+        repeats). Ties break on the lexicographically smallest pair so
+        retraining on the same corpus is bit-identical."""
+        if vocab_size < BYTE_VOCAB:
+            raise ValueError(f"vocab_size {vocab_size} < byte floor {BYTE_VOCAB}")
+        seqs = [list(t.encode("utf-8")) for t in texts if t]
+        merges: list[tuple[int, int]] = []
+        while BYTE_VOCAB + len(merges) < vocab_size:
+            counts: collections.Counter = collections.Counter()
+            for s in seqs:
+                counts.update(zip(s, s[1:]))
+            if not counts:
+                break
+            best_n = max(counts.values())
+            if best_n < 2:
+                break
+            pair = min(p for p, n in counts.items() if n == best_n)
+            new_id = BYTE_VOCAB + len(merges)
+            merges.append(pair)
+            seqs = [_apply_merge(s, pair, new_id) for s in seqs]
+        return cls(merges)
+
+    def encode(self, text: str) -> list[int]:
+        ids = list(text.encode("utf-8"))
+        for rank, pair in enumerate(self.merges):
+            if len(ids) < 2:
+                break
+            ids = _apply_merge(ids, pair, BYTE_VOCAB + rank)
+        return ids
+
+    def decode(self, ids) -> str:
+        out = b"".join(self._bytes.get(i, b"") for i in ids if i != EOS_ID)
+        return out.decode("utf-8", errors="replace")
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"format": "bpe-lite-v1", "merges": self.merges}, f)
+
+    @classmethod
+    def load(cls, path: str) -> "BpeTokenizer":
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("format") != "bpe-lite-v1":
+            raise ValueError(f"{path}: not a bpe-lite-v1 vocab file")
+        return cls([tuple(m) for m in d["merges"]])
+
+
+def _apply_merge(ids: list[int], pair: tuple[int, int], new_id: int) -> list[int]:
+    out, i, n = [], 0, len(ids)
+    a, b = pair
+    while i < n:
+        if i + 1 < n and ids[i] == a and ids[i + 1] == b:
+            out.append(new_id)
+            i += 2
+        else:
+            out.append(ids[i])
+            i += 1
+    return out
+
+
+def get_tokenizer(spec: str = "byte"):
+    """``"byte"`` or ``"bpe:<vocab.json>"`` (a trained BpeTokenizer file)."""
+    if spec == "byte":
+        return ByteTokenizer()
+    if spec.startswith("bpe:"):
+        return BpeTokenizer.load(spec[len("bpe:"):])
+    raise ValueError(f"unknown tokenizer spec {spec!r} (byte | bpe:<path>)")

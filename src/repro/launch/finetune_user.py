@@ -5,8 +5,9 @@
 
 The on-device personalization loop (ROADMAP open item 2): load a
 plan-bearing checkpoint, FREEZE it, train only the per-site rank-K_a
-delta pair on that tenant's stream (``SyntheticLM.for_tenant`` — the
-tenant id skews the topic mixture, so there is a real shift to learn),
+delta pair on that tenant's stream (``--data`` via data/registry.py:
+``for_tenant`` skews the synthetic topic mixture, or filters a text
+corpus to the tenant's sub-corpus — a real shift to learn either way),
 and register the result — a few hundred KB, not a model copy — in the
 content-addressed store ``launch/serve --adapters`` hot-swaps from.
 
@@ -18,7 +19,7 @@ from __future__ import annotations
 import argparse
 
 from repro import api
-from repro.data.synthetic import SyntheticLM
+from repro.data.registry import make_dataset
 from repro.tenancy import (AdapterStore, eval_ce, finetune_adapters,
                            merge_adapters)
 
@@ -40,6 +41,10 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data", default="synthetic",
+                    help="tenant stream via data/registry.py: 'synthetic' "
+                         "(topic-skewed SyntheticLM) or 'text:<shard glob>' "
+                         "(the tenant's filtered sub-corpus)")
     ap.add_argument("--quant", default="", choices=["", "int8"],
                     help="pack the STORED adapter int8 (training stays f32; "
                          "serve loads it dequantized)")
@@ -53,9 +58,16 @@ def main():
         raise SystemExit(f"checkpoint at {args.ckpt} carries no plan")
     aplan = plan.with_adapter(args.rank_frac)
     cfg = plan.model
-    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
-                       global_batch=args.batch,
-                       seed=args.seed).for_tenant(args.tenant)
+    # one construction path for every dataset kind; for_tenant is the
+    # per-user seam on both (topic skew / per-tenant corpus filter)
+    data = make_dataset(args.data, cfg, batch=args.batch, seq=args.seq,
+                        seed=args.seed).for_tenant(args.tenant)
+    dvocab = getattr(data, "vocab_size", 0)
+    if dvocab and dvocab > cfg.vocab_size:
+        raise SystemExit(
+            f"--data {args.data}: tokenizer vocab {dvocab} exceeds the "
+            f"checkpointed model's vocab {cfg.vocab_size} — fine-tune from "
+            "a base trained on this corpus (launch/train --data)")
 
     adapters, metrics = finetune_adapters(
         params, aplan, data, steps=args.steps, seed=args.seed,

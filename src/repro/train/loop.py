@@ -1,7 +1,17 @@
 """Fault-tolerant training loop: checkpoint/restart, async saves, step
-timing, straggler hooks, measured memory telemetry. The data pipeline is a
-pure function of step, so restart = restore state + continue at state.step
-(no reader state).
+timing, straggler hooks, measured memory telemetry.
+
+Two data contracts:
+
+* a plain ``batch_fn(step) -> batch`` — a pure function of step
+  (``data/synthetic.py``), so restart = restore state + continue at
+  ``state.step`` with no reader state;
+* a ``DataIterator`` (``data/pipeline.py``) — a stateful streaming reader
+  (sharded text files, shuffle buffer, background host->device prefetch)
+  whose explicit reader-state pytree is saved NEXT TO the train state in
+  every checkpoint (``CheckpointManager`` ``extra={"reader": ...}``) and
+  restored on resume, so restart-from-checkpoint replays the exact token
+  stream the uninterrupted run would have seen.
 """
 from __future__ import annotations
 
@@ -16,19 +26,33 @@ from repro.distributed.fault import RestartPolicy, StepTimer
 from repro.train.step import TrainState
 from repro.utils.memprof import LiveWatermark
 
+READER_EXTRA = "reader"   # manifest extras key for pipeline reader state
 
-def train_loop(state: TrainState, step_fn, batch_fn: Callable[[int], dict],
-               tcfg: TrainConfig, *, log_every: int = 10,
-               ckpt: CheckpointManager | None = None,
+
+def _is_iterator(data) -> bool:
+    return hasattr(data, "next_batch") and hasattr(data, "state")
+
+
+def train_loop(state: TrainState, step_fn, data, tcfg: TrainConfig, *,
+               log_every: int = 10, ckpt: CheckpointManager | None = None,
                max_steps: int | None = None, memprof: bool = False,
                batch_sharding=None,
                log_fn=print) -> tuple[TrainState, list[dict]]:
     """Runs up to ``max_steps or tcfg.steps``; resumes from the latest
     checkpoint if ``ckpt`` has one. Returns (final_state, metrics_history).
 
+    ``data`` is either ``batch_fn(step) -> batch`` or a ``DataIterator``
+    (has ``next_batch``/``state``/``restore``). With an iterator, the
+    reader state rides in every checkpoint and is restored on resume; the
+    iterator is expected to place batches on device itself (pass the mesh
+    sharding at iterator construction), and its measured input telemetry
+    (``stats()``: tokens/s, prefetch stall fraction) joins the logged
+    metrics.
+
     ``batch_sharding`` (a NamedSharding from train.step.dp_batch_sharding)
     places each host batch across the DP mesh before the step — required
-    when ``step_fn`` came from make_train_step(..., mesh=...).
+    when ``step_fn`` came from make_train_step(..., mesh=...) and ``data``
+    is a plain batch_fn.
 
     ``memprof`` adds MEASURED memory columns to every logged step: live
     jax-array bytes at the step boundary and the watermark across the run
@@ -36,11 +60,22 @@ def train_loop(state: TrainState, step_fn, batch_fn: Callable[[int], dict],
     on backends that report one (tier 3; absent on CPU). Sampling is
     host-side between steps — it never perturbs the jitted hot path.
     """
+    streaming = _is_iterator(data)
     if ckpt is not None:
         restored_step, restored = ckpt.restore_latest(state)
         if restored is not None:
             state = restored
             log_fn(f"[train] resumed from checkpoint step {restored_step}")
+            if streaming:
+                reader = ckpt.restore_extra(restored_step, READER_EXTRA)
+                if reader is not None:
+                    data.restore(reader)
+                    log_fn("[train] reader state restored: token stream "
+                           "resumes exactly where the checkpoint left off")
+                else:
+                    log_fn("[train] WARNING: checkpoint carries no reader "
+                           "state — the resumed stream restarts from the "
+                           "head of the corpus, not from the save point")
 
     jit_step = jax.jit(step_fn, donate_argnums=0)
     total = max_steps or tcfg.steps
@@ -50,9 +85,12 @@ def train_loop(state: TrainState, step_fn, batch_fn: Callable[[int], dict],
     start = int(state.step)
     for step in range(start, total):
         timer.start()
-        batch = batch_fn(step)
-        if batch_sharding is not None:
-            batch = jax.device_put(batch, batch_sharding)
+        if streaming:
+            batch = data.next_batch(step)   # prefetched + pre-placed
+        else:
+            batch = data(step)
+            if batch_sharding is not None:
+                batch = jax.device_put(batch, batch_sharding)
         state, metrics = jit_step(state, batch)
         if watermark is not None:
             jax.block_until_ready(metrics)
@@ -63,6 +101,10 @@ def train_loop(state: TrainState, step_fn, batch_fn: Callable[[int], dict],
             m["sec"] = timer.stop()
             if watermark is not None:
                 m.update(watermark.metrics())
+            if streaming and hasattr(data, "stats"):
+                s = data.stats()
+                m["input_tok_s"] = s["tok_s"]
+                m["input_stall_frac"] = s["stall_frac"]
             history.append(m)
             log_fn(f"[train] step {step}: " +
                    " ".join(f"{k}={v:.4g}" for k, v in m.items() if k != "step"))
@@ -70,7 +112,15 @@ def train_loop(state: TrainState, step_fn, batch_fn: Callable[[int], dict],
             timer.stop()
         if ckpt is not None and tcfg.checkpoint_every > 0 and \
                 (step + 1) % tcfg.checkpoint_every == 0:
-            ckpt.save_async(step + 1, state)
+            ckpt.save_async(step + 1, state, extra=_reader_extra(data))
     if ckpt is not None:
-        ckpt.save(total, state)
+        ckpt.save(total, state, extra=_reader_extra(data))
     return state, history
+
+
+def _reader_extra(data) -> dict | None:
+    """The reader-state side tree for a checkpoint (None for batch_fn
+    data). ``DeviceIterator.state()`` is the state as of the last CONSUMED
+    batch, so a restore resumes at exactly the next training step's batch
+    even though the prefetcher has run ahead."""
+    return {READER_EXTRA: data.state()} if _is_iterator(data) else None

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from jax.sharding import PartitionSpec as P
 
 import repro.configs as configs
@@ -62,3 +63,16 @@ def test_host_shard_partitions_batch():
     parts = [host_shard(b, i, 4) for i in range(4)]
     got = np.concatenate([np.asarray(p["patches"]) for p in parts])
     np.testing.assert_array_equal(got, np.asarray(b["patches"]))
+
+
+def test_host_shard_rejects_indivisible_batch():
+    # a 7-row batch over 2 hosts must FAIL LOUDLY, not silently drop the
+    # remainder row on every host (rows 6.. would never be trained on)
+    data = SyntheticVision(n_classes=4, n_patches=8, patch_dim=6,
+                           global_batch=7, seed=0)
+    b = data.batch(0)
+    with pytest.raises(ValueError, match="not divisible"):
+        host_shard(b, 0, 2)
+    # the message carries enough to debug: the offending shape and count
+    with pytest.raises(ValueError, match=r"7.*process_count=2"):
+        host_shard(b, 1, 2)
